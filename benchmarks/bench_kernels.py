@@ -1,0 +1,54 @@
+"""Decode throughput per encoding (§3: "V2 encodings are also efficient").
+
+Measured: vectorized host decoders (the CPU-measured analogue of the
+VPU-shaped kernels).  The Pallas interpret path is correctness-only and
+not timed (Python interpreter per grid step is not representative).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.encodings import (Encoding, decode_page,
+                                  encode_chunk_with)
+from repro.core.schema import Field, PhysicalType
+
+N = 2_000_000
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    cases = {
+        "plain_f32": (rng.normal(size=N).astype(np.float32),
+                      Encoding.PLAIN, PhysicalType.FLOAT),
+        "delta_sorted_i64": (np.cumsum(rng.integers(0, 9, N)).astype(
+            np.int64), Encoding.DELTA_BINARY_PACKED, PhysicalType.INT64),
+        "dict_lowcard_i32": (rng.integers(0, 11, N).astype(np.int32),
+                             Encoding.RLE_DICTIONARY, PhysicalType.INT32),
+        "rle_runs_i32": (np.repeat(np.arange(N // 1000, dtype=np.int32),
+                                   1000), Encoding.RLE,
+                         PhysicalType.INT32),
+        "bss_f32": (rng.normal(size=N).astype(np.float32),
+                    Encoding.BYTE_STREAM_SPLIT, PhysicalType.FLOAT),
+    }
+    for name, (vals, enc, pt) in cases.items():
+        field = Field("c", pt)
+        ce = encode_chunk_with(enc, vals, field, [(0, N)])
+        page = ce.pages[0]
+        dict_vals = None
+        if ce.dict_page is not None:
+            from repro.core.encodings import decode_plain_page
+            dict_vals = decode_plain_page(ce.dict_page.payload,
+                                          ce.dict_page.n_values, field,
+                                          ce.dict_page.extra)
+
+        def dec():
+            decode_page(enc, page.payload, page.n_values, field,
+                        page.extra, dict_vals)
+
+        s = timeit(dec, repeats=3)
+        logical = vals.nbytes
+        emit(f"kernel_host_{name}", s * 1e6,
+             f"decode_GBps={logical/s/1e9:.2f};"
+             f"encoded_ratio={logical/len(page.payload):.2f}")

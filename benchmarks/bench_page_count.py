@@ -1,0 +1,85 @@
+"""Fig. 2(a): storage-bus bandwidth vs page count (one simulated SSD).
+
+The decode stage parallelizes across pages — on the TPU target, grid step
+= page (Insight 1).  Per-page decode costs are **measured** on this host;
+the page-parallel decoder is **modeled** as an LPT schedule onto a
+128-lane grid (labeled): one page per chunk serializes the whole chunk,
+~100+ pages let the grid work, beyond that the (modeled) lane is the
+bottleneck and the curve flattens — the paper's shape.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, ensure_tpch
+from repro.core.config import CPU_DEFAULT, EncodingPolicy, FileConfig
+from repro.core.encodings import Encoding, decode_page, decode_plain_page
+from repro.core.query import Q6_COLUMNS
+from repro.core.reader import TabFileReader
+from repro.core.rewriter import rewrite_file
+from repro.core.storage import SimulatedStorage
+
+PAGE_COUNTS = (1, 4, 16, 64, 100, 256)
+GRID_LANES = 128
+
+
+def _page_decode_times(reader) -> list:
+    """Measured serial decode time of every page."""
+    times = []
+    for rg in reader.meta.row_groups:
+        for name in Q6_COLUMNS:
+            chunk = rg.column(name)
+            field = reader.meta.schema.field(name)
+            raw = reader.read_chunk_bytes(chunk)
+            dict_payload, pages = reader.chunk_pages(chunk, raw)
+            dictionary = None
+            if dict_payload is not None:
+                dp = chunk.dict_page
+                dictionary = decode_plain_page(dict_payload, dp.n_values,
+                                               field, dp.extra)
+            enc = Encoding(chunk.encoding)
+            for pm, payload in pages:
+                t0 = time.perf_counter()
+                decode_page(enc, payload, pm.n_values, field, pm.extra,
+                            dictionary)
+                times.append(time.perf_counter() - t0)
+    return times
+
+
+def _lpt(times: list, lanes: int) -> float:
+    load = np.zeros(lanes)
+    for t in sorted(times, reverse=True):
+        i = int(np.argmin(load))
+        load[i] += t
+    return float(load.max()) if times else 0.0
+
+
+def run() -> None:
+    base = ensure_tpch(CPU_DEFAULT.replace(rows_per_rg=1_000_000),
+                       "fig2a_base")
+    for pages in PAGE_COUNTS:
+        cfg = FileConfig(rows_per_rg=1_000_000,
+                         target_pages_per_chunk=pages,
+                         encodings=EncodingPolicy.V1_ONLY)
+        path = base["lineitem_path"] + f".p{pages}"
+        rewrite_file(base["lineitem_path"], path, cfg,
+                     columns=list(Q6_COLUMNS))
+        reader = TabFileReader(path)
+        stored = sum(rg.column(c).stored_bytes
+                     for rg in reader.meta.row_groups for c in Q6_COLUMNS)
+        page_times = min((_page_decode_times(reader) for _ in range(3)),
+                         key=sum)
+        decode_s = _lpt(page_times, GRID_LANES)
+        sim = SimulatedStorage(path, n_lanes=1)
+        io_s = sum(sim.batch_seconds(
+            [rg.column(c).byte_range[1] for c in Q6_COLUMNS])
+            for rg in reader.meta.row_groups)
+        pipeline_s = max(io_s, decode_s)
+        bw = stored / pipeline_s
+        emit(f"fig2a_pages_{pages}", pipeline_s * 1e6,
+             f"storage_bus_GBps={bw/1e9:.3f};"
+             f"grid_decode_s={decode_s:.5f};io_sim_s={io_s:.5f};"
+             f"n_pages={len(page_times)}")

@@ -1,0 +1,89 @@
+"""Fig. 5: query-level validation — Q6 and Q12 runtimes across file
+configurations, blocking vs overlapped reader, against a CPU-baseline
+engine and the theoretical storage lower bound."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, ensure_tpch
+from repro.core.config import (ACCELERATOR_OPTIMIZED, CPU_DEFAULT,
+                               EncodingPolicy, FileConfig)
+from repro.core.query import (Q12_LINEITEM_COLUMNS, Q12_ORDERS_COLUMNS,
+                              Q6_COLUMNS, q6, q6_reference, q12)
+from repro.core.reader import TabFileReader
+from repro.core.rewriter import rewrite_file
+from repro.core.scan import open_scanner
+from repro.core.storage import SimulatedStorage
+
+CONFIGS = {
+    "baseline": CPU_DEFAULT,
+    "pages": CPU_DEFAULT.replace(target_pages_per_chunk=100),
+    "rg_size": FileConfig(rows_per_rg=1_000_000,
+                          target_pages_per_chunk=100,
+                          encodings=EncodingPolicy.V1_ONLY),
+    "optimized": ACCELERATOR_OPTIMIZED.replace(rows_per_rg=1_000_000),
+}
+
+
+def _cpu_baseline_q6(path: str) -> float:
+    """A CPU-engine stand-in: blocking full read + numpy compute."""
+    t0 = time.perf_counter()
+    rd = TabFileReader(path)
+    tbl = rd.read_table(columns=list(Q6_COLUMNS))
+    q6_reference({c: np.asarray(tbl[c]) for c in Q6_COLUMNS})
+    return time.perf_counter() - t0
+
+
+def run() -> None:
+    base = ensure_tpch(CPU_DEFAULT, "fig5_base")
+    obase = base["orders_path"]
+    # warm the jitted query consumers so compile time never lands in the
+    # first measured configuration
+    warm = open_scanner(base["lineitem_path"], columns=list(Q6_COLUMNS),
+                        decode_backend="host")
+    q6(warm, overlapped=False, prune=False)
+    warm_l = open_scanner(base["lineitem_path"],
+                          columns=Q12_LINEITEM_COLUMNS,
+                          decode_backend="host")
+    warm_o = open_scanner(base["orders_path"],
+                          columns=Q12_ORDERS_COLUMNS,
+                          decode_backend="host")
+    q12(warm_l, warm_o, overlapped=False)
+    for name, cfg in CONFIGS.items():
+        lpath = base["lineitem_path"] + f".q_{name}"
+        rewrite_file(base["lineitem_path"], lpath, cfg)
+        opath = obase + f".q_{name}"
+        rewrite_file(obase, opath, cfg)
+        meta = TabFileReader(lpath).meta
+        # theoretical lower bound: stored bytes / 1-lane bandwidth
+        sim = SimulatedStorage(lpath, n_lanes=1)
+        q6_cols_bytes = sum(rg.column(c).stored_bytes
+                            for rg in meta.row_groups for c in Q6_COLUMNS)
+        bound = q6_cols_bytes / sim.lane_bandwidth
+
+        for mode in ("blocking", "overlapped"):
+            sc = open_scanner(lpath, columns=list(Q6_COLUMNS),
+                              backend="sim", n_lanes=1,
+                              decode_backend="host")
+            rev, rep = q6(sc, overlapped=(mode == "overlapped"),
+                          prune=False)
+            emit(f"fig5_q6_{name}_{mode}", rep.modeled_wall * 1e6,
+                 f"lower_bound_us={bound*1e6:.0f};"
+                 f"x_over_bound={rep.modeled_wall/bound:.2f}")
+
+        lsc = open_scanner(lpath, columns=Q12_LINEITEM_COLUMNS,
+                           backend="sim", n_lanes=1, decode_backend="host")
+        osc = open_scanner(opath, columns=Q12_ORDERS_COLUMNS,
+                           backend="sim", n_lanes=1, decode_backend="host")
+        _, brep, prep = q12(lsc, osc, overlapped=True)
+        emit(f"fig5_q12_{name}_overlapped",
+             (brep.modeled_wall + prep.modeled_wall) * 1e6,
+             f"build_us={brep.modeled_wall*1e6:.0f};"
+             f"probe_us={prep.modeled_wall*1e6:.0f}")
+
+    cpu_s = _cpu_baseline_q6(base["lineitem_path"] + ".q_optimized")
+    emit("fig5_q6_cpu_engine_baseline", cpu_s * 1e6,
+         "blocking full-read numpy engine on optimized file (measured)")

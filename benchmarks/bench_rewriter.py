@@ -1,0 +1,26 @@
+"""§5 overheads: rewriter throughput and thread scaling.
+
+The paper reports minutes for 100 GB with a multithreaded Rust rewriter
+and 10-20% extra write time for the closest proprietary tool; we report
+logical MB/s on this host and the thread-scaling curve.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, ensure_tpch
+from repro.core.config import ACCELERATOR_OPTIMIZED, CPU_DEFAULT
+from repro.core.rewriter import rewrite_file
+
+
+def run() -> None:
+    base = ensure_tpch(CPU_DEFAULT.replace(rows_per_rg=500_000),
+                       "rw_base")
+    for threads in (1, 2, 4, 8):
+        rep = rewrite_file(base["lineitem_path"],
+                           base["lineitem_path"] + f".rw{threads}",
+                           ACCELERATOR_OPTIMIZED.replace(
+                               rows_per_rg=1_000_000),
+                           threads=threads)
+        emit(f"rewriter_threads_{threads}", rep.seconds * 1e6,
+             f"logical_MBps={rep.rewrite_bandwidth/1e6:.1f};"
+             f"size_ratio={rep.size_ratio:.3f}")

@@ -1,0 +1,46 @@
+"""Fig. 2(b): storage-bus bandwidth vs rows-per-row-group (one SSD).
+
+Small RGs produce ~100 KB column chunks whose per-request latency starves
+the accelerator DMA path (Insight 2); million-row RGs reach MiB-scale
+transfers and saturate the lane.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import BENCH_SF, emit, ensure_tpch
+from repro.core.config import CPU_DEFAULT, EncodingPolicy, FileConfig
+from repro.core.query import Q6_COLUMNS
+from repro.core.reader import TabFileReader
+from repro.core.rewriter import rewrite_file
+from repro.core.storage import SimulatedStorage
+
+RG_SIZES = (12_288, 61_440, 122_880, 500_000, 1_000_000, 4_000_000)
+
+
+def run() -> None:
+    base = ensure_tpch(CPU_DEFAULT.replace(rows_per_rg=1_000_000),
+                       "fig2b_base")
+    n_rows = TabFileReader(base["lineitem_path"]).meta.num_rows
+    for rg in RG_SIZES:
+        if rg > n_rows * 4:
+            continue
+        cfg = FileConfig(rows_per_rg=rg, target_pages_per_chunk=100,
+                         encodings=EncodingPolicy.V1_ONLY)
+        path = base["lineitem_path"] + f".rg{rg}"
+        rewrite_file(base["lineitem_path"], path, cfg,
+                     columns=list(Q6_COLUMNS))
+        reader = TabFileReader(path)
+        sim = SimulatedStorage(path, n_lanes=1)
+        stored = 0
+        io_s = 0.0
+        chunk_sizes = []
+        for rgm in reader.meta.row_groups:
+            sizes = [rgm.column(c).byte_range[1] for c in Q6_COLUMNS]
+            chunk_sizes += sizes
+            stored += sum(rgm.column(c).stored_bytes for c in Q6_COLUMNS)
+            io_s += sim.batch_seconds(sizes)
+        bw = stored / io_s
+        emit(f"fig2b_rg_{rg}", io_s * 1e6,
+             f"storage_bus_GBps={bw/1e9:.3f};"
+             f"mean_chunk_KB={sum(chunk_sizes)/len(chunk_sizes)/1e3:.0f};"
+             f"n_rgs={len(reader.meta.row_groups)}")

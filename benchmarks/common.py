@@ -1,0 +1,60 @@
+"""Shared benchmark infrastructure.
+
+Dataset scale: BENCH_SF (default 0.05 ≈ 300k lineitem rows).  Storage-lane
+numbers come from the calibrated simulator (labeled ``sim``); decode and
+rewrite times are measured on this host (labeled ``measured``).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+BENCH_SF = float(os.environ.get("BENCH_SF", "0.05"))
+DATA_DIR = os.environ.get("BENCH_DATA", "/tmp/repro_bench")
+RESULTS_DIR = os.environ.get("BENCH_RESULTS", "results/benchmarks")
+
+_ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    _ROWS.append(row)
+    print(row, flush=True)
+
+
+def flush_csv(filename: str) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, filename), "w") as f:
+        f.write("name,us_per_call,derived\n")
+        for r in _ROWS:
+            f.write(r + "\n")
+    _ROWS.clear()
+
+
+def ensure_tpch(config, tag: str, sf: float = None) -> Dict:
+    """Write (or reuse) a TPC-H pair under the given file config."""
+    from repro.data import tpch
+    sf = BENCH_SF if sf is None else sf
+    d = os.path.join(DATA_DIR, f"tpch_{tag}_sf{sf}")
+    lpath = os.path.join(d, "lineitem.tab")
+    if os.path.exists(lpath):
+        return {"lineitem_path": lpath,
+                "orders_path": os.path.join(d, "orders.tab")}
+    metas = tpch.write_tpch(d, sf=sf, config=config, seed=1234,
+                            include_strings=False, threads=4)
+    return metas
+
+
+def timeit(fn: Callable, repeats: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))

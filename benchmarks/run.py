@@ -1,0 +1,36 @@
+# One module per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+import sys
+import traceback
+
+from benchmarks.common import flush_csv
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    suites = [
+        ("bench_page_count", "fig2a"),      # Fig 2(a): page-count sweep
+        ("bench_rg_size", "fig2b"),         # Fig 2(b): RG-size sweep
+        ("bench_encoding", "fig3"),         # Fig 3: FLEX + SSD scaling
+        ("bench_compression", "fig3c"),     # Fig 3: Insight-4 deltas
+        ("bench_queries", "fig5"),          # Fig 5: Q6/Q12 query level
+        ("bench_rewriter", "sec5"),         # §5: rewriter overhead
+        ("bench_kernels", "kernels"),       # §3: per-encoding decode bw
+        ("roofline", "roofline"),           # §Roofline from dry-run JSONs
+    ]
+    failures = []
+    for mod_name, tag in suites:
+        try:
+            mod = __import__(f"benchmarks.{mod_name}",
+                             fromlist=["run"])
+            mod.run()
+            flush_csv(f"{tag}.csv")
+        except Exception:
+            failures.append(mod_name)
+            traceback.print_exc()
+    if failures:
+        print(f"FAILED suites: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

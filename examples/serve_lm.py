@@ -1,0 +1,52 @@
+"""Batched serving demo: length-bucketed scheduler, prefill + greedy
+decode against per-layer KV caches.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch mixtral-8x22b
+    (reduced smoke config of the chosen arch; all non-encoder archs work)
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.models.model import Model
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-8b")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(model, params, max_batch=args.batch, max_seq=256)
+
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(args.requests):
+        plen = int(rng.choice([16, 16, 32, 48]))   # mixed-length buckets
+        reqs.append(Request(
+            uid=i, prompt=rng.integers(0, cfg.vocab_size,
+                                       plen).astype(np.int32),
+            max_new_tokens=args.max_new))
+    t0 = time.perf_counter()
+    done = engine.generate(reqs)
+    wall = time.perf_counter() - t0
+    rep = engine.throughput_report(done)
+    print(f"arch={args.arch} (reduced): served {rep['n_requests']} "
+          f"requests / {rep['new_tokens']} new tokens in {wall:.2f}s "
+          f"-> {rep['decode_tokens_per_s']:.1f} tok/s decode")
+    for uid in sorted(done)[:3]:
+        print(f"  req {uid}: {done[uid].tokens[:12].tolist()} ...")
+
+
+if __name__ == "__main__":
+    main()

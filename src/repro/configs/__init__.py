@@ -1,0 +1,7 @@
+from repro.configs.base import (ARCHS, ArchSpec, concrete_inputs, get_arch,
+                                input_specs, list_archs, smoke_config)
+from repro.configs.shapes import SHAPES, Shape, applicable_shapes, skip_reason
+
+__all__ = ["ARCHS", "ArchSpec", "concrete_inputs", "get_arch",
+           "input_specs", "list_archs", "smoke_config", "SHAPES", "Shape",
+           "applicable_shapes", "skip_reason"]

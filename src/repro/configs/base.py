@@ -1,0 +1,148 @@
+"""Architecture registry: full configs, reduced smoke configs, input specs."""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.shapes import SHAPES, Shape
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    config: ModelConfig
+    long_context_ok: bool          # sub-quadratic path exists for 500k
+    zero: bool = False             # FSDP params+optimizer over data axis
+    grad_accum: int = 1            # microbatch accumulation for train_4k
+    notes: str = ""
+    source: str = ""               # provenance tag from the brief
+
+    @property
+    def name(self) -> str:
+        return self.config.name
+
+
+_ARCH_MODULES = {
+    "minitron-8b": "minitron_8b",
+    "granite-3-8b": "granite_3_8b",
+    "gemma2-2b": "gemma2_2b",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "internvl2-76b": "internvl2_76b",
+    "hubert-xlarge": "hubert_xlarge",
+    "mamba2-2.7b": "mamba2_2p7b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "zamba2-7b": "zamba2_7b",
+}
+
+ARCHS = tuple(_ARCH_MODULES)
+
+
+def get_arch(name: str) -> ArchSpec:
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; one of {ARCHS}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[name]}")
+    return mod.ARCH
+
+
+def smoke_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[name]}")
+    return mod.smoke()
+
+
+def list_archs():
+    return [get_arch(n) for n in ARCHS]
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins — no allocation; dry-run contract)
+# ---------------------------------------------------------------------------
+
+def input_specs(arch: ArchSpec, shape_name: str,
+                batch_override: Optional[int] = None) -> Dict:
+    """Returns the abstract inputs for the given cell.
+
+    train:   {"tokens","labels"} (+frontend extras)
+    prefill: {"tokens"} (+frontend extras)
+    decode:  {"token" (B,1), "pos" ()} — caches are built separately
+    """
+    cfg = arch.config
+    sh: Shape = SHAPES[shape_name]
+    b = batch_override if batch_override is not None else sh.global_batch
+    s = sh.seq_len
+    i32 = jnp.int32
+    cdt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[
+        cfg.compute_dtype]
+
+    def tok(shape):
+        return jax.ShapeDtypeStruct(shape, i32)
+
+    if sh.kind == "decode":
+        return {"token": tok((b, 1)), "pos": jax.ShapeDtypeStruct((), i32)}
+    if cfg.frontend == "audio":
+        specs = {"frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), cdt),
+                 "labels": tok((b, s)),
+                 "mask": jax.ShapeDtypeStruct((b, s), jnp.bool_)}
+        if sh.kind == "prefill":
+            specs.pop("labels")
+            specs.pop("mask")
+        return specs
+    if cfg.frontend == "vision":
+        n_img = cfg.n_frontend_tokens
+        s_text = s - n_img
+        specs = {"tokens": tok((b, s_text)),
+                 "img_embeds": jax.ShapeDtypeStruct((b, n_img, cfg.d_model),
+                                                    cdt)}
+        if sh.kind == "train":
+            specs["labels"] = tok((b, s_text))
+        return specs
+    specs = {"tokens": tok((b, s))}
+    if sh.kind == "train":
+        specs["labels"] = tok((b, s))
+    return specs
+
+
+def concrete_inputs(arch: ArchSpec, shape_name: str, batch: int,
+                    seq_len: Optional[int] = None, seed: int = 0) -> Dict:
+    """Small concrete batches for smoke tests (reduced configs only)."""
+    cfg = arch.config
+    sh = SHAPES[shape_name]
+    rng = np.random.default_rng(seed)
+    s = seq_len if seq_len is not None else sh.seq_len
+    v = cfg.vocab_size
+
+    if sh.kind == "decode":
+        return {"token": jnp.asarray(rng.integers(0, v, (batch, 1)),
+                                     jnp.int32),
+                "pos": jnp.asarray(0, jnp.int32)}
+    if cfg.frontend == "audio":
+        out = {"frames": jnp.asarray(
+            rng.normal(size=(batch, s, cfg.d_model)), jnp.float32)}
+        if sh.kind == "train":
+            out["labels"] = jnp.asarray(rng.integers(0, v, (batch, s)),
+                                        jnp.int32)
+            out["mask"] = jnp.asarray(rng.random((batch, s)) < 0.3)
+        return out
+    if cfg.frontend == "vision":
+        n_img = cfg.n_frontend_tokens
+        st = s - n_img
+        out = {"tokens": jnp.asarray(rng.integers(0, v, (batch, st)),
+                                     jnp.int32),
+               "img_embeds": jnp.asarray(
+                   rng.normal(size=(batch, n_img, cfg.d_model)),
+                   jnp.float32)}
+        if sh.kind == "train":
+            out["labels"] = jnp.asarray(rng.integers(0, v, (batch, st)),
+                                        jnp.int32)
+        return out
+    out = {"tokens": jnp.asarray(rng.integers(0, v, (batch, s)), jnp.int32)}
+    if sh.kind == "train":
+        out["labels"] = jnp.asarray(rng.integers(0, v, (batch, s)),
+                                    jnp.int32)
+    return out

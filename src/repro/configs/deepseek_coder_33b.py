@@ -1,0 +1,28 @@
+"""DeepSeek-Coder-33B — llama-arch dense [arXiv:2401.14196; hf].
+
+62L d_model=7168 56H (GQA kv=8) d_ff=19200 vocab=32256.
+"""
+
+from repro.configs.base import ArchSpec
+from repro.models.config import ModelConfig
+
+ARCH = ArchSpec(
+    config=ModelConfig(
+        name="deepseek-coder-33b", family="dense",
+        n_layers=62, d_model=7168, n_heads=56, n_kv_heads=8,
+        d_ff=19200, vocab_size=32_256,
+        block_pattern=("full",), act="silu",
+    ),
+    long_context_ok=False,
+    zero=True,
+    grad_accum=8,
+    source="arXiv:2401.14196; hf",
+)
+
+
+def smoke() -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(
+        ARCH.config, n_layers=2, d_model=128, n_heads=8, n_kv_heads=2,
+        d_ff=192, vocab_size=503, param_dtype="float32",
+        compute_dtype="float32", loss_chunk=64)

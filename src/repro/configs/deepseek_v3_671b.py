@@ -1,0 +1,41 @@
+"""DeepSeek-V3 671B — MLA + fine-grained MoE + MTP [arXiv:2412.19437; hf].
+
+61L d_model=7168 128H, MLA (q_lora 1536, kv_lora 512, nope 128, rope 64,
+v 128); MoE: 3 leading dense layers (d_ff 18432), then 1 shared + 256
+routed experts (d_expert 2048) top-8; vocab 129280; MTP head (1 extra
+block).  GQA kv=128 in the brief ⇒ MHA head count under MLA.
+"""
+
+from repro.configs.base import ArchSpec
+from repro.models.config import MLAConfig, ModelConfig, MoEConfig
+
+ARCH = ArchSpec(
+    config=ModelConfig(
+        name="deepseek-v3-671b", family="moe",
+        n_layers=61, d_model=7168, n_heads=128, n_kv_heads=128, d_head=192,
+        d_ff=2048, vocab_size=129_280,
+        block_pattern=("full",), act="silu",
+        mla=MLAConfig(q_lora_rank=1536, kv_lora_rank=512,
+                      qk_nope_dim=128, qk_rope_dim=64, v_head_dim=128),
+        moe=MoEConfig(n_experts=256, top_k=8, d_expert=2048, n_shared=1,
+                      first_dense=3, dense_d_ff=18432,
+                      capacity_factor=1.25),
+        mtp=True,
+    ),
+    long_context_ok=False,   # MLA attends over the full (compressed) cache
+    zero=True,
+    grad_accum=8,
+    source="arXiv:2412.19437; hf",
+)
+
+
+def smoke() -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(
+        ARCH.config, n_layers=2, d_model=128, n_heads=4, n_kv_heads=4,
+        d_head=48, vocab_size=512, d_ff=64,
+        mla=MLAConfig(q_lora_rank=32, kv_lora_rank=16, qk_nope_dim=32,
+                      qk_rope_dim=16, v_head_dim=32),
+        moe=MoEConfig(n_experts=4, top_k=2, d_expert=64, n_shared=1,
+                      first_dense=1, dense_d_ff=256),
+        param_dtype="float32", compute_dtype="float32", loss_chunk=64)

@@ -1,0 +1,32 @@
+"""Gemma2-2B — local+global alternating attention, logit softcaps
+[arXiv:2408.00118; hf].
+
+26L d_model=2304 8H (GQA kv=4) d_ff=9216 vocab=256000; window 4096;
+attn softcap 50, final softcap 30; GeGLU; sandwich norms; scaled embeds.
+"""
+
+from repro.configs.base import ArchSpec
+from repro.models.config import ModelConfig
+
+ARCH = ArchSpec(
+    config=ModelConfig(
+        name="gemma2-2b", family="dense",
+        n_layers=26, d_model=2304, n_heads=8, n_kv_heads=4, d_head=256,
+        d_ff=9216, vocab_size=256_000,
+        block_pattern=("window", "full"), window=4096,
+        attn_softcap=50.0, final_softcap=30.0,
+        act="gelu", use_post_norm=True, embed_scale=True,
+    ),
+    long_context_ok=False,   # alternating layers include *global* attention
+    zero=True,               # 256k vocab embedding
+    grad_accum=2,
+    source="arXiv:2408.00118; hf",
+)
+
+
+def smoke() -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(
+        ARCH.config, n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+        d_head=32, d_ff=256, vocab_size=512, window=16,
+        param_dtype="float32", compute_dtype="float32", loss_chunk=64)

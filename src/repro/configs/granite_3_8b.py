@@ -1,0 +1,28 @@
+"""Granite-3 8B — GQA dense [hf:ibm-granite/granite-3.0-2b-base; hf].
+
+40L d_model=4096 32H (GQA kv=8) d_ff=12800 vocab=49155.
+"""
+
+from repro.configs.base import ArchSpec
+from repro.models.config import ModelConfig
+
+ARCH = ArchSpec(
+    config=ModelConfig(
+        name="granite-3-8b", family="dense",
+        n_layers=40, d_model=4096, n_heads=32, n_kv_heads=8,
+        d_ff=12800, vocab_size=49_155,
+        block_pattern=("full",), act="silu",
+    ),
+    long_context_ok=False,
+    zero=True,
+    grad_accum=4,
+    source="hf:ibm-granite/granite-3.0-2b-base",
+)
+
+
+def smoke() -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(
+        ARCH.config, n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+        d_ff=192, vocab_size=499, param_dtype="float32",
+        compute_dtype="float32", loss_chunk=64)

@@ -1,0 +1,33 @@
+"""HuBERT-XLarge — encoder-only audio transformer [arXiv:2106.07447;
+unverified].
+
+48L d_model=1280 16H (MHA kv=16) d_ff=5120 vocab=504 (cluster units).
+Encoder-only: bidirectional attention, masked-unit-prediction loss, no
+decode step (decode shapes skipped).  The conv feature extractor is a STUB:
+input_specs() provides precomputed frame embeddings (B, S, d_model).
+"""
+
+from repro.configs.base import ArchSpec
+from repro.models.config import ModelConfig
+
+ARCH = ArchSpec(
+    config=ModelConfig(
+        name="hubert-xlarge", family="audio",
+        n_layers=48, d_model=1280, n_heads=16, n_kv_heads=16,
+        d_ff=5120, vocab_size=504,
+        block_pattern=("full",), act="gelu",
+        encoder_only=True, frontend="audio",
+    ),
+    long_context_ok=False,
+    zero=False,
+    grad_accum=1,
+    source="arXiv:2106.07447; unverified",
+)
+
+
+def smoke() -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(
+        ARCH.config, n_layers=2, d_model=128, n_heads=4, n_kv_heads=4,
+        d_ff=256, vocab_size=97, param_dtype="float32",
+        compute_dtype="float32", loss_chunk=64)

@@ -1,0 +1,33 @@
+"""InternVL2-76B — InternViT + (Llama3-70B-class) LLM backbone
+[arXiv:2404.16821; unverified].
+
+Backbone only per the brief: 80L d_model=8192 64H (GQA kv=8) d_ff=28672
+vocab=128256.  The InternViT frontend is a STUB: input_specs() provides
+precomputed patch embeddings (n_frontend_tokens per sample) that the model
+prepends to the text embedding stream.
+"""
+
+from repro.configs.base import ArchSpec
+from repro.models.config import ModelConfig
+
+ARCH = ArchSpec(
+    config=ModelConfig(
+        name="internvl2-76b", family="vlm",
+        n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8,
+        d_ff=28672, vocab_size=128_256,
+        block_pattern=("full",), act="silu",
+        frontend="vision", n_frontend_tokens=256,
+    ),
+    long_context_ok=False,
+    zero=True,
+    grad_accum=8,
+    source="arXiv:2404.16821; unverified",
+)
+
+
+def smoke() -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(
+        ARCH.config, n_layers=2, d_model=128, n_heads=8, n_kv_heads=2,
+        d_ff=256, vocab_size=512, n_frontend_tokens=8,
+        param_dtype="float32", compute_dtype="float32", loss_chunk=64)

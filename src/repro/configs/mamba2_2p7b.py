@@ -1,0 +1,33 @@
+"""Mamba2-2.7B — SSD (state-space duality), attention-free
+[arXiv:2405.21060; unverified].
+
+64L d_model=2560 d_ff=0 vocab=50280, ssm_state=128, headdim=64, expand=2.
+All shapes including long_500k (O(1) state decode).
+"""
+
+from repro.configs.base import ArchSpec
+from repro.models.config import ModelConfig, SSMConfig
+
+ARCH = ArchSpec(
+    config=ModelConfig(
+        name="mamba2-2.7b", family="ssm",
+        n_layers=64, d_model=2560, n_heads=0, n_kv_heads=0,
+        d_ff=0, vocab_size=50_280,
+        block_pattern=("ssm",),
+        ssm=SSMConfig(d_state=128, expand=2, head_dim=64, d_conv=4,
+                      chunk=256),
+    ),
+    long_context_ok=True,
+    zero=False,
+    grad_accum=2,
+    source="arXiv:2405.21060; unverified",
+)
+
+
+def smoke() -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(
+        ARCH.config, n_layers=2, d_model=128, vocab_size=512,
+        ssm=SSMConfig(d_state=16, expand=2, head_dim=32, d_conv=4,
+                      chunk=32),
+        param_dtype="float32", compute_dtype="float32", loss_chunk=64)

@@ -1,0 +1,28 @@
+"""Minitron-8B — pruned Nemotron [arXiv:2407.14679; hf].
+
+32L d_model=4096 32H (GQA kv=8) d_ff=16384 vocab=256000.
+"""
+
+from repro.configs.base import ArchSpec
+from repro.models.config import ModelConfig
+
+ARCH = ArchSpec(
+    config=ModelConfig(
+        name="minitron-8b", family="dense",
+        n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+        d_ff=16384, vocab_size=256_000,
+        block_pattern=("full",), act="silu",
+    ),
+    long_context_ok=False,   # full attention — long_500k skipped
+    zero=True,               # 256k vocab + 8B params: shard over data too
+    grad_accum=4,
+    source="arXiv:2407.14679; hf",
+)
+
+
+def smoke() -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(
+        ARCH.config, n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+        d_ff=256, vocab_size=512, param_dtype="float32",
+        compute_dtype="float32", loss_chunk=64)

@@ -1,0 +1,34 @@
+"""Mixtral-8x22B — 8-expert top-2 MoE with sliding-window attention
+[arXiv:2401.04088; hf].
+
+56L d_model=6144 48H (GQA kv=8) d_ff(expert)=16384 vocab=32768; SWA per
+the brief ⇒ window 4096 on every layer, which bounds the KV cache and
+makes long_500k runnable.
+"""
+
+from repro.configs.base import ArchSpec
+from repro.models.config import ModelConfig, MoEConfig
+
+ARCH = ArchSpec(
+    config=ModelConfig(
+        name="mixtral-8x22b", family="moe",
+        n_layers=56, d_model=6144, n_heads=48, n_kv_heads=8,
+        d_ff=16384, vocab_size=32_768,
+        block_pattern=("window",), window=4096, act="silu",
+        moe=MoEConfig(n_experts=8, top_k=2, d_expert=16384,
+                      capacity_factor=1.25),
+    ),
+    long_context_ok=True,    # SWA: cache bounded at window
+    zero=True,
+    grad_accum=8,
+    source="arXiv:2401.04088; hf",
+)
+
+
+def smoke() -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(
+        ARCH.config, n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+        d_ff=128, vocab_size=512, window=16,
+        moe=MoEConfig(n_experts=4, top_k=2, d_expert=128),
+        param_dtype="float32", compute_dtype="float32", loss_chunk=64)

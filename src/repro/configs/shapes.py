@@ -1,0 +1,44 @@
+"""The assigned input shapes and the applicability rules (DESIGN.md §4)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                 # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": Shape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def applicable_shapes(arch) -> List[str]:
+    """Skip rules: encoder-only archs have no decode step; long_500k needs
+    sub-quadratic attention (SSM / window-only / hybrid-with-window)."""
+    names = []
+    for name, sh in SHAPES.items():
+        if sh.kind == "decode" and arch.config.encoder_only:
+            continue
+        if name == "long_500k" and not arch.long_context_ok:
+            continue
+        names.append(name)
+    return names
+
+
+def skip_reason(arch, shape_name: str) -> str:
+    sh = SHAPES[shape_name]
+    if sh.kind == "decode" and arch.config.encoder_only:
+        return "encoder-only: no decode step"
+    if shape_name == "long_500k" and not arch.long_context_ok:
+        return "full attention is quadratic at 500k; no sub-quadratic path"
+    return ""

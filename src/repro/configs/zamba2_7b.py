@@ -1,0 +1,37 @@
+"""Zamba2-7B — Mamba2 backbone + weight-shared attention blocks
+[arXiv:2411.15242; unverified].
+
+81 Mamba2 layers (d_model=3584, ssm_state=64) with one weight-shared
+full-attention+MLP block (32H MHA, d_ff 14336) applied every 6 SSM layers.
+long_500k runs: SSM state is O(1) and the shared-attn cache is windowed at
+serve time (DESIGN.md §4).
+"""
+
+from repro.configs.base import ArchSpec
+from repro.models.config import ModelConfig, SSMConfig
+
+ARCH = ArchSpec(
+    config=ModelConfig(
+        name="zamba2-7b", family="hybrid",
+        n_layers=81, d_model=3584, n_heads=32, n_kv_heads=32,
+        d_ff=14336, vocab_size=32_000,
+        block_pattern=("ssm",), shared_attn_every=6,
+        ssm=SSMConfig(d_state=64, expand=2, head_dim=64, d_conv=4,
+                      chunk=256),
+        act="gelu",
+    ),
+    long_context_ok=True,
+    zero=True,
+    grad_accum=4,
+    source="arXiv:2411.15242; unverified",
+)
+
+
+def smoke() -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(
+        ARCH.config, n_layers=5, d_model=128, n_heads=4, n_kv_heads=4,
+        d_ff=256, vocab_size=512, shared_attn_every=2,
+        ssm=SSMConfig(d_state=16, expand=2, head_dim=32, d_conv=4,
+                      chunk=32),
+        param_dtype="float32", compute_dtype="float32", loss_chunk=64)

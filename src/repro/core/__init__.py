@@ -1,0 +1,18 @@
+# The paper's primary contribution: a Parquet-faithful columnar file layer
+# ("TabFile") whose configuration knobs are the paper's four insights, plus
+# the rewriter, device scan engine, overlap executor and query operators.
+
+from repro.core.config import (ACCELERATOR_OPTIMIZED, CPU_DEFAULT,
+                               TPU_CASCADE, CompressionSpec, EncodingPolicy,
+                               FileConfig, intermediate_configs)
+from repro.core.schema import Field, LogicalType, PhysicalType, Schema
+from repro.core.table import StringColumn, Table
+from repro.core.writer import TabFileWriter, write_table
+from repro.core.reader import TabFileReader, read_footer
+
+__all__ = [
+    "ACCELERATOR_OPTIMIZED", "CPU_DEFAULT", "TPU_CASCADE", "CompressionSpec",
+    "EncodingPolicy", "FileConfig", "intermediate_configs", "Field",
+    "LogicalType", "PhysicalType", "Schema", "StringColumn", "Table",
+    "TabFileWriter", "write_table", "TabFileReader", "read_footer",
+]

@@ -1,0 +1,120 @@
+"""File-configuration autotuner — the rewriter's practical front end.
+
+The paper gives four insights but leaves "which exact numbers for *my*
+table and *my* storage" to the operator.  The autotuner closes that loop:
+it takes a sample of the table (or the source file), sweeps the knob
+grid under the calibrated storage model + measured encode sizes, and
+recommends a FileConfig:
+
+  rows_per_rg      smallest RG whose mean compressed chunk reaches the
+                   target I/O efficiency (Insight 2: e(s) ≥ eff_target)
+  pages_per_chunk  decode-grid width (Insight 1: ≥ grid_lanes, capped so
+                   pages stay ≥ min_page_rows)
+  encodings        FLEX if it saves ≥ flex_min_gain vs V1 (Insight 3)
+  compression      codec kept only where the measured chunk-level gain
+                   clears the Insight-4 threshold
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.compression import compress
+from repro.core.config import (CompressionSpec, EncodingPolicy, FileConfig)
+from repro.core.encodings import select_chunk_encoding
+from repro.core.table import Table
+
+
+@dataclasses.dataclass
+class TuneReport:
+    config: FileConfig
+    per_column: Dict[str, dict]
+    sampled_rows: int
+    est_compressed_bytes_per_row: float
+    notes: list
+
+
+def _encoded_size_per_row(table: Table, policy: EncodingPolicy,
+                          config: FileConfig) -> Dict[str, float]:
+    out = {}
+    n = table.num_rows
+    cfg = config.replace(encodings=policy)
+    for field in table.schema.fields:
+        ce = select_chunk_encoding(table[field.name], field, [(0, n)], cfg)
+        out[field.name] = ce.total_bytes / max(1, n)
+    return out
+
+
+def autotune(table: Table, *, lane_bandwidth: float = 7e9,
+             latency: float = 20e-6, grid_lanes: int = 128,
+             eff_target: float = 0.9, flex_min_gain: float = 0.02,
+             codec: str = "gzip", comp_threshold: float = 0.10,
+             sample_rows: int = 100_000) -> TuneReport:
+    """Recommend a FileConfig for ``table`` (a sample is representative)."""
+    notes = []
+    sample = table.slice(0, min(sample_rows, table.num_rows))
+    n = sample.num_rows
+
+    # Insight 3: FLEX vs V1 on the sample
+    base = FileConfig()
+    v1 = _encoded_size_per_row(sample, EncodingPolicy.V1_ONLY, base)
+    flex = _encoded_size_per_row(sample, EncodingPolicy.FLEX, base)
+    v1_row = sum(v1.values())
+    flex_row = sum(flex.values())
+    gain = 1.0 - flex_row / max(v1_row, 1e-9)
+    use_flex = gain >= flex_min_gain
+    notes.append(f"FLEX saves {gain*100:.1f}% vs V1 on the sample "
+                 f"({'keep FLEX' if use_flex else 'V1 suffices'})")
+    per_row = flex if use_flex else v1
+
+    # Insight 4: measure actual codec gain on the encoded sample chunks
+    comp_gains = {}
+    cfg_enc = base.replace(encodings=EncodingPolicy.FLEX if use_flex
+                           else EncodingPolicy.V1_ONLY)
+    for field in sample.schema.fields:
+        ce = select_chunk_encoding(sample[field.name], field, [(0, n)],
+                                   cfg_enc)
+        raw = b"".join(p.payload for p in ce.pages)
+        comp_gains[field.name] = 1.0 - len(compress(raw, codec)) \
+            / max(1, len(raw))
+    kept = [c for c, g in comp_gains.items() if g >= comp_threshold]
+    notes.append(f"codec {codec} clears the {comp_threshold:.0%} gate on "
+                 f"{len(kept)}/{len(comp_gains)} columns")
+
+    # Insight 2: rows_per_rg from the per-column byte rate — the smallest
+    # (power-of-two-ish) RG whose *smallest* column chunk hits eff_target
+    min_col_rate = min(per_row.values())        # bytes/row, worst column
+    target_chunk = eff_target / (1 - eff_target) * latency * lane_bandwidth
+    rows_needed = int(target_chunk / max(min_col_rate, 1e-9))
+    rows_per_rg = 1 << int(np.ceil(np.log2(max(rows_needed, 4096))))
+    rows_per_rg = min(rows_per_rg, 16_000_000)
+    notes.append(
+        f"worst column {min_col_rate:.2f} B/row → chunks reach "
+        f"{eff_target:.0%} lane efficiency at {rows_needed:,} rows; "
+        f"recommending rows_per_rg={rows_per_rg:,}")
+
+    # Insight 1: pages ≥ grid lanes, but keep ≥ 1024 rows per page
+    pages = min(grid_lanes, max(1, rows_per_rg // 1024))
+    notes.append(f"pages_per_chunk={pages} (grid {grid_lanes} lanes, "
+                 f"≥1024 rows/page)")
+
+    config = FileConfig(
+        rows_per_rg=rows_per_rg,
+        target_pages_per_chunk=pages,
+        encodings=EncodingPolicy.FLEX if use_flex
+        else EncodingPolicy.V1_ONLY,
+        compression=CompressionSpec(codec=codec, min_gain=comp_threshold))
+    return TuneReport(
+        config=config,
+        per_column={c: {"bytes_per_row": per_row[c],
+                        "codec_gain": comp_gains[c]}
+                    for c in per_row},
+        sampled_rows=n,
+        est_compressed_bytes_per_row=float(
+            sum(per_row[c] * (1 - max(0.0, comp_gains[c])
+                              if comp_gains[c] >= comp_threshold else 1.0)
+                for c in per_row)),
+        notes=notes)

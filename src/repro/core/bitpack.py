@@ -1,0 +1,74 @@
+"""Bit-transposed packing (host reference implementation).
+
+Layout: values are packed in groups of 32.  A group with bit-width ``w``
+occupies ``w`` uint32 words; word ``k`` holds bit ``k`` of all 32 values
+(bit ``i`` of word ``k`` = bit ``k`` of value ``i``).
+
+This is the FastLanes-style interleaved ("bit-transposed") order rather than
+Parquet's sequential little-endian order: unpacking becomes ``w`` independent
+shift/mask/or steps over full vector lanes, which maps directly onto the TPU
+VPU (and is the layout the Pallas kernels consume).  The choice of bit order
+inside an encoding is writer-private in our container (DESIGN.md §8.3).
+
+Widths up to 64 are supported on the host path (int64 deltas); the device
+kernels consume widths ≤ 32.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+GROUP = 32  # values per packing group
+
+
+def bit_width(max_value: int) -> int:
+    """Minimum width to represent max_value (≥ 0); at least 1."""
+    if max_value < 0:
+        raise ValueError("bit_width of negative value")
+    return max(1, int(max_value).bit_length())
+
+
+def _as_groups(values: np.ndarray) -> np.ndarray:
+    n = values.shape[0]
+    n_groups = -(-n // GROUP)
+    padded = np.zeros(n_groups * GROUP, dtype=np.uint64)
+    padded[:n] = values.astype(np.uint64, copy=False)
+    return padded.reshape(n_groups, GROUP)
+
+
+def pack(values: np.ndarray, width: int) -> np.ndarray:
+    """Pack non-negative ints into bit-transposed uint32 words.
+
+    Returns an array of shape (n_groups * width,) — group-major, i.e. the
+    ``width`` words of group 0 first.
+    """
+    if width < 1 or width > 64:
+        raise ValueError(f"width {width} out of range")
+    groups = _as_groups(values)  # (G, 32) uint64
+    lane = np.arange(GROUP, dtype=np.uint64)
+    words = np.empty((groups.shape[0], width), dtype=np.uint32)
+    for k in range(width):
+        bits = (groups >> np.uint64(k)) & np.uint64(1)
+        words[:, k] = np.bitwise_or.reduce(
+            (bits << lane), axis=1).astype(np.uint32)
+    return words.reshape(-1)
+
+
+def unpack(words: np.ndarray, width: int, n: int,
+           out_dtype=np.uint64) -> np.ndarray:
+    """Inverse of :func:`pack`; returns the first ``n`` values."""
+    if width < 1 or width > 64:
+        raise ValueError(f"width {width} out of range")
+    words = np.ascontiguousarray(words, dtype=np.uint32)
+    n_groups = words.shape[0] // width
+    w = words.reshape(n_groups, width).astype(np.uint64)
+    lane = np.arange(GROUP, dtype=np.uint64)
+    vals = np.zeros((n_groups, GROUP), dtype=np.uint64)
+    for k in range(width):
+        vals |= ((w[:, k, None] >> lane) & np.uint64(1)) << np.uint64(k)
+    return vals.reshape(-1)[:n].astype(out_dtype)
+
+
+def packed_words(n_values: int, width: int) -> int:
+    """Number of uint32 words pack() produces."""
+    return (-(-n_values // GROUP)) * width

@@ -1,0 +1,149 @@
+"""Block codecs + the Insight-4 selective-compression gate.
+
+Codecs:
+  none     identity
+  gzip     zlib/DEFLATE — the paper's host-ecosystem codec.  LZ77
+           back-references are byte-serial and have no TPU analogue
+           (DESIGN.md §8.2), so gzip pages are decompressed on the host
+           before device upload — exactly the cost Insight 4 avoids paying
+           when the codec does not actually shrink the chunk.
+  cascade  TPU-native word-level codec (beyond-paper): uint32-word RLE with
+           bit-transposed packed run values/counts.  Fully vectorizable;
+           decoded on-device by kernels/cascade_decode.py.
+
+Cascade frame layout (all 4-byte aligned):
+  [0] n_words_orig  int32
+  [1] n_runs        int32
+  [2] value_width   int32
+  [3] count_width   int32
+  [4:4+vw]          packed run values (bit-transposed uint32 words)
+  [...]             packed run counts
+"""
+
+from __future__ import annotations
+
+import enum
+import zlib
+from typing import Tuple
+
+import numpy as np
+
+from repro.core import bitpack
+
+
+class Codec(enum.IntEnum):
+    NONE = 0
+    GZIP = 2      # matches parquet.thrift CompressionCodec.GZIP
+    CASCADE = 100  # TabFile extension
+
+
+def _codec_of(name: str) -> Codec:
+    return {"none": Codec.NONE, "gzip": Codec.GZIP,
+            "cascade": Codec.CASCADE}[name]
+
+
+def _name_of(codec: Codec) -> str:
+    return {Codec.NONE: "none", Codec.GZIP: "gzip",
+            Codec.CASCADE: "cascade"}[codec]
+
+
+# ---------------------------------------------------------------------------
+# cascade
+# ---------------------------------------------------------------------------
+
+def cascade_compress(data: bytes) -> bytes:
+    pad = (-len(data)) % 4
+    words = np.frombuffer(data + b"\x00" * pad, dtype=np.uint32)
+    n = words.shape[0]
+    if n == 0:
+        header = np.array([0, 0, 1, 1], dtype=np.int32)
+        return header.tobytes()
+    change = np.flatnonzero(words[1:] != words[:-1]) + 1
+    starts = np.concatenate([[0], change])
+    ends = np.concatenate([change, [n]])
+    run_vals = words[starts].astype(np.uint64)
+    run_counts = (ends - starts).astype(np.uint64)
+    vw = bitpack.bit_width(int(run_vals.max())) if run_vals.max() else 1
+    cw = bitpack.bit_width(int(run_counts.max()))
+    header = np.array([n, run_vals.shape[0], vw, cw], dtype=np.int32)
+    return (header.tobytes()
+            + bitpack.pack(run_vals, vw).tobytes()
+            + bitpack.pack(run_counts, cw).tobytes())
+
+
+def cascade_decompress(data: bytes, uncompressed_size: int) -> bytes:
+    header = np.frombuffer(data, dtype=np.int32, count=4)
+    n, n_runs, vw, cw = (int(x) for x in header)
+    if n == 0:
+        return b""
+    off = 16
+    nvw = bitpack.packed_words(n_runs, vw)
+    vals = bitpack.unpack(
+        np.frombuffer(data, dtype=np.uint32, count=nvw, offset=off), vw,
+        n_runs, out_dtype=np.uint64)
+    off += nvw * 4
+    ncw = bitpack.packed_words(n_runs, cw)
+    counts = bitpack.unpack(
+        np.frombuffer(data, dtype=np.uint32, count=ncw, offset=off), cw,
+        n_runs, out_dtype=np.uint64)
+    words = np.repeat(vals.astype(np.uint32), counts.astype(np.int64))
+    assert words.shape[0] == n
+    return words.tobytes()[:uncompressed_size]
+
+
+def cascade_manifest(data: bytes) -> dict:
+    """Header pass for device decode: packed words + widths + counts."""
+    header = np.frombuffer(data, dtype=np.int32, count=4)
+    n, n_runs, vw, cw = (int(x) for x in header)
+    off = 16
+    nvw = bitpack.packed_words(n_runs, vw)
+    val_words = np.frombuffer(data, dtype=np.uint32, count=nvw, offset=off)
+    off += nvw * 4
+    ncw = bitpack.packed_words(n_runs, cw)
+    cnt_words = np.frombuffer(data, dtype=np.uint32, count=ncw, offset=off)
+    return {"n_words": n, "n_runs": n_runs, "value_width": vw,
+            "count_width": cw, "value_words": val_words.copy(),
+            "count_words": cnt_words.copy()}
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+def compress(data: bytes, codec: str, level: int = 1) -> bytes:
+    c = _codec_of(codec)
+    if c == Codec.NONE:
+        return data
+    if c == Codec.GZIP:
+        return zlib.compress(data, level)
+    return cascade_compress(data)
+
+
+def decompress(data: bytes, codec: Codec, uncompressed_size: int) -> bytes:
+    if codec == Codec.NONE:
+        return data
+    if codec == Codec.GZIP:
+        out = zlib.decompress(data)
+        assert len(out) == uncompressed_size
+        return out
+    return cascade_decompress(data, uncompressed_size)
+
+
+def maybe_compress_chunk(page_payloads, codec: str, min_gain: float,
+                         level: int = 1) -> Tuple[Codec, list, int, int]:
+    """Insight 4: compress the chunk only if it actually pays.
+
+    Returns (codec_used, payloads, uncompressed_total, stored_total).
+    The decision is chunk-level (like Parquet's per-chunk codec) but each
+    page is compressed independently so pages stay individually decodable.
+    """
+    uncomp = [len(p) for p in page_payloads]
+    total_uncomp = sum(uncomp)
+    if _codec_of(codec) == Codec.NONE or total_uncomp == 0:
+        return Codec.NONE, list(page_payloads), total_uncomp, total_uncomp
+    comp = [compress(p, codec, level) for p in page_payloads]
+    total_comp = sum(len(p) for p in comp)
+    gain = 1.0 - total_comp / total_uncomp
+    if gain >= min_gain:
+        return _codec_of(codec), comp, total_uncomp, total_comp
+    return Codec.NONE, list(page_payloads), total_uncomp, total_uncomp

@@ -1,0 +1,170 @@
+"""TabFile footer metadata (Parquet FileMetaData analogue).
+
+File layout:
+  [8B magic "TABF0001"] [page payloads ...] [footer json utf-8]
+  [uint64 footer length] [8B magic]
+
+Page payloads are pure data (no inline page headers): per-page metadata
+lives in the footer, Parquet-ColumnIndex style, so chunks upload to the
+device as contiguous byte ranges.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import List, Optional
+
+from repro.core.compression import Codec
+from repro.core.encodings import Encoding
+from repro.core.schema import Schema
+
+MAGIC = b"TABF0001"
+
+
+@dataclasses.dataclass
+class PageMeta:
+    offset: int               # absolute file offset
+    stored_size: int          # bytes on disk (maybe compressed)
+    uncompressed_size: int    # encoded-but-uncompressed bytes
+    n_values: int
+    extra: dict
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(o: dict) -> "PageMeta":
+        return PageMeta(**o)
+
+
+@dataclasses.dataclass
+class ChunkMeta:
+    name: str
+    encoding: int             # Encoding enum value
+    codec: int                # Codec enum value
+    pages: List[PageMeta]
+    dict_page: Optional[PageMeta] = None
+    stats: Optional[dict] = None  # {"min":…, "max":…} for numerics
+
+    @property
+    def n_values(self) -> int:
+        return sum(p.n_values for p in self.pages)
+
+    @property
+    def stored_bytes(self) -> int:
+        n = sum(p.stored_size for p in self.pages)
+        if self.dict_page:
+            n += self.dict_page.stored_size
+        return n
+
+    @property
+    def uncompressed_bytes(self) -> int:
+        n = sum(p.uncompressed_size for p in self.pages)
+        if self.dict_page:
+            n += self.dict_page.uncompressed_size
+        return n
+
+    @property
+    def byte_range(self):
+        """(offset, size) covering dict page + all data pages."""
+        first = self.dict_page or self.pages[0]
+        last = self.pages[-1] if self.pages else first
+        return first.offset, last.offset + last.stored_size - first.offset
+
+    def to_json(self) -> dict:
+        return {
+            "name": self.name, "encoding": self.encoding, "codec": self.codec,
+            "pages": [p.to_json() for p in self.pages],
+            "dict_page": self.dict_page.to_json() if self.dict_page else None,
+            "stats": self.stats,
+        }
+
+    @staticmethod
+    def from_json(o: dict) -> "ChunkMeta":
+        return ChunkMeta(
+            name=o["name"], encoding=o["encoding"], codec=o["codec"],
+            pages=[PageMeta.from_json(p) for p in o["pages"]],
+            dict_page=(PageMeta.from_json(o["dict_page"])
+                       if o.get("dict_page") else None),
+            stats=o.get("stats"),
+        )
+
+
+@dataclasses.dataclass
+class RowGroupMeta:
+    n_rows: int
+    columns: List[ChunkMeta]
+
+    def column(self, name: str) -> ChunkMeta:
+        for c in self.columns:
+            if c.name == name:
+                return c
+        raise KeyError(name)
+
+    def to_json(self) -> dict:
+        return {"n_rows": self.n_rows,
+                "columns": [c.to_json() for c in self.columns]}
+
+    @staticmethod
+    def from_json(o: dict) -> "RowGroupMeta":
+        return RowGroupMeta(o["n_rows"],
+                            [ChunkMeta.from_json(c) for c in o["columns"]])
+
+
+@dataclasses.dataclass
+class FileMeta:
+    schema: Schema
+    num_rows: int
+    row_groups: List[RowGroupMeta]
+    logical_nbytes: int       # raw decoded size — effective-bw numerator
+    writer_config: dict       # provenance: the FileConfig that produced this
+
+    def to_json_bytes(self) -> bytes:
+        return json.dumps({
+            "schema": self.schema.to_json(),
+            "num_rows": self.num_rows,
+            "row_groups": [rg.to_json() for rg in self.row_groups],
+            "logical_nbytes": self.logical_nbytes,
+            "writer_config": self.writer_config,
+        }).encode("utf-8")
+
+    @staticmethod
+    def from_json_bytes(b: bytes) -> "FileMeta":
+        o = json.loads(b.decode("utf-8"))
+        return FileMeta(
+            schema=Schema.from_json(o["schema"]),
+            num_rows=o["num_rows"],
+            row_groups=[RowGroupMeta.from_json(rg) for rg in o["row_groups"]],
+            logical_nbytes=o["logical_nbytes"],
+            writer_config=o["writer_config"],
+        )
+
+    @property
+    def stored_bytes(self) -> int:
+        return sum(c.stored_bytes for rg in self.row_groups
+                   for c in rg.columns)
+
+    def describe(self) -> dict:
+        """Summary used by benchmarks/EXPERIMENTS.md."""
+        enc_hist: dict = {}
+        codec_hist: dict = {}
+        n_pages = 0
+        for rg in self.row_groups:
+            for c in rg.columns:
+                enc_hist[Encoding(c.encoding).name] = (
+                    enc_hist.get(Encoding(c.encoding).name, 0) + 1)
+                codec_hist[Codec(c.codec).name] = (
+                    codec_hist.get(Codec(c.codec).name, 0) + 1)
+                n_pages += len(c.pages)
+        return {
+            "num_rows": self.num_rows,
+            "n_row_groups": len(self.row_groups),
+            "n_pages": n_pages,
+            "stored_bytes": self.stored_bytes,
+            "logical_nbytes": self.logical_nbytes,
+            "compression_ratio": (self.logical_nbytes
+                                  / max(1, self.stored_bytes)),
+            "encodings": enc_hist,
+            "codecs": codec_hist,
+        }

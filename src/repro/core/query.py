@@ -1,0 +1,181 @@
+"""Query operators over scans: TPC-H Q6 (filter+agg) and Q12 (join).
+
+These are the paper's §4 query-level validation workloads.  Both consume
+row groups streamed by the overlap executor, so file-level configuration
+gains translate to query runtime exactly as in Fig. 5.
+
+Dates are int32 days since 1992-01-01 (DATE logical type).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.overlap import RunReport, run_blocking, run_overlapped
+from repro.core.scan import Scanner
+from repro.kernels.filter_agg import TILE, filter_agg_q6
+
+D_1994_01_01 = 731
+D_1995_01_01 = 1096
+
+Q6_COLUMNS = ["l_shipdate", "l_discount", "l_quantity", "l_extendedprice"]
+Q12_LINEITEM_COLUMNS = ["l_orderkey", "l_shipmode", "l_shipdate",
+                        "l_commitdate", "l_receiptdate"]
+Q12_ORDERS_COLUMNS = ["o_orderkey", "o_orderpriority"]
+
+
+def _dev(x):
+    return jnp.asarray(np.asarray(x))
+
+
+# ---------------------------------------------------------------------------
+# Q6 — SELECT sum(l_extendedprice*l_discount) WHERE shipdate in FY1994
+#       AND discount BETWEEN 0.05 AND 0.07 AND quantity < 24
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=())
+def _q6_jnp(ship, disc, qty, price):
+    mask = ((ship >= D_1994_01_01) & (ship < D_1995_01_01)
+            & (disc >= jnp.float32(0.05)) & (disc <= jnp.float32(0.07))
+            & (qty < jnp.float32(24.0)))
+    return jnp.sum(jnp.where(mask, price * disc, jnp.float32(0)))
+
+
+def q6_rg_stats_predicate(name: str, stats: dict) -> bool:
+    """Zone-map pruning: skip row groups whose shipdate range misses FY94."""
+    if name == "l_shipdate":
+        return stats["min"] < D_1995_01_01 and stats["max"] >= D_1994_01_01
+    return True
+
+
+def _q6_consume(use_kernel: bool):
+    def consume(acc, rg_index, cols):
+        ship = _dev(cols["l_shipdate"].array).astype(jnp.int32)
+        disc = _dev(cols["l_discount"].array).astype(jnp.float32)
+        qty = _dev(cols["l_quantity"].array).astype(jnp.float32)
+        price = _dev(cols["l_extendedprice"].array).astype(jnp.float32)
+        if use_kernel:
+            n = ship.shape[0]
+            pad = (-n) % TILE
+            if pad:
+                ship = jnp.pad(ship, (0, pad),
+                               constant_values=np.iinfo(np.int32).max)
+                disc = jnp.pad(disc, (0, pad))
+                qty = jnp.pad(qty, (0, pad))
+                price = jnp.pad(price, (0, pad))
+            part = filter_agg_q6(ship, qty, disc, price,
+                                 lo=D_1994_01_01, hi=D_1995_01_01,
+                                 dlo=0.05, dhi=0.07, qmax=24.0)
+        else:
+            part = _q6_jnp(ship, disc, qty, price)
+        part = float(part)
+        return part if acc is None else acc + part
+
+    return consume
+
+
+def q6(scanner: Scanner, overlapped: bool = True, use_kernel: bool = False,
+       prune: bool = True) -> Tuple[float, RunReport]:
+    runner = run_overlapped if overlapped else run_blocking
+    acc, report = runner(scanner, _q6_consume(use_kernel),
+                         predicate_stats=(q6_rg_stats_predicate
+                                          if prune else None))
+    return (acc or 0.0), report
+
+
+def q6_reference(tables: Dict[str, np.ndarray]) -> float:
+    """Numpy oracle over raw columns."""
+    ship, disc = tables["l_shipdate"], tables["l_discount"]
+    qty, price = tables["l_quantity"], tables["l_extendedprice"]
+    m = ((ship >= D_1994_01_01) & (ship < D_1995_01_01)
+         & (disc >= np.float32(0.05)) & (disc <= np.float32(0.07))
+         & (qty < 24))
+    return float(np.sum(price[m].astype(np.float64)
+                        * disc[m].astype(np.float64)))
+
+
+# ---------------------------------------------------------------------------
+# Q12 — lineitem ⋈ orders on orderkey; counts per shipmode split by
+#        order priority (urgent/high vs other); FY1994 receipt dates
+# ---------------------------------------------------------------------------
+
+SHIPMODE_MAIL = 2
+SHIPMODE_SHIP = 4
+
+
+@jax.jit
+def _q12_probe(skeys, sprio, okey, mode, ship, commit, receipt):
+    mask = (((mode == SHIPMODE_MAIL) | (mode == SHIPMODE_SHIP))
+            & (commit < receipt) & (ship < commit)
+            & (receipt >= D_1994_01_01) & (receipt < D_1995_01_01))
+    pos = jnp.clip(jnp.searchsorted(skeys, okey), 0, skeys.shape[0] - 1)
+    hit = skeys[pos] == okey
+    prio = sprio[pos]
+    urgent = (prio <= 1) & hit & mask        # 1-URGENT / 2-HIGH
+    other = (prio > 1) & hit & mask
+    out = []
+    for m in (SHIPMODE_MAIL, SHIPMODE_SHIP):
+        sel = mode == m
+        out.append(jnp.sum((urgent & sel).astype(jnp.int32)))
+        out.append(jnp.sum((other & sel).astype(jnp.int32)))
+    return jnp.stack(out)
+
+
+def q12(lineitem_scanner: Scanner, orders_scanner: Scanner,
+        overlapped: bool = True
+        ) -> Tuple[Dict[str, int], RunReport, RunReport]:
+    # Build side: stream orders, then sort once on device.
+    def build_consume(acc, rg_index, cols):
+        k = _dev(cols["o_orderkey"].array).astype(jnp.int32)
+        p = _dev(cols["o_orderpriority"].array).astype(jnp.int32)
+        return (k, p) if acc is None else (jnp.concatenate([acc[0], k]),
+                                           jnp.concatenate([acc[1], p]))
+
+    runner = run_overlapped if overlapped else run_blocking
+    (keys, prio), build_report = runner(orders_scanner, build_consume)
+    order = jnp.argsort(keys)
+    skeys, sprio = keys[order], prio[order]
+
+    def probe_consume(acc, rg_index, cols):
+        part = _q12_probe(
+            skeys, sprio,
+            _dev(cols["l_orderkey"].array).astype(jnp.int32),
+            _dev(cols["l_shipmode"].array).astype(jnp.int32),
+            _dev(cols["l_shipdate"].array).astype(jnp.int32),
+            _dev(cols["l_commitdate"].array).astype(jnp.int32),
+            _dev(cols["l_receiptdate"].array).astype(jnp.int32))
+        return part if acc is None else acc + part
+
+    counts, probe_report = runner(lineitem_scanner, probe_consume)
+    counts = np.asarray(counts)
+    result = {
+        "MAIL_high": int(counts[0]), "MAIL_low": int(counts[1]),
+        "SHIP_high": int(counts[2]), "SHIP_low": int(counts[3]),
+    }
+    return result, build_report, probe_report
+
+
+def q12_reference(line: Dict[str, np.ndarray],
+                  orders: Dict[str, np.ndarray]) -> Dict[str, int]:
+    ok = orders["o_orderkey"].astype(np.int64)
+    op = orders["o_orderpriority"]
+    pr = dict(zip(ok.tolist(), op.tolist()))
+    mode = line["l_shipmode"]
+    mask = (np.isin(mode, [SHIPMODE_MAIL, SHIPMODE_SHIP])
+            & (line["l_commitdate"] < line["l_receiptdate"])
+            & (line["l_shipdate"] < line["l_commitdate"])
+            & (line["l_receiptdate"] >= D_1994_01_01)
+            & (line["l_receiptdate"] < D_1995_01_01))
+    out = {"MAIL_high": 0, "MAIL_low": 0, "SHIP_high": 0, "SHIP_low": 0}
+    names = {SHIPMODE_MAIL: "MAIL", SHIPMODE_SHIP: "SHIP"}
+    for i in np.flatnonzero(mask):
+        p = pr[int(line["l_orderkey"][i])]
+        key = names[int(mode[i])] + ("_high" if p <= 1 else "_low")
+        out[key] += 1
+    return out

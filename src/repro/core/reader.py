@@ -1,0 +1,144 @@
+"""TabFile reader: footer parse, scan planning, host decode path.
+
+The reader is storage-backend agnostic: all byte access goes through a
+``fetch(offset, size) -> bytes`` callable so the same code path serves real
+files and the simulated N-lane SSD backend (core/storage.py).
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.compression import Codec, decompress
+from repro.core.encodings import Encoding, decode_page
+from repro.core.metadata import MAGIC, ChunkMeta, FileMeta, RowGroupMeta
+from repro.core.schema import Field
+from repro.core.table import StringColumn, Table
+
+Fetch = Callable[[int, int], bytes]
+
+
+def read_footer(path: str) -> FileMeta:
+    with open(path, "rb") as f:
+        f.seek(0, 2)
+        size = f.tell()
+        f.seek(size - 16)
+        tail = f.read(16)
+        footer_len = struct.unpack("<Q", tail[:8])[0]
+        if tail[8:] != MAGIC:
+            raise ValueError(f"{path}: bad trailing magic")
+        f.seek(size - 16 - footer_len)
+        meta = FileMeta.from_json_bytes(f.read(footer_len))
+        f.seek(0)
+        if f.read(8) != MAGIC:
+            raise ValueError(f"{path}: bad leading magic")
+    return meta
+
+
+def file_fetcher(path: str) -> Fetch:
+    f = open(path, "rb")
+
+    def fetch(offset: int, size: int) -> bytes:
+        f.seek(offset)
+        return f.read(size)
+
+    return fetch
+
+
+class TabFileReader:
+    def __init__(self, path: str, fetch: Optional[Fetch] = None):
+        self.path = path
+        self.meta = read_footer(path)
+        self.fetch: Fetch = fetch if fetch is not None else file_fetcher(path)
+
+    # -- planning ----------------------------------------------------------
+
+    def plan_row_groups(self, predicate_stats=None,
+                        row_groups: Optional[Sequence[int]] = None
+                        ) -> List[int]:
+        """Row groups to scan; ``predicate_stats`` is an optional callable
+        (col_name -> stats dict -> bool keep) enabling zone-map skipping."""
+        idxs = list(range(len(self.meta.row_groups))) \
+            if row_groups is None else list(row_groups)
+        if predicate_stats is None:
+            return idxs
+        kept = []
+        for i in idxs:
+            rg = self.meta.row_groups[i]
+            keep = True
+            for chunk in rg.columns:
+                if chunk.stats is not None and not predicate_stats(
+                        chunk.name, chunk.stats):
+                    keep = False
+                    break
+            if keep:
+                kept.append(i)
+        return kept
+
+    # -- raw access (device scan path uses these) --------------------------
+
+    def chunk_meta(self, rg_index: int, column: str) -> ChunkMeta:
+        return self.meta.row_groups[rg_index].column(column)
+
+    def read_chunk_bytes(self, chunk: ChunkMeta) -> bytes:
+        off, size = chunk.byte_range
+        return self.fetch(off, size)
+
+    def chunk_pages(self, chunk: ChunkMeta, raw: Optional[bytes] = None):
+        """Yield (page_meta, decompressed_payload) for each data page;
+        first element of the returned tuple list is the dict payload."""
+        off0, _ = chunk.byte_range
+        if raw is None:
+            raw = self.read_chunk_bytes(chunk)
+        codec = Codec(chunk.codec)
+
+        def payload(pm):
+            data = raw[pm.offset - off0:pm.offset - off0 + pm.stored_size]
+            return decompress(data, codec, pm.uncompressed_size)
+
+        dict_payload = payload(chunk.dict_page) if chunk.dict_page else None
+        return dict_payload, [(pm, payload(pm)) for pm in chunk.pages]
+
+    # -- host decode path ---------------------------------------------------
+
+    def decode_chunk(self, chunk: ChunkMeta, field: Field,
+                     raw: Optional[bytes] = None):
+        dict_payload, pages = self.chunk_pages(chunk, raw)
+        encoding = Encoding(chunk.encoding)
+        dictionary = None
+        if dict_payload is not None:
+            from repro.core.encodings import decode_plain_page
+            dp = chunk.dict_page
+            dictionary = decode_plain_page(dict_payload, dp.n_values, field,
+                                           dp.extra)
+        parts = [decode_page(encoding, payload, pm.n_values, field,
+                             pm.extra, dictionary)
+                 for pm, payload in pages]
+        if isinstance(parts[0], StringColumn):
+            if len(parts) == 1:
+                return parts[0]
+            lens = np.concatenate([p.lengths() for p in parts])
+            offsets = np.zeros(lens.shape[0] + 1, dtype=np.int64)
+            np.cumsum(lens, out=offsets[1:])
+            return StringColumn(offsets,
+                                np.concatenate([p.payload for p in parts]))
+        return np.concatenate(parts)
+
+    def read_table(self, columns: Optional[List[str]] = None,
+                   row_groups: Optional[Sequence[int]] = None) -> Table:
+        names = columns if columns is not None else self.meta.schema.names
+        rgs = self.plan_row_groups(row_groups=row_groups)
+        per_rg: List[Table] = []
+        for i in rgs:
+            rg = self.meta.row_groups[i]
+            cols: Dict[str, object] = {}
+            for name in names:
+                field = self.meta.schema.field(name)
+                cols[name] = self.decode_chunk(rg.column(name), field)
+            from repro.core.schema import Schema
+            per_rg.append(Table(cols, Schema(
+                [self.meta.schema.field(n) for n in names])))
+        return per_rg[0] if len(per_rg) == 1 else Table.concat(per_rg)

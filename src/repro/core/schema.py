@@ -1,0 +1,111 @@
+"""Logical/physical schema for TabFile — Parquet-faithful type system."""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import List, Optional
+
+import numpy as np
+
+
+class PhysicalType(enum.IntEnum):
+    """Parquet physical types (enum values match parquet.thrift)."""
+
+    BOOLEAN = 0
+    INT32 = 1
+    INT64 = 2
+    FLOAT = 4
+    DOUBLE = 5
+    BYTE_ARRAY = 6
+
+
+class LogicalType(str, enum.Enum):
+    NONE = "none"          # raw physical
+    DATE = "date"          # INT32 days since epoch
+    DECIMAL = "decimal"    # INT64 scaled integer
+    STRING = "string"      # BYTE_ARRAY utf-8
+
+
+_NUMPY_OF_PHYSICAL = {
+    PhysicalType.BOOLEAN: np.dtype(np.bool_),
+    PhysicalType.INT32: np.dtype(np.int32),
+    PhysicalType.INT64: np.dtype(np.int64),
+    PhysicalType.FLOAT: np.dtype(np.float32),
+    PhysicalType.DOUBLE: np.dtype(np.float64),
+}
+
+_PHYSICAL_OF_NUMPY = {
+    np.dtype(np.bool_): PhysicalType.BOOLEAN,
+    np.dtype(np.int8): PhysicalType.INT32,
+    np.dtype(np.int16): PhysicalType.INT32,
+    np.dtype(np.int32): PhysicalType.INT32,
+    np.dtype(np.uint8): PhysicalType.INT32,
+    np.dtype(np.uint16): PhysicalType.INT32,
+    np.dtype(np.int64): PhysicalType.INT64,
+    np.dtype(np.float32): PhysicalType.FLOAT,
+    np.dtype(np.float64): PhysicalType.DOUBLE,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Field:
+    name: str
+    physical: PhysicalType
+    logical: LogicalType = LogicalType.NONE
+    decimal_scale: int = 0  # only for DECIMAL
+
+    @property
+    def numpy_dtype(self) -> Optional[np.dtype]:
+        return _NUMPY_OF_PHYSICAL.get(self.physical)
+
+    def to_json(self) -> dict:
+        return {
+            "name": self.name,
+            "physical": int(self.physical),
+            "logical": self.logical.value,
+            "decimal_scale": self.decimal_scale,
+        }
+
+    @staticmethod
+    def from_json(obj: dict) -> "Field":
+        return Field(
+            name=obj["name"],
+            physical=PhysicalType(obj["physical"]),
+            logical=LogicalType(obj["logical"]),
+            decimal_scale=obj.get("decimal_scale", 0),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class Schema:
+    fields: List[Field]
+
+    def __post_init__(self) -> None:
+        names = [f.name for f in self.fields]
+        if len(set(names)) != len(names):
+            raise ValueError("duplicate column names in schema")
+
+    def field(self, name: str) -> Field:
+        for f in self.fields:
+            if f.name == name:
+                return f
+        raise KeyError(name)
+
+    @property
+    def names(self) -> List[str]:
+        return [f.name for f in self.fields]
+
+    def to_json(self) -> list:
+        return [f.to_json() for f in self.fields]
+
+    @staticmethod
+    def from_json(obj: list) -> "Schema":
+        return Schema([Field.from_json(f) for f in obj])
+
+
+def physical_of_numpy(dtype: np.dtype) -> PhysicalType:
+    try:
+        return _PHYSICAL_OF_NUMPY[np.dtype(dtype)]
+    except KeyError:
+        raise TypeError(f"unsupported numpy dtype for TabFile: {dtype}")

@@ -1,0 +1,148 @@
+"""TabFile writer — applies the four insights at write time.
+
+Supports both one-shot writes (``write_table``) and streaming row-group
+writes (``begin`` / ``write_row_group`` / ``finish``), which the rewriter
+uses to re-shape arbitrarily large files at bounded memory.
+"""
+
+from __future__ import annotations
+
+import concurrent.futures as cf
+import struct
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.compression import maybe_compress_chunk
+from repro.core.config import FileConfig
+from repro.core.encodings import ChunkEncoding, select_chunk_encoding
+from repro.core.metadata import (MAGIC, ChunkMeta, FileMeta, PageMeta,
+                                 RowGroupMeta)
+from repro.core.schema import PhysicalType, Schema
+from repro.core.table import StringColumn, Table
+
+
+def _page_slices(n_rows: int, rows_per_page: int) -> List[Tuple[int, int]]:
+    return [(s, min(s + rows_per_page, n_rows))
+            for s in range(0, n_rows, rows_per_page)]
+
+
+def _chunk_stats(values, physical: PhysicalType) -> Optional[dict]:
+    if isinstance(values, StringColumn) or values.shape[0] == 0:
+        return None
+    if physical == PhysicalType.BOOLEAN:
+        return {"min": bool(values.min()), "max": bool(values.max())}
+    lo, hi = values.min(), values.max()
+    if physical in (PhysicalType.FLOAT, PhysicalType.DOUBLE):
+        return {"min": float(lo), "max": float(hi)}
+    return {"min": int(lo), "max": int(hi)}
+
+
+def _encode_one_chunk(args):
+    """Worker: encode + codec-gate one column chunk (thread-pool friendly —
+    numpy/zlib release the GIL on the heavy parts)."""
+    values, field, slices, config = args
+    ce: ChunkEncoding = select_chunk_encoding(values, field, slices, config)
+    payloads = [p.payload for p in ce.pages]
+    if ce.dict_page is not None:
+        payloads = [ce.dict_page.payload] + payloads
+    codec, stored, _, _ = maybe_compress_chunk(
+        payloads, config.compression.codec, config.compression.min_gain,
+        config.compression.level)
+    return ce, codec, stored, _chunk_stats(values, field.physical)
+
+
+class TabFileWriter:
+    def __init__(self, path: str, config: FileConfig, threads: int = 1):
+        self.path = path
+        self.config = config
+        self.threads = max(1, threads)
+        self._f = None
+        self._offset = 0
+        self._rg_metas: List[RowGroupMeta] = []
+        self._schema: Optional[Schema] = None
+        self._num_rows = 0
+        self._logical_nbytes = 0
+
+    # -- streaming API -------------------------------------------------------
+
+    def begin(self, schema: Schema) -> "TabFileWriter":
+        self._f = open(self.path, "wb")
+        self._f.write(MAGIC)
+        self._offset = len(MAGIC)
+        self._schema = schema
+        return self
+
+    def write_row_group(self, rg: Table) -> None:
+        """Write exactly one row group from ``rg`` (caller sizes it)."""
+        assert self._f is not None, "begin() first"
+        config = self.config
+        rows_per_page = config.rows_per_page(rg.num_rows)
+        slices = _page_slices(rg.num_rows, rows_per_page)
+        jobs = [(rg.columns[fld.name], fld, slices, config)
+                for fld in self._schema.fields]
+        if self.threads > 1 and len(jobs) > 1:
+            with cf.ThreadPoolExecutor(self.threads) as pool:
+                results = list(pool.map(_encode_one_chunk, jobs))
+        else:
+            results = [_encode_one_chunk(j) for j in jobs]
+        chunk_metas: List[ChunkMeta] = []
+        for fld, (ce, codec, stored, stats) in zip(self._schema.fields,
+                                                   results):
+            uncomp_pages = list(ce.pages)
+            if ce.dict_page is not None:
+                uncomp_pages = [ce.dict_page] + uncomp_pages
+            page_metas: List[PageMeta] = []
+            for enc_page, stored_payload in zip(uncomp_pages, stored):
+                self._f.write(stored_payload)
+                page_metas.append(PageMeta(
+                    offset=self._offset,
+                    stored_size=len(stored_payload),
+                    uncompressed_size=enc_page.nbytes,
+                    n_values=enc_page.n_values,
+                    extra=enc_page.extra))
+                self._offset += len(stored_payload)
+            dict_meta = None
+            if ce.dict_page is not None:
+                dict_meta, page_metas = page_metas[0], page_metas[1:]
+            chunk_metas.append(ChunkMeta(
+                name=fld.name, encoding=int(ce.encoding), codec=int(codec),
+                pages=page_metas, dict_page=dict_meta, stats=stats))
+        self._rg_metas.append(RowGroupMeta(rg.num_rows, chunk_metas))
+        self._num_rows += rg.num_rows
+        self._logical_nbytes += rg.nbytes
+
+    def finish(self) -> FileMeta:
+        assert self._f is not None
+        config = self.config
+        meta = FileMeta(
+            schema=self._schema, num_rows=self._num_rows,
+            row_groups=self._rg_metas, logical_nbytes=self._logical_nbytes,
+            writer_config={
+                "rows_per_rg": config.rows_per_rg,
+                "target_pages_per_chunk": config.target_pages_per_chunk,
+                "encodings": config.encodings.value,
+                "codec": config.compression.codec,
+                "min_gain": config.compression.min_gain,
+            })
+        footer = meta.to_json_bytes()
+        self._f.write(footer)
+        self._f.write(struct.pack("<Q", len(footer)))
+        self._f.write(MAGIC)
+        self._f.close()
+        self._f = None
+        return meta
+
+    # -- one-shot API ---------------------------------------------------------
+
+    def write(self, table: Table) -> FileMeta:
+        self.begin(table.schema)
+        for rg_start in range(0, table.num_rows, self.config.rows_per_rg):
+            self.write_row_group(
+                table.slice(rg_start, rg_start + self.config.rows_per_rg))
+        return self.finish()
+
+
+def write_table(table: Table, path: str, config: FileConfig,
+                threads: int = 1) -> FileMeta:
+    return TabFileWriter(path, config, threads).write(table)

@@ -1,0 +1,3 @@
+# Data substrate: synthetic TPC-H generator, token corpus, and the
+# checkpointable training loader that streams batches through the paper's
+# configured scan path.

@@ -1,0 +1,36 @@
+"""Pallas kernel: bit-transposed unpack (the primitive under DICT/DELTA).
+
+grid = (num_pages,) — one grid step unpacks one page (Insight 1).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import interpret_default, unpack_words_static
+
+
+def _kernel(words_ref, out_ref, *, width: int):
+    out_ref[0, :] = unpack_words_static(words_ref[0, :], width)
+
+
+@functools.partial(jax.jit, static_argnames=("width", "interpret"))
+def bitunpack_pages(words: jnp.ndarray, *, width: int,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """words: (n_pages, G*width) uint32 → (n_pages, G*32) uint32."""
+    if interpret is None:
+        interpret = interpret_default()
+    n_pages, n_words = words.shape
+    n_vals = (n_words // width) * 32
+    return pl.pallas_call(
+        functools.partial(_kernel, width=width),
+        grid=(n_pages,),
+        in_specs=[pl.BlockSpec((1, n_words), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, n_vals), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pages, n_vals), jnp.uint32),
+        interpret=interpret,
+    )(words)

@@ -1,0 +1,53 @@
+"""Pallas kernel: BYTE_STREAM_SPLIT float32 reassembly (V2).
+
+grid = (num_pages,).  A BSS page stores the 4 byte-planes of the float
+stream contiguously (each plane padded to a word boundary); the kernel
+re-interleaves them with word-level shifts and a bitcast — no byte-serial
+work, ideal for the VPU.  float64 pages use the host path (x32 JAX).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import interpret_default
+
+
+def _kernel(payload_ref, out_ref, *, stride_words: int, n_out: int):
+    slab = payload_ref[0, :]
+    j = jnp.arange(n_out, dtype=jnp.int32)
+    word_idx = j // 4
+    shift = ((j % 4) * 8).astype(jnp.uint32)
+
+    def plane(s):
+        w = jax.lax.dynamic_slice(slab, (s * stride_words,), (stride_words,))
+        return (w[jnp.clip(word_idx, 0, stride_words - 1)] >> shift) \
+            & jnp.uint32(0xFF)
+
+    out = (plane(0)
+           | (plane(1) << jnp.uint32(8))
+           | (plane(2) << jnp.uint32(16))
+           | (plane(3) << jnp.uint32(24)))
+    out_ref[0, :] = jax.lax.bitcast_convert_type(out, jnp.float32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("stride_words", "n_out", "interpret"))
+def bss_decode_pages(payload: jnp.ndarray, *, stride_words: int, n_out: int,
+                     interpret: bool | None = None) -> jnp.ndarray:
+    """payload: (n_pages, ≥4*stride_words) uint32 → (n_pages, n_out) f32."""
+    if interpret is None:
+        interpret = interpret_default()
+    n_pages, n_words = payload.shape
+    return pl.pallas_call(
+        functools.partial(_kernel, stride_words=stride_words, n_out=n_out),
+        grid=(n_pages,),
+        in_specs=[pl.BlockSpec((1, n_words), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, n_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pages, n_out), jnp.float32),
+        interpret=interpret,
+    )(payload)

@@ -1,0 +1,63 @@
+"""Pallas kernel: CASCADE codec decompression (TPU-native, beyond-paper).
+
+The cascade frame is word-level RLE with bit-transposed packed run values
+and counts (core/compression.py).  Decompression = two static-width unpacks
++ run expansion, i.e. exactly the vector primitives the VPU is good at —
+this is the TPU-idiomatic replacement for GPU Snappy kernels (DESIGN.md §2).
+
+grid = (num_pages, num_tiles), tiled like rle_decode.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import (expand_runs_tile, interpret_default,
+                                  unpack_words_static)
+
+TILE = 1024
+
+
+def _kernel(val_words_ref, cnt_words_ref, out_ref, *,
+            value_width: int, count_width: int, n_runs: int):
+    vals = unpack_words_static(val_words_ref[0, :], value_width)[:n_runs]
+    counts = unpack_words_static(cnt_words_ref[0, :], count_width)[:n_runs]
+    tile_start = pl.program_id(1) * TILE
+    out_ref[0, :] = expand_runs_tile(vals, counts.astype(jnp.int32),
+                                     tile_start, TILE)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "value_width", "count_width", "n_runs", "n_out", "interpret"))
+def cascade_decode_pages(val_words: jnp.ndarray, cnt_words: jnp.ndarray, *,
+                         value_width: int, count_width: int, n_runs: int,
+                         n_out: int, interpret: bool | None = None
+                         ) -> jnp.ndarray:
+    """val_words/cnt_words: (n_pages, Wv)/(n_pages, Wc) uint32.
+
+    n_runs: padded run count (common to the batch; padding runs count 0).
+    n_out: output words per page, multiple of TILE.
+    → (n_pages, n_out) uint32 — the decompressed page payload words.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    n_pages = val_words.shape[0]
+    assert n_out % TILE == 0
+    n_tiles = n_out // TILE
+    wv, wc = val_words.shape[1], cnt_words.shape[1]
+    return pl.pallas_call(
+        functools.partial(_kernel, value_width=value_width,
+                          count_width=count_width, n_runs=n_runs),
+        grid=(n_pages, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, wv), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, wc), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, TILE), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n_pages, n_out), jnp.uint32),
+        interpret=interpret,
+    )(val_words, cnt_words)

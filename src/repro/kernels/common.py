@@ -1,0 +1,86 @@
+"""Shared in-kernel helpers for the TabFile decode kernels.
+
+All decode kernels share two conventions (DESIGN.md §2):
+
+* **grid = (num_pages, …)** — the paper's Insight 1 made structural: each
+  grid step decodes one page, so the file's page count *is* the device
+  parallelism, exactly as cuDF maps pages to its kernel grid.
+* **bit-transposed packing** — a 32-value group with width ``w`` occupies
+  ``w`` uint32 words; word ``k`` holds bit ``k`` of all 32 values.  Unpacking
+  is ``w`` shift/mask/or steps over full vector lanes (VPU-shaped, no
+  byte-serial dependencies).
+
+``interpret_default()`` returns True off-TPU so every kernel runs through the
+Pallas interpreter on CPU (the container's validation mode).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+MB_GROUPS = 8          # packing groups per DELTA miniblock (256 values)
+MB_VALUES = 256
+BLOCK_VALUES = 1024
+MINIBLOCKS = 4
+LANES = 32             # values per packing group
+
+
+def interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def unpack_words_static(words: jnp.ndarray, width: int) -> jnp.ndarray:
+    """Unpack bit-transposed words with a *static* width.
+
+    words: (G * width,) uint32 → (G * 32,) uint32, group-major.
+    """
+    g = words.shape[0] // width
+    w = words.reshape(g, width)
+    lane = jnp.arange(LANES, dtype=jnp.uint32)
+    vals = jnp.zeros((g, LANES), jnp.uint32)
+    for k in range(width):
+        bit = (w[:, k:k + 1] >> lane[None, :]) & jnp.uint32(1)
+        vals = vals | (bit << jnp.uint32(k))
+    return vals.reshape(-1)
+
+
+def unpack_miniblock_dynamic(slab: jnp.ndarray, off, width) -> jnp.ndarray:
+    """Unpack one 256-value miniblock whose width is a *traced* scalar.
+
+    slab: (S,) uint32 page payload; ``off`` word offset of the miniblock;
+    ``width`` ∈ [1, 32].  Returns (256,) uint32 relative deltas.
+
+    The dynamic width is handled with a masked 32-step gather: value bit k of
+    group g lives at word ``off + g*width + k`` (k < width).  All shapes are
+    static; only indices are traced — this lowers to vectorized gathers.
+    """
+    g = jnp.arange(MB_GROUPS, dtype=jnp.int32)
+    k = jnp.arange(LANES, dtype=jnp.int32)
+    idx = off + g[:, None] * width + k[None, :]              # (8, 32)
+    idx = jnp.clip(idx, 0, slab.shape[0] - 1)
+    words = slab[idx]                                        # (8, 32) gather
+    lane = jnp.arange(LANES, dtype=jnp.uint32)
+    bits = (words[:, :, None] >> lane[None, None, :]) & jnp.uint32(1)
+    kmask = (k[None, :, None] < width)
+    contrib = jnp.where(kmask, bits << k[None, :, None].astype(jnp.uint32),
+                        jnp.uint32(0))
+    vals = jnp.sum(contrib, axis=1, dtype=jnp.uint32)        # or-sum over k
+    return vals.reshape(-1)                                  # (256,)
+
+
+def expand_runs_tile(run_values: jnp.ndarray, run_counts: jnp.ndarray,
+                     tile_start, tile: int) -> jnp.ndarray:
+    """RLE run expansion for one output tile.
+
+    run_values/run_counts: (R,) padded (count 0 for padding runs).
+    Output element j (global position tile_start + j) takes
+    run_values[#{r : cum_counts[r] <= pos}] — a compare-sum, O(R · tile),
+    fully vectorizable.
+    """
+    cum = jnp.cumsum(run_counts.astype(jnp.int32))
+    pos = tile_start + jnp.arange(tile, dtype=jnp.int32)
+    run_idx = jnp.sum((cum[None, :] <= pos[:, None]).astype(jnp.int32),
+                      axis=1)
+    run_idx = jnp.clip(run_idx, 0, run_values.shape[0] - 1)
+    return run_values[run_idx]

@@ -1,0 +1,92 @@
+"""Pallas kernel: DELTA_BINARY_PACKED page decode (V2).
+
+grid = (num_pages,).  Each grid step decodes one page: a fori_loop walks the
+page's 1024-value blocks carrying the running prefix; each block unpacks its
+four miniblocks (dynamic per-miniblock widths via masked gathers), applies
+min_delta, and materializes values with an exclusive cumsum.
+
+Device path is int32 (x32 JAX); ops.py routes int64-range pages to the host
+decoder.  The varint-free page manifests (encodings.build_delta_manifest)
+supply per-miniblock word offsets/widths so the kernel never parses headers —
+the same split cuDF uses (lightweight header pass, bulk decode pass).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import (BLOCK_VALUES, MINIBLOCKS,
+                                  interpret_default,
+                                  unpack_miniblock_dynamic)
+
+TAIL = 128  # lane-aligned tail block holding the final value
+
+
+def _kernel(payload_ref, mb_off_ref, mb_width_ref, min_delta_ref, first_ref,
+            out_ref, *, n_blocks: int):
+    slab = payload_ref[0, :]
+    mb_off = mb_off_ref[0, :]
+    mb_width = mb_width_ref[0, :]
+    min_delta = min_delta_ref[0, :]
+    first = first_ref[0, 0]
+
+    def body(b, carry):
+        parts = []
+        for m in range(MINIBLOCKS):
+            i = b * MINIBLOCKS + m
+            parts.append(unpack_miniblock_dynamic(slab, mb_off[i],
+                                                  mb_width[i]))
+        rel = jnp.concatenate(parts).astype(jnp.int32)
+        deltas = rel + min_delta[b]
+        ecs = jnp.cumsum(deltas) - deltas          # exclusive prefix sum
+        vals = carry + ecs
+        pl.store(out_ref, (0, pl.dslice(b * BLOCK_VALUES, BLOCK_VALUES)),
+                 vals)
+        return carry + jnp.sum(deltas)
+
+    last = jax.lax.fori_loop(0, n_blocks, body, first)
+    # deltas count n-1: the final value (index n_blocks*1024) lands in the
+    # tail lane block
+    pl.store(out_ref, (0, pl.dslice(n_blocks * BLOCK_VALUES, TAIL)),
+             jnp.full((TAIL,), last, jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("n_blocks", "interpret"))
+def delta_decode_pages(payload: jnp.ndarray, mb_off: jnp.ndarray,
+                       mb_width: jnp.ndarray, min_delta: jnp.ndarray,
+                       first_value: jnp.ndarray, *, n_blocks: int,
+                       interpret: bool | None = None) -> jnp.ndarray:
+    """Decode DELTA_BINARY_PACKED pages.
+
+    payload     (n_pages, W)        uint32, padded page payloads
+    mb_off      (n_pages, n_blocks*4) int32, miniblock word offsets
+    mb_width    (n_pages, n_blocks*4) int32
+    min_delta   (n_pages, n_blocks) int32
+    first_value (n_pages, 1)        int32
+    → (n_pages, n_blocks*1024 + 128) int32  (exclusive-cumsum semantics:
+      position 0 is first_value; the final value — index n_blocks*1024 when
+      the page holds exactly n_blocks·1024 deltas — fills the tail block)
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    n_pages, n_words = payload.shape
+    n_mb = n_blocks * MINIBLOCKS
+    n_out = n_blocks * BLOCK_VALUES + TAIL
+    return pl.pallas_call(
+        functools.partial(_kernel, n_blocks=n_blocks),
+        grid=(n_pages,),
+        in_specs=[
+            pl.BlockSpec((1, n_words), lambda i: (i, 0)),
+            pl.BlockSpec((1, n_mb), lambda i: (i, 0)),
+            pl.BlockSpec((1, n_mb), lambda i: (i, 0)),
+            pl.BlockSpec((1, n_blocks), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pages, n_out), jnp.int32),
+        interpret=interpret,
+    )(payload, mb_off, mb_width, min_delta, first_value)

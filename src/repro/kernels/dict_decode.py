@@ -1,0 +1,48 @@
+"""Pallas kernel: RLE_DICTIONARY page decode (unpack codes + gather).
+
+grid = (num_pages,).  The dictionary itself lives in VMEM for the whole
+call (one dictionary per column chunk); ops.py falls back to the host path
+when a dictionary would not fit VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import interpret_default, unpack_words_static
+
+
+def _kernel(words_ref, dict_ref, out_ref, *, width: int):
+    codes = unpack_words_static(words_ref[0, :], width).astype(jnp.int32)
+    codes = jnp.clip(codes, 0, dict_ref.shape[0] - 1)
+    out_ref[0, :] = dict_ref[:][codes]
+
+
+@functools.partial(jax.jit, static_argnames=("width", "interpret"))
+def dict_decode_pages(words: jnp.ndarray, dictionary: jnp.ndarray, *,
+                      width: int, interpret: bool | None = None
+                      ) -> jnp.ndarray:
+    """words: (n_pages, G*width) uint32; dictionary: (D,) int32/uint32/f32.
+
+    Returns (n_pages, G*32) of dictionary.dtype.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    n_pages, n_words = words.shape
+    n_vals = (n_words // width) * 32
+    d = dictionary.shape[0]
+    return pl.pallas_call(
+        functools.partial(_kernel, width=width),
+        grid=(n_pages,),
+        in_specs=[
+            pl.BlockSpec((1, n_words), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, n_vals), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pages, n_vals), dictionary.dtype),
+        interpret=interpret,
+    )(words, dictionary)

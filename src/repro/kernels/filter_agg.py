@@ -1,0 +1,67 @@
+"""Pallas kernel: fused predicate + aggregate (the TPC-H Q6 hot loop).
+
+Beyond-paper: the paper overlaps the *reading* stage with query operators;
+fusing the Q6 filter+aggregate into one kernel removes a full HBM round-trip
+of the filtered columns.  grid = (num_tiles,) over the decoded column
+stream; each tile emits one partial sum, reduced outside.
+
+Predicate (Q6 shape):  lo <= key < hi  AND  dlo <= disc <= dhi  AND
+qty < qmax;  aggregate: sum(price * disc).
+Padding convention: tiles are padded with key = INT32_MAX (predicate false).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import interpret_default
+
+TILE = 8192
+
+
+def _kernel(key_ref, qty_ref, disc_ref, price_ref, out_ref, *,
+            lo: int, hi: int, dlo: float, dhi: float, qmax: float):
+    key = key_ref[0, :]
+    disc = disc_ref[0, :]
+    mask = ((key >= lo) & (key < hi)
+            & (disc >= dlo) & (disc <= dhi)
+            & (qty_ref[0, :] < qmax))
+    out_ref[0, 0] = jnp.sum(
+        jnp.where(mask, price_ref[0, :] * disc, jnp.float32(0)))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "lo", "hi", "dlo", "dhi", "qmax", "interpret"))
+def filter_agg_q6(key: jnp.ndarray, qty: jnp.ndarray, disc: jnp.ndarray,
+                  price: jnp.ndarray, *, lo: int, hi: int, dlo: float,
+                  dhi: float, qmax: float,
+                  interpret: bool | None = None) -> jnp.ndarray:
+    """Inputs: (n,) padded to TILE multiple (key padding = INT32_MAX).
+
+    Returns scalar float32 revenue.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    n = key.shape[0]
+    assert n % TILE == 0, "pad inputs to TILE"
+    n_tiles = n // TILE
+    partials = pl.pallas_call(
+        functools.partial(_kernel, lo=lo, hi=hi, dlo=dlo, dhi=dhi,
+                          qmax=qmax),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, TILE), lambda i: (0, i)),
+            pl.BlockSpec((1, TILE), lambda i: (0, i)),
+            pl.BlockSpec((1, TILE), lambda i: (0, i)),
+            pl.BlockSpec((1, TILE), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, n_tiles), jnp.float32),
+        interpret=interpret,
+    )(key.reshape(1, n), qty.reshape(1, n), disc.reshape(1, n),
+      price.reshape(1, n))
+    return jnp.sum(partials)

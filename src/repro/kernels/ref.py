@@ -1,0 +1,115 @@
+"""Pure-jnp oracles for every Pallas kernel (same padded-array contracts).
+
+Tests assert_allclose each kernel (interpret=True) against these across
+shape/dtype sweeps; the host numpy decoders in core/encodings.py are a
+second, independent oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import (BLOCK_VALUES, LANES, MB_GROUPS, MB_VALUES,
+                                  MINIBLOCKS)
+
+
+def unpack_words_static_ref(words: jnp.ndarray, width: int) -> jnp.ndarray:
+    g = words.shape[0] // width
+    w = words.reshape(g, width).astype(jnp.uint32)
+    lane = jnp.arange(LANES, dtype=jnp.uint32)
+    vals = jnp.zeros((g, LANES), jnp.uint32)
+    for k in range(width):
+        vals = vals | ((((w[:, k:k + 1] >> lane[None, :]) & 1)
+                        << jnp.uint32(k)))
+    return vals.reshape(-1)
+
+
+def bitunpack_pages_ref(words: jnp.ndarray, *, width: int) -> jnp.ndarray:
+    return jax.vmap(lambda w: unpack_words_static_ref(w, width))(words)
+
+
+def dict_decode_pages_ref(words: jnp.ndarray, dictionary: jnp.ndarray, *,
+                          width: int) -> jnp.ndarray:
+    codes = bitunpack_pages_ref(words, width=width).astype(jnp.int32)
+    codes = jnp.clip(codes, 0, dictionary.shape[0] - 1)
+    return dictionary[codes]
+
+
+def delta_decode_pages_ref(payload, mb_off, mb_width, min_delta, first_value,
+                           *, n_blocks: int) -> jnp.ndarray:
+    lane = jnp.arange(LANES, dtype=jnp.uint32)
+    karr = jnp.arange(LANES, dtype=jnp.int32)
+
+    def one_mb(slab, off, w):
+        g = jnp.arange(MB_GROUPS, dtype=jnp.int32)
+        idx = jnp.clip(off + g[:, None] * w + karr[None, :], 0,
+                       slab.shape[0] - 1)
+        words = slab[idx]
+        bits = (words[:, :, None] >> lane[None, None, :]) & jnp.uint32(1)
+        contrib = jnp.where(karr[None, :, None] < w,
+                            bits << karr[None, :, None].astype(jnp.uint32),
+                            jnp.uint32(0))
+        return jnp.sum(contrib, axis=1, dtype=jnp.uint32).reshape(-1)
+
+    def one_page(slab, offs, widths, mins, first):
+        rel = jnp.concatenate([
+            one_mb(slab, offs[b * MINIBLOCKS + m], widths[b * MINIBLOCKS + m])
+            for b in range(n_blocks) for m in range(MINIBLOCKS)])
+        deltas = rel.astype(jnp.int32) + jnp.repeat(mins, BLOCK_VALUES)
+        ecs = jnp.cumsum(deltas) - deltas
+        vals = first[0] + ecs
+        tail = jnp.full((128,), first[0] + jnp.sum(deltas), jnp.int32)
+        return jnp.concatenate([vals, tail])
+
+    return jax.vmap(one_page)(payload, mb_off, mb_width, min_delta,
+                              first_value)
+
+
+def rle_decode_pages_ref(run_values, run_counts, *, n_out: int):
+    def one(vals, counts):
+        cum = jnp.cumsum(counts.astype(jnp.int32))
+        pos = jnp.arange(n_out, dtype=jnp.int32)
+        ridx = jnp.sum((cum[None, :] <= pos[:, None]).astype(jnp.int32),
+                       axis=1)
+        return vals[jnp.clip(ridx, 0, vals.shape[0] - 1)]
+
+    return jax.vmap(one)(run_values, run_counts)
+
+
+def bss_decode_pages_ref(payload, *, stride_words: int, n_out: int):
+    def one(slab):
+        j = jnp.arange(n_out, dtype=jnp.int32)
+        widx = jnp.clip(j // 4, 0, stride_words - 1)
+        shift = ((j % 4) * 8).astype(jnp.uint32)
+
+        def plane(s):
+            w = jax.lax.dynamic_slice(slab, (s * stride_words,),
+                                      (stride_words,))
+            return (w[widx] >> shift) & jnp.uint32(0xFF)
+
+        out = (plane(0) | (plane(1) << jnp.uint32(8))
+               | (plane(2) << jnp.uint32(16)) | (plane(3) << jnp.uint32(24)))
+        return jax.lax.bitcast_convert_type(out, jnp.float32)
+
+    return jax.vmap(one)(payload)
+
+
+def cascade_decode_pages_ref(val_words, cnt_words, *, value_width: int,
+                             count_width: int, n_runs: int, n_out: int):
+    def one(vw, cw):
+        vals = unpack_words_static_ref(vw, value_width)[:n_runs]
+        counts = unpack_words_static_ref(cw, count_width)[:n_runs]
+        cum = jnp.cumsum(counts.astype(jnp.int32))
+        pos = jnp.arange(n_out, dtype=jnp.int32)
+        ridx = jnp.sum((cum[None, :] <= pos[:, None]).astype(jnp.int32),
+                       axis=1)
+        return vals[jnp.clip(ridx, 0, n_runs - 1)]
+
+    return jax.vmap(one)(val_words, cnt_words)
+
+
+def filter_agg_q6_ref(key, qty, disc, price, *, lo, hi, dlo, dhi, qmax):
+    mask = ((key >= lo) & (key < hi) & (disc >= dlo) & (disc <= dhi)
+            & (qty < qmax))
+    return jnp.sum(jnp.where(mask, price * disc, jnp.float32(0)))

@@ -1,0 +1,55 @@
+"""Pallas kernel: RLE run expansion.
+
+grid = (num_pages, num_tiles): page-parallel (Insight 1) *and* tile-parallel
+within a page, because one long-run page would otherwise serialize.  Each
+tile recomputes the (small) run cumsum and expands its slice with a
+compare-sum — O(R · tile) vector ops.  ops.py bounds R (the run count) and
+falls back to the host for high-run-count pages, where RLE would not have
+been selected anyway (Insight 3 picks the smallest encoding).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import expand_runs_tile, interpret_default
+
+TILE = 1024
+
+
+def _kernel(vals_ref, counts_ref, out_ref):
+    tile_start = pl.program_id(1) * TILE
+    out_ref[0, :] = expand_runs_tile(vals_ref[0, :], counts_ref[0, :],
+                                     tile_start, TILE)
+
+
+@functools.partial(jax.jit, static_argnames=("n_out", "interpret"))
+def rle_decode_pages(run_values: jnp.ndarray, run_counts: jnp.ndarray,
+                     *, n_out: int, interpret: bool | None = None
+                     ) -> jnp.ndarray:
+    """run_values/run_counts: (n_pages, R) int32 (padding runs have count 0).
+
+    n_out: padded output length per page (multiple of TILE).
+    → (n_pages, n_out) int32; positions past a page's true value count hold
+    the last run's value (callers slice by true counts).
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    n_pages, r = run_values.shape
+    assert n_out % TILE == 0
+    n_tiles = n_out // TILE
+    return pl.pallas_call(
+        _kernel,
+        grid=(n_pages, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, r), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, r), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, TILE), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n_pages, n_out), jnp.int32),
+        interpret=interpret,
+    )(run_values, run_counts)

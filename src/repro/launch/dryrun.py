@@ -1,0 +1,411 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: 512 placeholder CPU devices build the production meshes, every
+cell's step function is lowered with ShapeDtypeStruct inputs (no
+allocation) and compiled through the full XLA SPMD partitioner, and the
+compiled artifact yields memory_analysis() (fits?), cost_analysis()
+(FLOPs/bytes) and the parsed collective bytes for §Roofline.
+
+Usage:
+    python -m repro.launch.dryrun --arch granite-3-8b --shape train_4k
+    python -m repro.launch.dryrun --all --mesh both [--jobs 2]
+    python -m repro.launch.dryrun --list
+"""
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import subprocess        # noqa: E402
+import sys               # noqa: E402
+import time              # noqa: E402
+from typing import Dict, Optional  # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.configs import (ARCHS, SHAPES, applicable_shapes, get_arch,  # noqa: E402
+                           input_specs, skip_reason)
+from repro.launch.hlo_analysis import analyze_hlo  # noqa: E402
+from repro.launch.mesh import (HBM_BW, ICI_LINK_BW, PEAK_FLOPS_BF16,  # noqa: E402
+                               make_production_mesh)
+from repro.models.model import Model  # noqa: E402
+from repro.parallel.sharding import param_pspecs  # noqa: E402
+from repro.train.optimizer import OptConfig  # noqa: E402
+from repro.train.step import (abstract_train_state, build_train_step,  # noqa: E402
+                              state_shardings)
+
+DEFAULT_OUT = "results/dryrun"
+
+
+# ---------------------------------------------------------------------------
+# cache shardings (path-aware, divisibility-checked)
+# ---------------------------------------------------------------------------
+
+def _dp_axes(mesh_axes):
+    return tuple(a for a in ("pod", "data") if a in mesh_axes)
+
+
+def cache_shardings(caches_abs, mesh):
+    """Leaves carry a leading (steps,) scan axis; never sharded.
+
+    k/v     (L,B,S,KV,dh): KV on model if divisible, else S (flash-decoding
+            style cache-length sharding), else replicated
+    ckv     (L,B,S,r):  S on model (length-sharded latents)
+    krope   (L,B,S,dr): S on model
+    conv    (L,B,K,C):  C on model
+    ssd     (L,B,H,P,N): H on model
+    pos     (L,W): replicated
+    """
+    axes = tuple(mesh.axis_names)
+    dp = _dp_axes(axes)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    tp = mesh.shape["model"] if "model" in axes else 1
+
+    def leaf_spec(path: str, shape) -> P:
+        name = path.split("/")[-1]
+        dims = list(shape)
+        if name == "pos" or len(dims) < 3:
+            return P()
+        spec = [None] * len(dims)
+        if dims[1] % dp_size == 0 and dims[1] >= dp_size:
+            spec[1] = dp
+        if name in ("k", "v", "k_scale", "v_scale") and len(dims) == 5:
+            if tp > 1 and dims[3] % tp == 0:
+                spec[3] = "model"
+            elif tp > 1 and dims[2] % tp == 0:
+                spec[2] = "model"
+        elif name in ("ckv", "krope") and len(dims) == 4:
+            if tp > 1 and dims[2] % tp == 0:
+                spec[2] = "model"
+        elif name == "conv" and len(dims) == 4:
+            if tp > 1 and dims[3] % tp == 0:
+                spec[3] = "model"
+        elif name == "ssd" and len(dims) == 5:
+            if tp > 1 and dims[2] % tp == 0:
+                spec[2] = "model"
+        return P(*spec)
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            return {k: walk(v, f"{path}/{k}") for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return [walk(v, f"{path}/{i}") for i, v in enumerate(node)]
+        if node is None:
+            return None
+        return NamedSharding(mesh, leaf_spec(path, node.shape))
+
+    return walk(caches_abs, "")
+
+
+def batch_sharding_tree(batch_abs, mesh):
+    axes = tuple(mesh.axis_names)
+    dp = _dp_axes(axes)
+
+    def leaf(x):
+        spec = [None] * len(x.shape)
+        if x.shape and x.shape[0] % max(
+                1, _prod(mesh.shape[a] for a in dp)) == 0 and dp:
+            spec[0] = dp
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(leaf, batch_abs)
+
+
+def _prod(it):
+    out = 1
+    for x in it:
+        out *= x
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cell lowering
+# ---------------------------------------------------------------------------
+
+def lower_cell(arch_name: str, shape_name: str, multi_pod: bool,
+               opt_overrides: Optional[dict] = None,
+               cfg_overrides: Optional[dict] = None,
+               arch_overrides: Optional[dict] = None):
+    arch = get_arch(arch_name)
+    if arch_overrides:
+        arch = dataclasses.replace(arch, **arch_overrides)
+    cfg = arch.config
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    model = Model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    shape = SHAPES[shape_name]
+    axes = tuple(mesh.axis_names)
+
+    opt_kw = {"moments_dtype": "float32"}
+    opt_kw.update(opt_overrides or {})
+    opt_cfg = OptConfig(**opt_kw)
+
+    with jax.set_mesh(mesh):
+        batch_abs = input_specs(arch, shape_name)
+        params_abs = jax.eval_shape(
+            lambda: model.init(jax.random.PRNGKey(0)))
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        pspecs = param_pspecs(params_abs, zero=arch.zero, mesh_axes=axes,
+                              mesh_sizes=sizes)
+        params_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                                 is_leaf=lambda x: isinstance(x, P))
+        if shape.kind == "train":
+            step = build_train_step(model, opt_cfg, arch.grad_accum)
+            state_abs = abstract_train_state(model, opt_cfg)
+            state_sh = state_shardings(state_abs, mesh, arch.zero)
+            batch_sh = batch_sharding_tree(batch_abs, mesh)
+            jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                             out_shardings=(state_sh, None))
+            lowered = jitted.lower(state_abs, batch_abs)
+        elif shape.kind == "prefill":
+            if cfg.encoder_only:
+                jitted = jax.jit(
+                    model.encode,
+                    in_shardings=(params_sh,
+                                  batch_sharding_tree(batch_abs, mesh)),
+                    out_shardings=None)
+                lowered = jitted.lower(params_abs, batch_abs)
+            else:
+                caches_abs = jax.eval_shape(
+                    lambda: model.init_caches(shape.global_batch,
+                                              shape.seq_len))
+                caches_sh = cache_shardings(caches_abs, mesh)
+                jitted = jax.jit(
+                    model.prefill,
+                    in_shardings=(params_sh,
+                                  batch_sharding_tree(batch_abs, mesh),
+                                  caches_sh),
+                    out_shardings=(None, caches_sh))
+                lowered = jitted.lower(params_abs, batch_abs, caches_abs)
+        else:  # decode
+            caches_abs = jax.eval_shape(
+                lambda: model.init_caches(shape.global_batch,
+                                          shape.seq_len))
+            caches_sh = cache_shardings(caches_abs, mesh)
+            token_sh = batch_sharding_tree(
+                {"token": batch_abs["token"]}, mesh)["token"]
+            jitted = jax.jit(
+                model.decode_step,
+                in_shardings=(params_sh, token_sh,
+                              NamedSharding(mesh, P()), caches_sh),
+                out_shardings=(None, caches_sh))
+            lowered = jitted.lower(params_abs, batch_abs["token"],
+                                   batch_abs["pos"], caches_abs)
+    return lowered, mesh, arch, cfg
+
+
+def _mem_number(mem, name: str):
+    v = getattr(mem, name, None)
+    try:
+        return int(v) if v is not None else None
+    except Exception:
+        return None
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
+             out_dir: str = DEFAULT_OUT, collect_hlo: bool = True,
+             opt_overrides=None, cfg_overrides=None,
+             variant: str = "baseline",
+             arch_overrides: Optional[dict] = None) -> Dict:
+    t0 = time.time()
+    mesh_name = "multi_pod" if multi_pod else "single_pod"
+    arch = get_arch(arch_name)
+    if arch_overrides:
+        arch = dataclasses.replace(arch, **arch_overrides)
+    reason = skip_reason(arch, shape_name)
+    rec: Dict = {
+        "arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+        "variant": variant,
+    }
+    if reason:
+        rec.update({"status": "skipped", "reason": reason})
+        _write(rec, out_dir)
+        return rec
+
+    lowered, mesh, arch, cfg = lower_cell(arch_name, shape_name, multi_pod,
+                                          opt_overrides, cfg_overrides,
+                                          arch_overrides)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    flops = float(cost.get("flops", 0.0)) if cost else 0.0
+    bytes_accessed = float(cost.get("bytes accessed", 0.0)) if cost else 0.0
+
+    hrep = None
+    if collect_hlo:
+        try:
+            hlo = compiled.as_text()
+            hrep = analyze_hlo(hlo)
+        except Exception as e:  # keep the cell result even if parsing dies
+            rec["collective_error"] = repr(e)
+
+    n_dev = mesh.devices.size
+    rec.update({
+        "status": "ok",
+        "n_devices": int(n_dev),
+        "lower_seconds": round(t_lower, 2),
+        "compile_seconds": round(t_compile, 2),
+        "flops_per_device": flops,
+        "bytes_per_device": bytes_accessed,
+        "model_params": arch.config.param_count(),
+        "model_params_active": arch.config.active_param_count(),
+        "grad_accum": arch.grad_accum,
+        "zero": arch.zero,
+        "memory": {
+            "argument_bytes": _mem_number(mem, "argument_size_in_bytes"),
+            "output_bytes": _mem_number(mem, "output_size_in_bytes"),
+            "temp_bytes": _mem_number(mem, "temp_size_in_bytes"),
+            "code_bytes": _mem_number(mem, "generated_code_size_in_bytes"),
+        },
+    })
+    if hrep is not None:
+        rec["hlo"] = {
+            "dot_flops_per_device": hrep.dot_flops,
+            "memory_bytes_per_device": hrep.memory_bytes,
+            "n_computations": hrep.n_computations,
+            "exact_loop_multipliers": hrep.exact_loop_multipliers,
+        }
+        rec["collectives"] = {
+            "bytes_by_kind": hrep.bytes_by_kind,
+            "count_by_kind": hrep.count_by_kind,
+            "total_bytes": hrep.collective_bytes,
+        }
+    _write(rec, out_dir)
+    return rec
+
+
+def _write(rec: Dict, out_dir: str) -> None:
+    d = os.path.join(out_dir, rec["mesh"])
+    os.makedirs(d, exist_ok=True)
+    suffix = "" if rec.get("variant", "baseline") == "baseline" \
+        else f"__{rec['variant']}"
+    path = os.path.join(
+        d, f"{rec['arch']}__{rec['shape']}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def all_cells():
+    for a in ARCHS:
+        arch = get_arch(a)
+        for s in SHAPES:
+            yield a, s, s in applicable_shapes(arch)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single_pod",
+                    choices=["single_pod", "multi_pod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--jobs", type=int, default=1)
+    ap.add_argument("--no-hlo", action="store_true",
+                    help="skip collective parsing (faster)")
+    # §Perf variant knobs
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--remat", choices=["full", "dots", "none"])
+    ap.add_argument("--moments", choices=["float32", "bfloat16"])
+    ap.add_argument("--accum", type=int, help="grad accumulation override")
+    ap.add_argument("--preferred-accum", action="store_true",
+                    help="bf16 matmul inputs + f32 accumulation")
+    ap.add_argument("--no-zero", action="store_true",
+                    help="disable FSDP param sharding")
+    ap.add_argument("--moe-shmap", action="store_true",
+                    help="explicit shard_map MoE (psum combine)")
+    ap.add_argument("--kv-int8", action="store_true",
+                    help="int8 KV cache with per-(token,head) scales")
+    args = ap.parse_args()
+
+    cfg_overrides = {}
+    if args.remat:
+        cfg_overrides["remat"] = args.remat
+    if args.preferred_accum:
+        cfg_overrides["accum_via_preferred"] = True
+    if args.moe_shmap:
+        cfg_overrides["moe_shmap"] = True
+    if args.kv_int8:
+        cfg_overrides["kv_cache_dtype"] = "int8"
+    opt_overrides = {}
+    if args.moments:
+        opt_overrides["moments_dtype"] = args.moments
+    arch_overrides = {}
+    if args.accum is not None:
+        arch_overrides["grad_accum"] = args.accum
+    if args.no_zero:
+        arch_overrides["zero"] = False
+
+    if args.list:
+        for a, s, ok in all_cells():
+            arch = get_arch(a)
+            note = "" if ok else f"  SKIP: {skip_reason(arch, s)}"
+            print(f"{a:22s} {s:12s}{note}")
+        return 0
+
+    meshes = (["single_pod", "multi_pod"] if args.mesh == "both"
+              else [args.mesh])
+
+    if args.all:
+        cells = [(a, s, m) for a, s, _ in all_cells() for m in meshes]
+        procs = []
+        failures = []
+        for a, s, m in cells:
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", a, "--shape", s, "--mesh", m,
+                   "--out", args.out] + (["--no-hlo"] if args.no_hlo
+                                         else [])
+            procs.append((a, s, m, subprocess.Popen(cmd)))
+            while len([p for *_, p in procs if p.poll() is None]) \
+                    >= args.jobs:
+                time.sleep(1.0)
+        for a, s, m, p in procs:
+            if p.wait() != 0:
+                failures.append((a, s, m))
+        if failures:
+            print("FAILED CELLS:", failures)
+            return 1
+        print(f"all {len(cells)} cells OK")
+        return 0
+
+    assert args.arch and args.shape
+    for m in meshes:
+        rec = run_cell(args.arch, args.shape, m == "multi_pod",
+                       out_dir=args.out, collect_hlo=not args.no_hlo,
+                       opt_overrides=opt_overrides or None,
+                       cfg_overrides=cfg_overrides or None,
+                       arch_overrides=arch_overrides or None,
+                       variant=args.variant)
+        status = rec["status"]
+        if status == "ok":
+            print(f"{args.arch} {args.shape} {m}: compiled "
+                  f"lower={rec['lower_seconds']}s "
+                  f"compile={rec['compile_seconds']}s "
+                  f"flops/dev={rec['flops_per_device']:.3e} "
+                  f"coll={rec.get('collectives', {}).get('total_bytes', 'n/a')}")
+        else:
+            print(f"{args.arch} {args.shape} {m}: SKIP ({rec['reason']})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

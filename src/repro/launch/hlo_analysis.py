@@ -1,0 +1,351 @@
+"""Roofline-term extraction from compiled (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts while-loop bodies **once**, but our
+layer stacks are lax.scan loops — so FLOPs/bytes/collectives would be
+undercounted by ~n_layers.  This module re-derives all three terms with
+loop-trip multipliers:
+
+  * computations are parsed, a call graph is built from while ops
+    (``body=``/``condition=``), and each body's trip count is recovered
+    from XLA's canonical `compare(iter, constant(N)), direction=LT`
+    condition;
+  * **collective bytes**: result-buffer size of every all-gather /
+    all-reduce / reduce-scatter / all-to-all / collective-permute;
+  * **dot FLOPs** (the MXU roofline numerator): 2 · |result| · |contracted|
+    per dot, operand shapes resolved through a per-computation symbol
+    table;
+  * **HBM bytes**: Σ (result + operands) of every top-level op except
+    free ops (parameter/constant/tuple/get-tuple-element/bitcast); fusion
+    computations are excluded (their traffic is the fusion op's operands
+    and result at the call site — the fusion-semantics approximation of
+    "bytes accessed").
+
+If a trip count cannot be recovered the multiplier defaults to 1 and the
+report is flagged ``exact_loop_multipliers=False`` (lower bound).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+_OP_LINE_RE = re.compile(
+    r"^\s*(ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s*([\w\-]+)\((.*)$")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_WHILE_ATTR_RE = re.compile(
+    r"condition=%?([\w.\-]+).*?body=%?([\w.\-]+)|"
+    r"body=%?([\w.\-]+).*?condition=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_TRIP_BC_RE = re.compile(r"known_trip_count[\"':{\s]+n[\"':\s]+(\d+)")
+_LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_LHS_BDIMS_RE = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "partition-id", "replica-id",
+             "iota", "while", "conditional", "call"}
+# ops whose HBM traffic is NOT operands+result (in-place / view semantics):
+#   dynamic-slice reads only the slice it produces;
+#   dynamic-update-slice writes only the update region (in-place);
+#   copy moves result bytes twice (read + write).
+_SPECIAL_BYTES = {"dynamic-slice", "dynamic-update-slice", "copy"}
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str                 # text after '(' (operands + attrs)
+    is_root: bool = False
+
+
+@dataclasses.dataclass
+class HloReport:
+    dot_flops: float
+    memory_bytes: float
+    bytes_by_kind: Dict[str, int]
+    count_by_kind: Dict[str, int]
+    exact_loop_multipliers: bool
+    n_computations: int
+
+    @property
+    def collective_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def _shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        out.append((dtype,
+                    [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _split_computations(hlo: str) -> Tuple[Dict[str, List[Op]],
+                                           Optional[str]]:
+    comps: Dict[str, List[Op]] = {}
+    cur: Optional[str] = None
+    entry: Optional[str] = None
+    ops: List[Op] = []
+    hlo = _COMMENT_RE.sub("", hlo)
+    for line in hlo.splitlines():
+        s = line.strip()
+        m = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s*(?:\(.*\))?\s*"
+                     r"(?:->\s*[^{]*)?\{$", s)
+        if m:
+            if cur is not None:
+                comps[cur] = ops
+            cur = m.group(2)
+            if m.group(1):
+                entry = cur
+            ops = []
+            continue
+        if s == "}" or s == "})":
+            if cur is not None:
+                comps[cur] = ops
+                cur = None
+                ops = []
+            continue
+        if cur is None:
+            continue
+        om = _OP_LINE_RE.match(line)
+        if om:
+            ops.append(Op(om.group(2), om.group(3), om.group(4),
+                          om.group(5), is_root=bool(om.group(1))))
+    if cur is not None:
+        comps[cur] = ops
+    return comps, entry
+
+
+def _trip_count(cond_ops: List[Op]) -> Optional[int]:
+    """Fallback when backend_config lacks known_trip_count: the canonical
+    scan condition compares the counter against a constant bound."""
+    consts: List[int] = []
+    for op in cond_ops:
+        if op.opcode == "constant":
+            cm = re.match(r"^(\d+)\)", op.rest)
+            if cm:
+                consts.append(int(cm.group(1)))
+        consts.extend(int(c) for c in _CONST_RE.findall(op.rest))
+    return max(consts) if consts else None
+
+
+_PARAM_IDX_RE = re.compile(r"^(\d+)\)")
+_CALLSITE_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+
+
+def _fusion_param_charges(fops: List[Op]) -> Dict[int, int]:
+    """Per-parameter byte charges for a fusion computation.
+
+    A parameter consumed only by dynamic-slice ops is charged the sliced
+    bytes; a parameter that is only the *target* buffer of a
+    dynamic-update-slice is in-place (charged 0).  Everything else is
+    charged its full size.
+    """
+    charges: Dict[int, int] = {}
+    params = {}
+    for fop in fops:
+        if fop.opcode == "parameter":
+            m = _PARAM_IDX_RE.match(fop.rest)
+            if m:
+                params[fop.name] = (int(m.group(1)), fop.type_str)
+    for pname, (idx, ptype) in params.items():
+        uses = []
+        for fop in fops:
+            if fop.opcode == "parameter":
+                continue
+            refs = _OPERAND_RE.findall(fop.rest)
+            if pname in refs:
+                uses.append((fop, refs))
+        if uses and all(u.opcode == "dynamic-slice" for u, _ in uses):
+            charges[idx] = sum(_shape_bytes(u.type_str) for u, _ in uses)
+        elif uses and all(u.opcode == "dynamic-update-slice"
+                          and r and r[0] == pname for u, r in uses):
+            charges[idx] = 0                       # in-place DUS target
+        else:
+            charges[idx] = _shape_bytes(ptype)
+    return charges
+
+
+def _fusion_bytes(op: Op, fops: List[Op], symbols: Dict[str, str]) -> int:
+    """Traffic of one fusion call site under slice-aware semantics."""
+    charges = _fusion_param_charges(fops)
+    fsymbols = {f.name: f.type_str for f in fops}
+    result = _shape_bytes(op.type_str)
+    root = next((f for f in fops if f.is_root), fops[-1] if fops else None)
+    if root is not None and root.opcode == "dynamic-update-slice":
+        refs = _OPERAND_RE.findall(root.rest)
+        if len(refs) > 1 and refs[1] in fsymbols:
+            result = _shape_bytes(fsymbols[refs[1]])   # write update only
+    operand_part = op.rest.split(", kind=")[0].split(", calls=")[0]
+    total = result
+    for i, ref in enumerate(_OPERAND_RE.findall(operand_part)):
+        t = symbols.get(ref)
+        if t is None:
+            continue
+        total += charges.get(i, _shape_bytes(t))
+    return total
+
+
+def analyze_hlo(hlo: str) -> HloReport:
+    comps, entry = _split_computations(hlo)
+    exact = True
+
+    # edges: parent -> (callee, multiplier_kind)
+    sub_called = set()       # fusion/reducer computations: excluded
+    loop_trips: Dict[Tuple[str, str], int] = {}
+    cond_of: Dict[Tuple[str, str], str] = {}
+    edges: Dict[str, List[Tuple[str, int]]] = {name: [] for name in comps}
+    for parent, ops in comps.items():
+        for op in ops:
+            for m in _CALLS_RE.finditer(op.rest):
+                sub_called.add(m.group(1))
+            if op.opcode == "while":
+                wm = _WHILE_ATTR_RE.search(op.rest)
+                if not wm:
+                    continue
+                cond = wm.group(1) or wm.group(4)
+                body = wm.group(2) or wm.group(3)
+                bc = _TRIP_BC_RE.search(op.rest)
+                trips = int(bc.group(1)) if bc else None
+                if trips is None and cond in comps:
+                    trips = _trip_count(comps[cond])
+                if trips is None:
+                    trips = 1
+                    exact = False
+                edges[parent].append((body, trips))
+                edges[parent].append((cond, trips))
+            elif op.opcode in ("call", "conditional"):
+                for ref in _OPERAND_RE.finditer(op.rest):
+                    if ref.group(1) in comps:
+                        edges[parent].append((ref.group(1), 1))
+
+    if entry is not None:
+        roots = [entry]
+    else:
+        called = {c for es in edges.values() for c, _ in es} | sub_called
+        roots = [c for c in comps if c not in called]
+    mult: Dict[str, int] = {}
+
+    def visit(name: str, m: int):
+        if name in mult and mult[name] >= m:
+            return
+        mult[name] = m
+        for callee, k in edges.get(name, []):
+            if callee not in sub_called:
+                visit(callee, m * k)
+
+    for r in roots:
+        visit(r, 1)
+
+    dot_flops = 0.0
+    mem_bytes = 0.0
+    bytes_by = {k: 0 for k in _COLLECTIVES}
+    count_by = {k: 0 for k in _COLLECTIVES}
+
+    for name, ops in comps.items():
+        m = mult.get(name, 0)
+        if m == 0:
+            continue
+        symbols = {op.name: op.type_str for op in ops}
+
+        for op in ops:
+            base = op.opcode.replace("-start", "").replace("-done", "")
+            if base in _COLLECTIVES and not op.opcode.endswith("-done"):
+                b = _shape_bytes(op.type_str)
+                bytes_by[base] += b * m
+                count_by[base] += m
+            if op.opcode in _FREE_OPS:
+                continue
+            if op.opcode in _SPECIAL_BYTES:
+                r = _shape_bytes(op.type_str)
+                if op.opcode == "dynamic-slice":
+                    b = 2 * r                       # read slice + write out
+                elif op.opcode == "dynamic-update-slice":
+                    refs = _OPERAND_RE.findall(op.rest)
+                    upd = symbols.get(refs[1]) if len(refs) > 1 else None
+                    b = 2 * (_shape_bytes(upd) if upd else r)
+                else:                               # copy
+                    b = 2 * r
+                mem_bytes += b * m
+            elif op.opcode == "fusion":
+                cm = _CALLSITE_CALLS_RE.search(op.rest)
+                fops = comps.get(cm.group(1), []) if cm else []
+                mem_bytes += _fusion_bytes(op, fops, symbols) * m
+            else:
+                # result + named operands
+                b = _shape_bytes(op.type_str)
+                for ref in _OPERAND_RE.finditer(
+                        op.rest.split(", calls=")[0]):
+                    t = symbols.get(ref.group(1))
+                    if t is not None:
+                        b += _shape_bytes(t)
+                mem_bytes += b * m
+            # dot flops
+            if op.opcode == "dot":
+                refs = _OPERAND_RE.findall(op.rest)
+                if refs:
+                    lhs_t = symbols.get(refs[0])
+                    cd = _LHS_CDIMS_RE.search(op.rest)
+                    if lhs_t and cd is not None:
+                        dims = _shape_dims(lhs_t)
+                        if dims:
+                            _, lhs_dims = dims[0]
+                            contracted = 1
+                            for i in (int(x) for x in
+                                      cd.group(1).split(",") if x):
+                                if i < len(lhs_dims):
+                                    contracted *= lhs_dims[i]
+                            result = 1
+                            rdims = _shape_dims(op.type_str)
+                            for d in (rdims[0][1] if rdims else []):
+                                result *= d
+                            dot_flops += 2.0 * result * contracted * m
+
+    return HloReport(dot_flops=dot_flops, memory_bytes=mem_bytes,
+                     bytes_by_kind=bytes_by, count_by_kind=count_by,
+                     exact_loop_multipliers=exact,
+                     n_computations=len(comps))
+
+
+# Backwards-compatible wrapper used by dryrun.py
+@dataclasses.dataclass
+class CollectiveReport:
+    bytes_by_kind: Dict[str, int]
+    count_by_kind: Dict[str, int]
+    exact_loop_multipliers: bool
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def analyze_collectives(hlo: str) -> CollectiveReport:
+    r = analyze_hlo(hlo)
+    return CollectiveReport(r.bytes_by_kind, r.count_by_kind,
+                            r.exact_loop_multipliers)

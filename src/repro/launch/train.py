@@ -1,0 +1,73 @@
+"""End-to-end trainer driver.
+
+Streams token batches out of a TabFile corpus through the paper's scan
+path (Insights 1-4 live in the corpus file config) into any assigned
+architecture.  ``--smoke`` trains the reduced config on CPU; full configs
+are for real pods.
+
+Example:
+    python -m repro.launch.train --arch granite-3-8b --smoke --steps 200 \
+        --corpus /tmp/corpus.tab --ckpt /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from repro.configs import get_arch, smoke_config
+from repro.core.config import ACCELERATOR_OPTIMIZED
+from repro.data.loader import TabLoader
+from repro.data.tokens import write_corpus
+from repro.models.model import Model
+from repro.train.optimizer import OptConfig
+from repro.train.runner import RunnerConfig, TrainRunner
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-8b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-trainable)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--corpus", default="/tmp/repro_corpus.tab")
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="simulate preemption at step N (FT demo)")
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_arch(
+        args.arch).config
+    model = Model(cfg)
+    if not os.path.exists(args.corpus):
+        n_tokens = max(2_000_000,
+                       args.steps * args.batch * (args.seq_len + 1) * 2)
+        print(f"writing corpus ({n_tokens:,} tokens) -> {args.corpus}")
+        write_corpus(args.corpus, n_tokens, cfg.vocab_size,
+                     ACCELERATOR_OPTIMIZED.replace(
+                         rows_per_rg=1_000_000, target_pages_per_chunk=100),
+                     seed=args.seed)
+    loader = TabLoader(args.corpus, seq_len=args.seq_len,
+                       batch_per_shard=args.batch)
+    opt = OptConfig(peak_lr=args.lr, warmup_steps=max(5, args.steps // 20),
+                    total_steps=args.steps)
+    runner = TrainRunner(
+        model, opt, loader, args.ckpt,
+        RunnerConfig(total_steps=args.steps, save_every=args.save_every,
+                     log_every=10, fail_at_step=args.fail_at),
+        grad_accum=1, seed=args.seed)
+    out = runner.run()
+    print(f"done at step {out['final_step']}; "
+          f"final loss {out['history'][-1]['loss']:.4f}"
+          if out["history"] else "done")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

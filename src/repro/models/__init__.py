@@ -1,0 +1,5 @@
+# Unified model family covering the ten assigned architectures:
+# dense GQA transformers (full/windowed/alternating attention, softcaps),
+# MLA, MoE (top-k + shared experts), Mamba2 SSD, hybrid (Zamba2), and
+# VLM/audio stub frontends.  Scan-over-layers keeps HLO compact for the
+# 512-device dry-run.

@@ -1,0 +1,295 @@
+"""GQA attention: blockwise (flash-style) training/prefill + cached decode.
+
+Blockwise attention keeps activation memory linear in sequence length
+(online softmax over KV blocks, fp32 accumulators) — required for the
+prefill_32k cells, where materialized (S, S) scores would be TB-scale.
+Supports causal, sliding-window (Mixtral/Gemma2 local) and bidirectional
+(HuBERT encoder) masking, attn-logit softcap (Gemma2), and GQA head groups.
+
+Caches:
+  full    (B, S_max, KV, dh) k/v, absolute write position
+  window  ring buffer (B, W, KV, dh) + per-slot absolute positions — bounds
+          long_500k cells for SWA / hybrid archs
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, rope_freqs, softcap
+from repro.parallel.sharding import constrain
+
+NEG_INF = -1e30
+
+
+def init_attn_params(rng, cfg: ModelConfig, dtype) -> Dict:
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    s = d ** -0.5
+    return {
+        "wq": (jax.random.normal(k1, (d, h * dh)) * s).astype(dtype),
+        "wk": (jax.random.normal(k2, (d, kv * dh)) * s).astype(dtype),
+        "wv": (jax.random.normal(k3, (d, kv * dh)) * s).astype(dtype),
+        "wo": (jax.random.normal(k4, (h * dh, d)) * s).astype(dtype),
+    }
+
+
+def _project_qkv(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
+                 positions: jnp.ndarray):
+    b, s, _ = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = (x @ p["wq"]).reshape(b, s, h, dh)
+    k = (x @ p["wk"]).reshape(b, s, kv, dh)
+    v = (x @ p["wv"]).reshape(b, s, kv, dh)
+    angles = rope_freqs(positions, dh, cfg.rope_theta)
+    q = apply_rope(q, angles)
+    k = apply_rope(k, angles)
+    q = constrain(q, "batch", None, "model", None)
+    k = constrain(k, "batch", None, "model", None)
+    v = constrain(v, "batch", None, "model", None)
+    return q, k, v
+
+
+def blockwise_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True, window: int = 0,
+                        cap: float = 0.0, q_offset: int = 0,
+                        q_block: int = 512, kv_block: int = 1024,
+                        scale: Optional[float] = None,
+                        preferred: bool = False) -> jnp.ndarray:
+    """q (B,Sq,H,dh), k (B,Skv,KV,dh), v (B,Skv,KV,dv) → (B,Sq,H,dv).
+
+    Online softmax; dv may differ from dh (MLA)."""
+    b, sq, h, dh = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = h // kvh
+    scale = dh ** -0.5 if scale is None else scale
+    qb = min(q_block, sq)
+    kb = min(kv_block, skv)
+    nq = -(-sq // qb)
+    nk = -(-skv // kb)
+    qpad, kpad = nq * qb - sq, nk * kb - skv
+    if qpad:
+        q = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0)))
+    if kpad:
+        k = jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+    qr = q.reshape(b, nq, qb, kvh, g, dh).swapaxes(0, 1)   # (nq,B,qb,KV,G,dh)
+    kr = k.reshape(b, nk, kb, kvh, dh).swapaxes(0, 1)       # (nk,B,kb,KV,dh)
+    vr = v.reshape(b, nk, kb, kvh, dv).swapaxes(0, 1)
+
+    def q_step(qi, qblk):
+        qpos = q_offset + qi * qb + jnp.arange(qb)
+
+        def kv_step(carry, args):
+            ki, kblk, vblk = args
+            m, l, acc = carry
+            kpos = ki * kb + jnp.arange(kb)
+            if preferred:
+                s_ = jnp.einsum("bqkgd,bskd->bqkgs", qblk, kblk,
+                                preferred_element_type=jnp.float32) * scale
+            else:
+                s_ = jnp.einsum("bqkgd,bskd->bqkgs",
+                                qblk.astype(jnp.float32),
+                                kblk.astype(jnp.float32)) * scale
+            s_ = softcap(s_, cap)
+            mask = (kpos[None, :] < skv) & jnp.ones((qb, 1), bool)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window:
+                mask &= (qpos[:, None] - kpos[None, :]) < window
+            s_ = jnp.where(mask[None, :, None, None, :], s_, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s_, axis=-1))
+            p = jnp.exp(s_ - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            if preferred:
+                pv = jnp.einsum("bqkgs,bskd->bqkgd", p.astype(vblk.dtype),
+                                vblk, preferred_element_type=jnp.float32)
+            else:
+                pv = jnp.einsum("bqkgs,bskd->bqkgd", p,
+                                vblk.astype(jnp.float32))
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, qb, kvh, g), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, qb, kvh, g), jnp.float32)
+        a0 = jnp.zeros((b, qb, kvh, g, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(nk), kr, vr))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.reshape(b, qb, h, dv)
+
+    out = jax.lax.map(lambda args: q_step(*args),
+                      (jnp.arange(nq), qr))                 # (nq,B,qb,H,dv)
+    out = out.swapaxes(0, 1).reshape(b, nq * qb, h, dv)
+    return out[:, :sq].astype(q.dtype)
+
+
+def attn_train(p: Dict, x: jnp.ndarray, positions: jnp.ndarray,
+               cfg: ModelConfig, *, window: int = 0,
+               bidirectional: bool = False) -> jnp.ndarray:
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    y = blockwise_attention(q, k, v, causal=not bidirectional,
+                            window=window, cap=cfg.attn_softcap,
+                            preferred=cfg.accum_via_preferred)
+    y = constrain(y, "batch", None, "model", None)
+    return y.reshape(b, s, -1) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def quantize_kv(x: jnp.ndarray):
+    """Per-(token, head) symmetric int8: x (B,S,KV,dh) → (int8, bf16 scale)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                    keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray,
+                  dtype=jnp.bfloat16) -> jnp.ndarray:
+    return q.astype(dtype) * scale.astype(dtype)
+
+
+def init_full_cache(b: int, s_max: int, cfg: ModelConfig, dtype) -> Dict:
+    kv, dh = cfg.n_kv_heads, cfg.d_head
+    if cfg.kv_cache_dtype == "int8":
+        return {"k": jnp.zeros((b, s_max, kv, dh), jnp.int8),
+                "v": jnp.zeros((b, s_max, kv, dh), jnp.int8),
+                "k_scale": jnp.zeros((b, s_max, kv, 1), jnp.bfloat16),
+                "v_scale": jnp.zeros((b, s_max, kv, 1), jnp.bfloat16)}
+    return {"k": jnp.zeros((b, s_max, kv, dh), dtype),
+            "v": jnp.zeros((b, s_max, kv, dh), dtype)}
+
+
+def init_window_cache(b: int, window: int, cfg: ModelConfig, dtype) -> Dict:
+    kv, dh = cfg.n_kv_heads, cfg.d_head
+    return {"k": jnp.zeros((b, window, kv, dh), dtype),
+            "v": jnp.zeros((b, window, kv, dh), dtype),
+            "pos": jnp.full((window,), -1, jnp.int32)}
+
+
+def attn_prefill(p: Dict, x: jnp.ndarray, positions: jnp.ndarray,
+                 cfg: ModelConfig, *, window: int = 0,
+                 cache: Optional[Dict] = None
+                 ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Causal forward that also fills the cache (cache may be None)."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    y = blockwise_attention(q, k, v, causal=True, window=window,
+                            cap=cfg.attn_softcap,
+                            preferred=cfg.accum_via_preferred)
+    new_cache = None
+    if cache is not None:
+        if "pos" in cache:  # ring/window cache: keep last W positions
+            w = cache["k"].shape[1]
+            take = min(w, s)
+            slots = positions[-take:] % w
+            new_cache = {
+                "k": cache["k"].at[:, slots].set(k[:, -take:]),
+                "v": cache["v"].at[:, slots].set(v[:, -take:]),
+                "pos": cache["pos"].at[slots].set(positions[-take:]),
+            }
+        elif "k_scale" in cache:   # int8 cache
+            kq, ks = quantize_kv(k)
+            vq, vs = quantize_kv(v)
+            new_cache = {
+                "k": jax.lax.dynamic_update_slice(cache["k"], kq,
+                                                  (0, 0, 0, 0)),
+                "v": jax.lax.dynamic_update_slice(cache["v"], vq,
+                                                  (0, 0, 0, 0)),
+                "k_scale": jax.lax.dynamic_update_slice(
+                    cache["k_scale"], ks, (0, 0, 0, 0)),
+                "v_scale": jax.lax.dynamic_update_slice(
+                    cache["v_scale"], vs, (0, 0, 0, 0)),
+            }
+        else:
+            new_cache = {
+                "k": jax.lax.dynamic_update_slice(
+                    cache["k"], k, (0, 0, 0, 0)),
+                "v": jax.lax.dynamic_update_slice(
+                    cache["v"], v, (0, 0, 0, 0)),
+            }
+    return y.reshape(b, s, -1) @ p["wo"], new_cache
+
+
+def attn_decode(p: Dict, x: jnp.ndarray, pos: jnp.ndarray, cache: Dict,
+                cfg: ModelConfig, *, window: int = 0
+                ) -> Tuple[jnp.ndarray, Dict]:
+    """One-token decode against a full or window cache.
+
+    x (B, 1, D); pos scalar int32 (absolute position of the new token).
+    """
+    b = x.shape[0]
+    h, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    g = h // kvh
+    q = (x @ p["wq"]).reshape(b, 1, h, dh)
+    k = (x @ p["wk"]).reshape(b, 1, kvh, dh)
+    v = (x @ p["wv"]).reshape(b, 1, kvh, dh)
+    angles = rope_freqs(pos[None], dh, cfg.rope_theta)      # (1, dh/2)
+    q = apply_rope(q, angles[None])
+    k = apply_rope(k, angles[None])
+    if "pos" in cache:  # ring cache
+        w = cache["k"].shape[1]
+        slot = pos % w
+        ck = cache["k"].at[:, slot].set(k[:, 0])
+        cv = cache["v"].at[:, slot].set(v[:, 0])
+        cpos = cache["pos"].at[slot].set(pos)
+        valid = (cpos >= 0) & (cpos > pos - (window or w)) & (cpos <= pos)
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+        keys, vals, kmask = ck, cv, valid
+    elif "k_scale" in cache:   # int8 cache: quantized write, dequant read
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice(cache["k"], kq,
+                                              (0, pos, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(cache["v"], vq,
+                                              (0, pos, 0, 0)),
+            "k_scale": jax.lax.dynamic_update_slice(
+                cache["k_scale"], ks, (0, pos, 0, 0)),
+            "v_scale": jax.lax.dynamic_update_slice(
+                cache["v_scale"], vs, (0, pos, 0, 0)),
+        }
+        s_max = new_cache["k"].shape[1]
+        kmask = jnp.arange(s_max) <= pos
+        if window:
+            kmask &= jnp.arange(s_max) > pos - window
+        keys = dequantize_kv(new_cache["k"], new_cache["k_scale"], x.dtype)
+        vals = dequantize_kv(new_cache["v"], new_cache["v_scale"], x.dtype)
+    else:
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, pos, 0, 0))
+        s_max = ck.shape[1]
+        kmask = jnp.arange(s_max) <= pos
+        if window:
+            kmask &= jnp.arange(s_max) > pos - window
+        new_cache = {"k": ck, "v": cv}
+        keys, vals = ck, cv
+    from repro.models.layers import einsum_f32
+    qf = q.reshape(b, kvh, g, dh)
+    s_ = einsum_f32("bkgd,bskd->bkgs", qf, keys,
+                    cfg.accum_via_preferred) * (dh ** -0.5)
+    s_ = softcap(s_, cfg.attn_softcap)
+    s_ = jnp.where(kmask[None, None, None, :], s_, NEG_INF)
+    pattn = jax.nn.softmax(s_, axis=-1)
+    if cfg.accum_via_preferred:
+        y = jnp.einsum("bkgs,bskd->bkgd", pattn.astype(x.dtype), vals,
+                       preferred_element_type=jnp.float32)
+    else:
+        y = jnp.einsum("bkgs,bskd->bkgd", pattn,
+                       vals.astype(jnp.float32))
+    y = y.reshape(b, 1, h * dh).astype(x.dtype)
+    return y @ p["wo"], new_cache

@@ -1,0 +1,265 @@
+"""Layer composition: blocks → scanned segments → full stacks.
+
+Layers are grouped into *segments* of repeating structure (a segment step =
+one period of the block pattern) and executed with lax.scan over stacked
+parameters — one period of HLO per segment regardless of depth, which keeps
+the 512-device dry-run compile tractable for 62–81-layer archs.
+
+Segment examples:
+  dense-40L         [Segment(kinds=("full",), ffn="dense", steps=40)]
+  gemma2-26L        [Segment(kinds=("window","full"), ffn="dense", steps=13)]
+  deepseek-v3-61L   [Segment(("full",),"dense",3), Segment(("full",),"moe",58)]
+  zamba2-81L        [Segment(("ssm",)*6,"none",13,shared_attn=True),
+                     Segment(("ssm",)*3,"none",1,shared_attn=True)]
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import dtype_of, mlp, rms_norm
+from repro.parallel.sharding import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    kinds: Tuple[str, ...]       # per-position within one step
+    ffn: str                     # "dense" | "moe" | "none"
+    steps: int
+    shared_attn: bool = False    # apply the weight-shared attn block first
+    d_ff: int = 0                # dense ffn width for this segment
+
+
+def layer_plan(cfg: ModelConfig) -> List[Segment]:
+    if cfg.shared_attn_every:
+        per = cfg.shared_attn_every
+        full_steps = cfg.n_layers // per
+        rem = cfg.n_layers - full_steps * per
+        segs = [Segment(("ssm",) * per, "none", full_steps,
+                        shared_attn=True)]
+        if rem:
+            segs.append(Segment(("ssm",) * rem, "none", 1,
+                                shared_attn=True))
+        return segs
+    period = len(cfg.block_pattern)
+    assert cfg.n_layers % period == 0, (cfg.n_layers, period)
+    steps = cfg.n_layers // period
+    if cfg.moe is not None:
+        fd = cfg.moe.first_dense
+        assert period == 1, "MoE with multi-kind patterns unsupported"
+        segs = []
+        if fd:
+            segs.append(Segment(cfg.block_pattern, "dense", fd,
+                                d_ff=cfg.moe.dense_d_ff or cfg.d_ff))
+        segs.append(Segment(cfg.block_pattern, "moe", steps - fd))
+        return segs
+    ffn = "none" if cfg.d_ff == 0 else "dense"
+    return [Segment(cfg.block_pattern, ffn, steps, d_ff=cfg.d_ff)]
+
+
+# ---------------------------------------------------------------------------
+# single block
+# ---------------------------------------------------------------------------
+
+def init_block_params(rng, cfg: ModelConfig, kind: str, ffn: str,
+                      d_ff: int) -> Dict:
+    dtype = dtype_of(cfg.param_dtype)
+    d = cfg.d_model
+    keys = jax.random.split(rng, 4)
+    p: Dict = {"norm1": jnp.zeros((d,), dtype)}
+    if kind == "ssm":
+        p["ssm"] = ssm_mod.init_ssm_params(keys[0], cfg, dtype)
+    elif cfg.mla is not None:
+        p["attn"] = mla_mod.init_mla_params(keys[0], cfg, dtype)
+    else:
+        p["attn"] = attn.init_attn_params(keys[0], cfg, dtype)
+    if cfg.use_post_norm:
+        p["post_norm1"] = jnp.zeros((d,), dtype)
+    if ffn == "dense":
+        s = d ** -0.5
+        p["norm2"] = jnp.zeros((d,), dtype)
+        p["mlp"] = {
+            "w1": (jax.random.normal(keys[1], (d, d_ff)) * s).astype(dtype),
+            "w3": (jax.random.normal(keys[2], (d, d_ff)) * s).astype(dtype),
+            "w2": (jax.random.normal(keys[3], (d_ff, d))
+                   * d_ff ** -0.5).astype(dtype),
+        }
+        if cfg.use_post_norm:
+            p["post_norm2"] = jnp.zeros((d,), dtype)
+    elif ffn == "moe":
+        p["norm2"] = jnp.zeros((d,), dtype)
+        p["moe"] = moe_mod.init_moe_params(keys[1], cfg, dtype)
+        if cfg.use_post_norm:
+            p["post_norm2"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def block_forward(bp: Dict, x: jnp.ndarray, cfg: ModelConfig, kind: str,
+                  ffn: str, positions: jnp.ndarray, *,
+                  mode: str = "train", cache: Optional[Dict] = None,
+                  pos: Optional[jnp.ndarray] = None,
+                  bidirectional: bool = False,
+                  window_override: Optional[int] = None
+                  ) -> Tuple[jnp.ndarray, Optional[Dict], jnp.ndarray]:
+    """One block. Returns (x, new_cache_or_state, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, bp["norm1"])
+    window = cfg.window if kind == "window" else 0
+    if window_override is not None:
+        window = window_override
+    new_cache = None
+    if kind == "ssm":
+        if mode == "decode":
+            mix, new_cache = ssm_mod.ssm_decode(bp["ssm"], h, cache, cfg)
+        else:
+            mix, new_cache = ssm_mod.ssm_forward(
+                bp["ssm"], h, cfg, state=None,
+                return_state=(mode == "prefill"))
+    elif cfg.mla is not None:
+        if mode == "train":
+            mix = mla_mod.mla_train(bp["attn"], h, positions, cfg)
+        elif mode == "prefill":
+            mix, new_cache = mla_mod.mla_prefill(bp["attn"], h, positions,
+                                                 cfg, cache)
+        else:
+            mix, new_cache = mla_mod.mla_decode(bp["attn"], h, pos, cache,
+                                                cfg)
+    else:
+        if mode == "train":
+            mix = attn.attn_train(bp["attn"], h, positions, cfg,
+                                  window=window,
+                                  bidirectional=bidirectional)
+        elif mode == "prefill":
+            mix, new_cache = attn.attn_prefill(bp["attn"], h, positions,
+                                               cfg, window=window,
+                                               cache=cache)
+        else:
+            mix, new_cache = attn.attn_decode(bp["attn"], h, pos, cache,
+                                              cfg, window=window)
+    if cfg.use_post_norm:
+        mix = rms_norm(mix, bp["post_norm1"])
+    x = x + mix
+    if ffn == "dense":
+        h2 = rms_norm(x, bp["norm2"])
+        out = mlp(h2, bp["mlp"]["w1"], bp["mlp"]["w3"], bp["mlp"]["w2"],
+                  cfg.act)
+        if cfg.use_post_norm:
+            out = rms_norm(out, bp["post_norm2"])
+        x = x + out
+    elif ffn == "moe":
+        h2 = rms_norm(x, bp["norm2"])
+        out, aux = moe_mod.moe_forward(bp["moe"], h2, cfg)
+        if cfg.use_post_norm:
+            out = rms_norm(out, bp["post_norm2"])
+        x = x + out
+    x = constrain(x, "batch", None, None)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# cache initializers
+# ---------------------------------------------------------------------------
+
+def init_block_cache(cfg: ModelConfig, kind: str, b: int, s_max: int,
+                     window_override: Optional[int] = None):
+    dtype = dtype_of(cfg.compute_dtype)
+    if kind == "ssm":
+        return ssm_mod.init_ssm_state(b, cfg, dtype)
+    if cfg.mla is not None:
+        return mla_mod.init_mla_cache(b, s_max, cfg, dtype)
+    window = cfg.window if kind == "window" else 0
+    if window_override is not None:
+        window = window_override
+    if window and window < s_max:
+        return attn.init_window_cache(b, window, cfg, dtype)
+    return attn.init_full_cache(b, s_max, cfg, dtype)
+
+
+# ---------------------------------------------------------------------------
+# segments (scanned stacks)
+# ---------------------------------------------------------------------------
+
+def init_segment_params(rng, cfg: ModelConfig, seg: Segment) -> Dict:
+    """Stacked params: each leaf gains a leading (steps,) axis."""
+    def one_step(r):
+        ks = jax.random.split(r, len(seg.kinds))
+        return {f"pos{i}": init_block_params(ks[i], cfg, kind, seg.ffn,
+                                             seg.d_ff)
+                for i, kind in enumerate(seg.kinds)}
+
+    rngs = jax.random.split(rng, seg.steps)
+    per_step = [one_step(r) for r in rngs]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *per_step)
+
+
+def _remat_wrap(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def segment_forward(sp: Dict, x: jnp.ndarray, cfg: ModelConfig,
+                    seg: Segment, positions: jnp.ndarray, *,
+                    mode: str = "train", caches=None,
+                    pos: Optional[jnp.ndarray] = None,
+                    shared_params: Optional[Dict] = None,
+                    shared_caches=None, bidirectional: bool = False,
+                    shared_window: Optional[int] = None):
+    """Scan over the segment's steps.
+
+    caches / shared_caches carry a leading (steps,) axis; the scan emits the
+    updated stacks.  Returns (x, new_caches, new_shared_caches, aux_sum).
+    """
+
+    def step_fn(carry, xs):
+        xc, aux = carry
+        step_params, step_cache, shared_cache = xs
+        if seg.shared_attn and shared_params is not None:
+            xc, new_shared, a0 = block_forward(
+                shared_params, xc, cfg, "full", "dense", positions,
+                mode=mode, cache=shared_cache, pos=pos,
+                bidirectional=bidirectional, window_override=shared_window)
+            aux = aux + a0
+        else:
+            new_shared = shared_cache
+        new_step_cache = []
+        for i, kind in enumerate(seg.kinds):
+            bp = step_params[f"pos{i}"]
+            c = None if step_cache is None else step_cache[f"pos{i}"]
+            xc, nc, a = block_forward(bp, xc, cfg, kind, seg.ffn, positions,
+                                      mode=mode, cache=c, pos=pos,
+                                      bidirectional=bidirectional)
+            aux = aux + a
+            new_step_cache.append(nc)
+        out_cache = (None if step_cache is None else
+                     {f"pos{i}": c for i, c in enumerate(new_step_cache)})
+        return (xc, aux), (out_cache, new_shared)
+
+    body = _remat_wrap(step_fn, cfg) if mode == "train" else step_fn
+    aux0 = jnp.zeros((), jnp.float32)
+    xs = (sp, caches, shared_caches)
+    if caches is None and shared_caches is None:
+        # scan requires concrete xs; wrap Nones as per-step dummies
+        xs = (sp, jnp.zeros((seg.steps,), jnp.int8),
+              jnp.zeros((seg.steps,), jnp.int8))
+
+        def body2(carry, z):
+            step_params, _, _ = z
+            return body(carry, (step_params, None, None))[0], None
+
+        (x, aux), _ = jax.lax.scan(body2, (x, aux0), xs)
+        return x, None, None, aux
+    (x, aux), (new_caches, new_shared) = jax.lax.scan(body, (x, aux0), xs)
+    return x, new_caches, new_shared, aux

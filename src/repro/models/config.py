@@ -1,0 +1,180 @@
+"""Model configuration for the unified architecture family."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int
+    n_shared: int = 0            # shared (always-on) experts
+    first_dense: int = 0         # leading dense layers (DeepSeek-V3: 3)
+    dense_d_ff: int = 0          # d_ff of those dense layers
+    capacity_factor: float = 1.25
+    router_noise: float = 0.0
+    aux_loss_weight: float = 0.001
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    expand: int = 2
+    head_dim: int = 64
+    d_conv: int = 4
+    chunk: int = 256
+    n_groups: int = 1
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | vlm | audio | ssm | moe | hybrid
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: int = 0              # default d_model // n_heads
+
+    # layer pattern: cycled over layers. entries: "full" | "window" | "ssm"
+    block_pattern: Tuple[str, ...] = ("full",)
+    window: int = 4096
+    # hybrid (Zamba2): a weight-shared full-attention block applied every
+    # shared_attn_every SSM layers
+    shared_attn_every: int = 0
+
+    attn_softcap: float = 0.0
+    final_softcap: float = 0.0
+    rope_theta: float = 10_000.0
+    act: str = "silu"            # silu | gelu
+    use_post_norm: bool = False  # gemma2 sandwich norms
+    encoder_only: bool = False
+    tie_embeddings: bool = True
+    embed_scale: bool = False    # gemma2 scales embeddings by sqrt(d)
+
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    mtp: bool = False            # DeepSeek-V3 multi-token-prediction head
+
+    # modality frontends are stubs: input_specs() provides embeddings
+    frontend: str = "none"       # none | vision | audio
+    n_frontend_tokens: int = 0   # vision: image tokens prepended
+
+    # numerics / memory policy
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    remat: str = "full"          # full | dots | none
+    loss_chunk: int = 512        # vocab-logit sequence chunking
+    # §Perf lever: keep matmul inputs in bf16 and accumulate in f32 via
+    # preferred_element_type instead of casting inputs to f32 (the naive
+    # baseline materializes f32 copies of large operands, e.g. KV caches)
+    accum_via_preferred: bool = False
+    # §Perf lever: explicit shard_map MoE — each model shard runs its local
+    # experts over its (model-replicated) tokens and the combine is one
+    # psum, instead of GSPMD lowering the capacity scatter to a replicated
+    # all-reduce of the (E, C, D) dispatch buffer
+    moe_shmap: bool = False
+    # §Perf lever (decode): int8 full-attention KV cache with per-(token,
+    # head) scales — halves the cache-read bytes that dominate decode cells
+    kv_cache_dtype: str = "bfloat16"      # "bfloat16" | "int8"
+
+    def __post_init__(self):
+        if self.d_head == 0 and self.n_heads > 0:
+            object.__setattr__(self, "d_head", self.d_model // self.n_heads)
+
+    @property
+    def head_groups(self) -> int:
+        return max(1, self.n_heads // max(1, self.n_kv_heads))
+
+    def layer_kind(self, i: int) -> str:
+        return self.block_pattern[i % len(self.block_pattern)]
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        return tuple(self.layer_kind(i) for i in range(self.n_layers))
+
+    def is_sub_quadratic(self) -> bool:
+        """True if long-context decode is tractable: no unbounded-cache
+        full-attention layers (SSM, window-only, or hybrid w/ window)."""
+        kinds = set(self.layer_kinds())
+        if self.shared_attn_every:   # hybrid: shared attn gets windowed cache
+            return "full" not in kinds
+        return "full" not in kinds
+
+    def param_count(self) -> int:
+        """Approximate parameter count (reported in the roofline table)."""
+        d, v = self.d_model, self.vocab_size
+        total = v * d                       # embedding (tied head)
+        if not self.tie_embeddings:
+            total += v * d
+        kinds = self.layer_kinds()
+        for i, kind in enumerate(kinds):
+            total += 2 * d                  # norms
+            if kind == "ssm":
+                s = self.ssm
+                di = s.d_inner(d)
+                nh = s.n_heads(d)
+                g = s.n_groups
+                total += d * (2 * di + 2 * g * s.d_state + nh)  # in_proj
+                total += s.d_conv * (di + 2 * g * s.d_state)    # conv
+                total += 2 * nh + nh                            # A, D, dt_bias
+                total += di * d                                 # out_proj
+                continue
+            # attention
+            if self.mla is not None:
+                m = self.mla
+                qd = m.qk_nope_dim + m.qk_rope_dim
+                total += d * m.q_lora_rank + m.q_lora_rank * self.n_heads * qd
+                total += d * (m.kv_lora_rank + m.qk_rope_dim)
+                total += m.kv_lora_rank * self.n_heads * (m.qk_nope_dim
+                                                          + m.v_head_dim)
+                total += self.n_heads * m.v_head_dim * d
+            else:
+                total += d * self.n_heads * self.d_head          # wq
+                total += 2 * d * self.n_kv_heads * self.d_head   # wk, wv
+                total += self.n_heads * self.d_head * d          # wo
+            # ffn / moe
+            if self.moe is not None and i >= self.moe.first_dense:
+                e = self.moe
+                total += d * e.n_experts                        # router
+                total += (e.n_experts + e.n_shared) * 3 * d * e.d_expert
+            else:
+                ff = (self.moe.dense_d_ff if self.moe is not None
+                      else self.d_ff)
+                total += 3 * d * ff
+        if self.shared_attn_every:
+            # one weight-shared attention+mlp block
+            total += d * self.n_heads * self.d_head * 2 \
+                + 2 * d * self.n_kv_heads * self.d_head + 3 * d * self.d_ff
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE: top_k + shared only)."""
+        if self.moe is None:
+            return self.param_count()
+        e = self.moe
+        total = self.param_count()
+        moe_layers = self.n_layers - e.first_dense
+        all_routed = moe_layers * e.n_experts * 3 * self.d_model * e.d_expert
+        act_routed = moe_layers * e.top_k * 3 * self.d_model * e.d_expert
+        return int(total - all_routed + act_routed)

@@ -1,0 +1,121 @@
+"""Shared layers: norms, rope, MLP, embeddings, losses."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray,
+             eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def rope_freqs(positions: jnp.ndarray, dim: int,
+               theta: float) -> jnp.ndarray:
+    """positions (...,) int32 → angles (..., dim//2) float32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    return positions.astype(jnp.float32)[..., None] * inv
+
+
+def apply_rope(x: jnp.ndarray, angles: jnp.ndarray) -> jnp.ndarray:
+    """x (..., S, H, dh); angles (..., S, dh//2)."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    c = jnp.cos(angles)[..., None, :]
+    s = jnp.sin(angles)[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c],
+                           axis=-1).astype(x.dtype)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+def einsum_f32(subscripts: str, a: jnp.ndarray, b: jnp.ndarray,
+               preferred: bool) -> jnp.ndarray:
+    """f32-result einsum; ``preferred`` keeps bf16 inputs on the MXU with
+    f32 accumulation instead of materializing f32 operand copies."""
+    if preferred:
+        return jnp.einsum(subscripts, a, b,
+                          preferred_element_type=jnp.float32)
+    return jnp.einsum(subscripts, a.astype(jnp.float32),
+                      b.astype(jnp.float32))
+
+
+def mlp(x: jnp.ndarray, w1: jnp.ndarray, w3: jnp.ndarray, w2: jnp.ndarray,
+        act: str) -> jnp.ndarray:
+    """Gated MLP: w2( act(x·w1) * (x·w3) )."""
+    h = act_fn(act)(x @ w1) * (x @ w3)
+    return h @ w2
+
+
+def embed(tokens: jnp.ndarray, table: jnp.ndarray,
+          config: ModelConfig) -> jnp.ndarray:
+    x = jnp.take(table, tokens, axis=0).astype(
+        dtype_of(config.compute_dtype))
+    if config.embed_scale:
+        x = x * jnp.asarray(config.d_model ** 0.5, x.dtype)
+    return x
+
+
+def chunked_cross_entropy(h: jnp.ndarray, table: jnp.ndarray,
+                          labels: jnp.ndarray, config: ModelConfig,
+                          mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean CE without materializing (B, S, V) logits.
+
+    h (B, S, D); labels (B, S); logits computed per sequence chunk in fp32
+    with optional final softcap (gemma2).  256k-vocab × 1M-token cells would
+    otherwise need TB-scale logit buffers.
+    """
+    b, s, d = h.shape
+    chunk = min(config.loss_chunk, s)
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+        if mask is not None:
+            mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    hc = h.reshape(b, n_chunks, chunk, d).swapaxes(0, 1)
+    lc = labels.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+    if mask is None:
+        mc = (lc >= 0)
+    else:
+        mc = mask.reshape(b, n_chunks, chunk).swapaxes(0, 1) & (lc >= 0)
+
+    def one(args):
+        hi, li, mi = args
+        logits = hi.astype(jnp.float32) @ table.T.astype(jnp.float32)
+        logits = softcap(logits, config.final_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(
+            logits, jnp.maximum(li, 0)[..., None], axis=-1)[..., 0]
+        return jnp.sum(jnp.where(mi, lse - ll, 0.0)), jnp.sum(mi)
+
+    losses, counts = jax.lax.map(one, (hc, lc, mc))
+    return jnp.sum(losses) / jnp.maximum(jnp.sum(counts), 1)
+
+
+def final_logits(h: jnp.ndarray, table: jnp.ndarray,
+                 config: ModelConfig) -> jnp.ndarray:
+    """Decode-time logits (B, 1, V) — tiny, full vocab is fine."""
+    logits = h.astype(jnp.float32) @ table.T.astype(jnp.float32)
+    return softcap(logits, config.final_softcap)

@@ -1,0 +1,147 @@
+"""Multi-head Latent Attention (DeepSeek-V3).
+
+Train/prefill run the expanded form through blockwise attention; decode uses
+the *absorbed* form against the compressed cache — per-token cache is only
+(kv_lora_rank + qk_rope_dim) elements, the feature that makes V3's 128-head
+attention serveable.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import NEG_INF, blockwise_attention
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, rms_norm, rope_freqs
+from repro.parallel.sharding import constrain
+
+
+def init_mla_params(rng, cfg: ModelConfig, dtype) -> Dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qd = m.qk_nope_dim + m.qk_rope_dim
+    keys = jax.random.split(rng, 5)
+    s = d ** -0.5
+    return {
+        "wq_a": (jax.random.normal(keys[0], (d, m.q_lora_rank)) * s
+                 ).astype(dtype),
+        "q_norm": jnp.zeros((m.q_lora_rank,), dtype),
+        "wq_b": (jax.random.normal(keys[1], (m.q_lora_rank, h * qd))
+                 * m.q_lora_rank ** -0.5).astype(dtype),
+        "wkv_a": (jax.random.normal(
+            keys[2], (d, m.kv_lora_rank + m.qk_rope_dim)) * s).astype(dtype),
+        "kv_norm": jnp.zeros((m.kv_lora_rank,), dtype),
+        "wkv_b": (jax.random.normal(
+            keys[3], (m.kv_lora_rank, h * (m.qk_nope_dim + m.v_head_dim)))
+            * m.kv_lora_rank ** -0.5).astype(dtype),
+        "wo": (jax.random.normal(keys[4], (h * m.v_head_dim, d))
+               * (h * m.v_head_dim) ** -0.5).astype(dtype),
+    }
+
+
+def _queries(p, x, cfg, positions):
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    cq = rms_norm(x @ p["wq_a"], p["q_norm"])
+    q = (cq @ p["wq_b"]).reshape(b, s, h, m.qk_nope_dim + m.qk_rope_dim)
+    qn, qr = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    angles = rope_freqs(positions, m.qk_rope_dim, cfg.rope_theta)
+    return qn, apply_rope(qr, angles)
+
+
+def _latents(p, x, cfg, positions):
+    m = cfg.mla
+    b, s, _ = x.shape
+    ckv_full = x @ p["wkv_a"]
+    ckv = rms_norm(ckv_full[..., :m.kv_lora_rank], p["kv_norm"])
+    kr = ckv_full[..., m.kv_lora_rank:].reshape(b, s, 1, m.qk_rope_dim)
+    angles = rope_freqs(positions, m.qk_rope_dim, cfg.rope_theta)
+    return ckv, apply_rope(kr, angles)
+
+
+def mla_train(p: Dict, x: jnp.ndarray, positions: jnp.ndarray,
+              cfg: ModelConfig) -> jnp.ndarray:
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    qn, qr = _queries(p, x, cfg, positions)
+    ckv, kr = _latents(p, x, cfg, positions)
+    kv = (ckv @ p["wkv_b"]).reshape(b, s, h, m.qk_nope_dim + m.v_head_dim)
+    kn, v = kv[..., :m.qk_nope_dim], kv[..., m.qk_nope_dim:]
+    q = jnp.concatenate([qn, qr], axis=-1)
+    k = jnp.concatenate([kn, jnp.broadcast_to(
+        kr, (b, s, h, m.qk_rope_dim))], axis=-1)
+    q = constrain(q, "batch", None, "model", None)
+    k = constrain(k, "batch", None, "model", None)
+    y = blockwise_attention(q, k, v, causal=True,
+                            scale=(m.qk_nope_dim + m.qk_rope_dim) ** -0.5,
+                            preferred=cfg.accum_via_preferred)
+    return y.reshape(b, s, -1) @ p["wo"]
+
+
+def init_mla_cache(b: int, s_max: int, cfg: ModelConfig, dtype) -> Dict:
+    m = cfg.mla
+    return {"ckv": jnp.zeros((b, s_max, m.kv_lora_rank), dtype),
+            "krope": jnp.zeros((b, s_max, m.qk_rope_dim), dtype)}
+
+
+def mla_prefill(p: Dict, x: jnp.ndarray, positions: jnp.ndarray,
+                cfg: ModelConfig, cache: Optional[Dict] = None
+                ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    y = mla_train(p, x, positions, cfg)
+    new_cache = None
+    if cache is not None:
+        ckv, kr = _latents(p, x, cfg, positions)
+        new_cache = {
+            "ckv": jax.lax.dynamic_update_slice(
+                cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, 0, 0)),
+            "krope": jax.lax.dynamic_update_slice(
+                cache["krope"], kr[:, :, 0].astype(cache["krope"].dtype),
+                (0, 0, 0)),
+        }
+    return y, new_cache
+
+
+def mla_decode(p: Dict, x: jnp.ndarray, pos: jnp.ndarray, cache: Dict,
+               cfg: ModelConfig) -> Tuple[jnp.ndarray, Dict]:
+    """Absorbed decode: scores/context via the compressed latent cache."""
+    m = cfg.mla
+    b = x.shape[0]
+    h = cfg.n_heads
+    qn, qr = _queries(p, x, cfg, pos[None])          # (B,1,H,·)
+    ckv_new, kr_new = _latents(p, x, cfg, pos[None])
+    cache = {
+        "ckv": jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv_new.astype(cache["ckv"].dtype), (0, pos, 0)),
+        "krope": jax.lax.dynamic_update_slice(
+            cache["krope"], kr_new[:, :, 0].astype(cache["krope"].dtype),
+            (0, pos, 0)),
+    }
+    from repro.models.layers import einsum_f32
+    pref = cfg.accum_via_preferred
+    wkv_b = p["wkv_b"].reshape(m.kv_lora_rank, h,
+                               m.qk_nope_dim + m.v_head_dim)
+    w_kn = wkv_b[..., :m.qk_nope_dim]                # (r, H, dn)
+    w_v = wkv_b[..., m.qk_nope_dim:]                 # (r, H, dv)
+    q_abs = einsum_f32("bqhd,rhd->bqhr", qn, w_kn, pref)
+    ckv, krope = cache["ckv"], cache["krope"]
+    if not pref:
+        ckv = ckv.astype(jnp.float32)
+        krope = krope.astype(jnp.float32)
+    s_ = (einsum_f32("bqhr,bsr->bqhs", q_abs.astype(
+        ckv.dtype if pref else jnp.float32), ckv, pref)
+        + einsum_f32("bqhd,bsd->bqhs", qr, krope, pref))
+    s_ = s_ * (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    mask = jnp.arange(cache["ckv"].shape[1]) <= pos
+    s_ = jnp.where(mask[None, None, None, :], s_, NEG_INF)
+    attn = jax.nn.softmax(s_, axis=-1)
+    ctx = einsum_f32("bqhs,bsr->bqhr",
+                     attn.astype(ckv.dtype) if pref else attn, ckv, pref)
+    y = einsum_f32("bqhr,rhd->bqhd",
+                   ctx.astype(w_v.dtype) if pref else ctx, w_v, pref)
+    y = y.reshape(b, 1, h * m.v_head_dim).astype(x.dtype)
+    return y @ p["wo"], cache

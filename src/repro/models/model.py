@@ -1,0 +1,181 @@
+"""Model facade: init / train_loss / prefill / decode_step for all families.
+
+Batch contracts (see configs.shapes.input_specs):
+  LM:     {"tokens": (B,S) i32, "labels": (B,S) i32}
+  VLM:    + {"img_embeds": (B, n_img, D) compute-dtype}; tokens fill S-n_img
+  audio:  {"frames": (B,S,D), "labels": (B,S) i32, "mask": (B,S) bool}
+Decode:   token (B,1) i32, pos () i32, caches pytree (stacked per segment).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.blocks import (Segment, block_forward, init_block_cache,
+                                 init_block_params, init_segment_params,
+                                 layer_plan, segment_forward)
+from repro.models.config import ModelConfig
+from repro.models.layers import (chunked_cross_entropy, dtype_of, embed,
+                                 final_logits, rms_norm)
+from repro.parallel.sharding import constrain
+
+MTP_WEIGHT = 0.1
+SHARED_ATTN_DECODE_WINDOW = 4096   # hybrid long-context cache bound
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.segments: List[Segment] = layer_plan(cfg)
+
+    # -- init -------------------------------------------------------------
+
+    def init(self, rng) -> Dict:
+        cfg = self.cfg
+        dtype = dtype_of(cfg.param_dtype)
+        keys = jax.random.split(rng, len(self.segments) + 4)
+        params: Dict = {
+            "embed": (jax.random.normal(
+                keys[0], (cfg.vocab_size, cfg.d_model))
+                * cfg.d_model ** -0.5).astype(dtype),
+            "final_norm": jnp.zeros((cfg.d_model,), dtype),
+            "segments": [init_segment_params(keys[i + 1], cfg, seg)
+                         for i, seg in enumerate(self.segments)],
+        }
+        if cfg.shared_attn_every:
+            params["shared_attn"] = init_block_params(
+                keys[-3], cfg, "full", "dense", cfg.d_ff)
+        if cfg.mtp:
+            params["mtp"] = init_block_params(
+                keys[-2], cfg, "full",
+                "moe" if cfg.moe is not None else "dense",
+                cfg.d_ff)
+            params["mtp_norm"] = jnp.zeros((cfg.d_model,), dtype)
+        return params
+
+    # -- shared forward ----------------------------------------------------------
+
+    def _inputs(self, params: Dict, batch: Dict) -> jnp.ndarray:
+        cfg = self.cfg
+        if cfg.frontend == "audio":
+            return batch["frames"].astype(dtype_of(cfg.compute_dtype))
+        x = embed(batch["tokens"], params["embed"], cfg)
+        if cfg.frontend == "vision":
+            img = batch["img_embeds"].astype(x.dtype)
+            x = jnp.concatenate([img, x], axis=1)
+        return constrain(x, "batch", None, None)
+
+    def _backbone(self, params: Dict, x: jnp.ndarray, *, mode: str,
+                  caches=None, pos=None):
+        cfg = self.cfg
+        s = x.shape[1]
+        positions = (jnp.arange(s, dtype=jnp.int32) if mode != "decode"
+                     else None)
+        aux_total = jnp.zeros((), jnp.float32)
+        new_caches = {"segments": [], "shared": []}
+        shared_params = params.get("shared_attn")
+        shared_window = (SHARED_ATTN_DECODE_WINDOW
+                         if mode != "train" else None)
+        for i, seg in enumerate(self.segments):
+            seg_cache = None if caches is None else caches["segments"][i]
+            sh_cache = None if caches is None else caches["shared"][i]
+            x, nc, nsh, aux = segment_forward(
+                params["segments"][i], x, cfg, seg, positions, mode=mode,
+                caches=seg_cache, pos=pos, shared_params=shared_params,
+                shared_caches=sh_cache, bidirectional=cfg.encoder_only,
+                shared_window=shared_window)
+            aux_total = aux_total + aux
+            new_caches["segments"].append(nc)
+            new_caches["shared"].append(nsh)
+        h = rms_norm(x, params["final_norm"])
+        return h, (new_caches if caches is not None else None), aux_total
+
+    # -- training ------------------------------------------------------------------
+
+    def train_loss(self, params: Dict, batch: Dict
+                   ) -> Tuple[jnp.ndarray, Dict]:
+        cfg = self.cfg
+        x = self._inputs(params, batch)
+        h, _, aux = self._backbone(params, x, mode="train")
+        labels = batch["labels"]
+        mask = batch.get("mask")
+        if cfg.frontend == "vision":
+            # image positions carry no next-token loss
+            n_img = cfg.n_frontend_tokens
+            pad = jnp.full((labels.shape[0], n_img), -1, labels.dtype)
+            labels = jnp.concatenate([pad, labels], axis=1)
+        loss = chunked_cross_entropy(h, params["embed"], labels, cfg,
+                                     mask=mask)
+        metrics = {"ce_loss": loss, "aux_loss": aux}
+        if cfg.mtp:
+            # MTP: predict t+2 from h_t + emb(t+1)  (one extra block)
+            emb_next = embed(batch["tokens"], params["embed"], cfg)
+            h_in = rms_norm(h, params["mtp_norm"]) \
+                + jnp.roll(emb_next, -1, axis=1)
+            positions = jnp.arange(h.shape[1], dtype=jnp.int32)
+            h2, _, aux2 = block_forward(
+                params["mtp"], h_in, cfg, "full",
+                "moe" if cfg.moe is not None else "dense", positions,
+                mode="train")
+            mtp_labels = jnp.roll(labels, -1, axis=1).at[:, -1].set(-1)
+            mtp_loss = chunked_cross_entropy(h2, params["embed"],
+                                             mtp_labels, cfg)
+            metrics["mtp_loss"] = mtp_loss
+            loss = loss + MTP_WEIGHT * mtp_loss
+            aux = aux + aux2
+        total = loss + aux
+        metrics["loss"] = total
+        return total, metrics
+
+    # -- serving ---------------------------------------------------------------------
+
+    def init_caches(self, b: int, s_max: int) -> Dict:
+        cfg = self.cfg
+        caches = {"segments": [], "shared": []}
+        for seg in self.segments:
+            def stack(tree):
+                return jax.tree.map(
+                    lambda a: jnp.zeros((seg.steps,) + a.shape, a.dtype),
+                    tree)
+
+            step_cache = {
+                f"pos{i}": init_block_cache(cfg, kind, b, s_max)
+                for i, kind in enumerate(seg.kinds)}
+            caches["segments"].append(stack(step_cache))
+            if seg.shared_attn:
+                sh = init_block_cache(
+                    cfg, "full", b, s_max,
+                    window_override=SHARED_ATTN_DECODE_WINDOW)
+                caches["shared"].append(stack(sh))
+            else:
+                caches["shared"].append(None)
+        return caches
+
+    def encode(self, params: Dict, batch: Dict) -> jnp.ndarray:
+        """Encoder forward (no cache) — prefill analogue for encoder-only
+        archs and the backbone of the prefill dry-run cells."""
+        x = self._inputs(params, batch)
+        h, _, _ = self._backbone(params, x, mode="train")
+        return h
+
+    def prefill(self, params: Dict, batch: Dict, caches: Dict
+                ) -> Tuple[jnp.ndarray, Dict]:
+        x = self._inputs(params, batch)
+        h, new_caches, _ = self._backbone(params, x, mode="prefill",
+                                          caches=caches)
+        logits = final_logits(h[:, -1:], params["embed"], self.cfg)
+        return logits[:, 0], new_caches
+
+    def decode_step(self, params: Dict, token: jnp.ndarray,
+                    pos: jnp.ndarray, caches: Dict
+                    ) -> Tuple[jnp.ndarray, Dict]:
+        if self.cfg.encoder_only:
+            raise ValueError("encoder-only archs have no decode step")
+        x = embed(token, params["embed"], self.cfg)
+        h, new_caches, _ = self._backbone(params, x, mode="decode",
+                                          caches=caches, pos=pos)
+        logits = final_logits(h, params["embed"], self.cfg)
+        return logits[:, 0], new_caches

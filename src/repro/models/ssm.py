@@ -1,0 +1,196 @@
+"""Mamba2 (SSD — state-space duality) blocks.
+
+Training/prefill use the chunked SSD algorithm: within a chunk the dual
+(quadratic) form runs as batched einsums; across chunks a lax.scan carries
+the (H, P, N) state — linear in sequence length, which is what makes the
+long_500k cells tractable.  Decode is the O(1) recurrent update.
+
+Layout: d_inner = expand·d_model channels split into H heads of P=head_dim;
+B/C are shared across heads per group (n_groups=1 here, like Mamba2-2.7B).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import rms_norm
+from repro.parallel.sharding import constrain
+
+
+def init_ssm_params(rng, cfg: ModelConfig, dtype) -> Dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    conv_ch = di + 2 * s.n_groups * s.d_state
+    keys = jax.random.split(rng, 4)
+    return {
+        "in_proj": (jax.random.normal(
+            keys[0], (d, 2 * di + 2 * s.n_groups * s.d_state + nh))
+            * d ** -0.5).astype(dtype),
+        "conv": (jax.random.normal(keys[1], (s.d_conv, conv_ch))
+                 * s.d_conv ** -0.5).astype(dtype),
+        "a_log": jnp.zeros((nh,), jnp.float32),      # A = -exp(a_log) ≈ -1
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "gate_norm": jnp.zeros((di,), dtype),
+        "out_proj": (jax.random.normal(keys[3], (di, d))
+                     * di ** -0.5).astype(dtype),
+    }
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv1d: xbc (B,S,C), w (K,C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(k):
+        out = out + pad[:, i:i + xbc.shape[1]] * w[i]
+    return jax.nn.silu(out)
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
+                bb: jnp.ndarray, cc: jnp.ndarray, chunk: int,
+                init_state: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SSD over one sequence batch.
+
+    x  (B,S,H,P)   dt (B,S,H) post-softplus   a (H,) negative
+    bb/cc (B,S,N)  (single group)
+    → (y (B,S,H,P), final_state (B,H,P,N))
+    """
+    b, s, h, p = x.shape
+    n = bb.shape[-1]
+    q = min(chunk, s)
+    nc = -(-s // q)
+    pad = nc * q - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bb = jnp.pad(bb, ((0, 0), (0, pad), (0, 0)))
+        cc = jnp.pad(cc, ((0, 0), (0, pad), (0, 0)))
+    xc = x.reshape(b, nc, q, h, p).swapaxes(0, 1)       # (nc,B,q,H,P)
+    dtc = dt.reshape(b, nc, q, h).swapaxes(0, 1)
+    bc = bb.reshape(b, nc, q, n).swapaxes(0, 1)
+    cchunk = cc.reshape(b, nc, q, n).swapaxes(0, 1)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+
+    def step(state, args):
+        xq, dtq, bq, cq = args                          # (B,q,·)
+        da = dtq * a[None, None, :]                     # (B,q,H) ≤ 0
+        seg = jnp.cumsum(da, axis=1)                    # (B,q,H)
+        total = seg[:, -1]                              # (B,H)
+        # intra-chunk (dual/quadratic form)
+        ldecay = jnp.exp(seg[:, :, None, :] - seg[:, None, :, :])  # (B,i,j,H)
+        ldecay = jnp.where(tri[None, :, :, None], ldecay, 0.0)
+        cbt = jnp.einsum("bin,bjn->bij", cq, bq)        # (B,i,j)
+        dtx = dtq[..., None] * xq                       # (B,q,H,P)
+        y_intra = jnp.einsum("bij,bijh,bjhp->bihp", cbt, ldecay,
+                             dtx.astype(jnp.float32))
+        # inter-chunk via carried state
+        y_inter = jnp.einsum("bin,bhpn,bih->bihp", cq, state,
+                             jnp.exp(seg))
+        # local end-state and carry update
+        w = jnp.exp(total[:, None] - seg) * dtq         # (B,q,H)
+        s_local = jnp.einsum("bqn,bqh,bqhp->bhpn", bq, w,
+                             xq.astype(jnp.float32))
+        new_state = jnp.exp(total)[..., None, None] * state + s_local
+        return new_state, (y_intra + y_inter).astype(x.dtype)
+
+    state0 = (init_state.astype(jnp.float32) if init_state is not None
+              else jnp.zeros((b, h, p, n), jnp.float32))
+    final, ys = jax.lax.scan(
+        step, state0,
+        (xc.astype(jnp.float32), dtc.astype(jnp.float32),
+         bc.astype(jnp.float32), cchunk.astype(jnp.float32)))
+    y = ys.swapaxes(0, 1).reshape(b, nc * q, h, p)[:, :s]
+    return y, final
+
+
+def _split_proj(proj: jnp.ndarray, cfg: ModelConfig):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    gn = s.n_groups * s.d_state
+    z = proj[..., :di]
+    xbc = proj[..., di:di + di + 2 * gn]
+    dt = proj[..., di + di + 2 * gn:]
+    return z, xbc, dt
+
+
+def init_ssm_state(b: int, cfg: ModelConfig, dtype) -> Dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    conv_ch = di + 2 * s.n_groups * s.d_state
+    return {
+        "conv": jnp.zeros((b, s.d_conv - 1, conv_ch), dtype),
+        "ssd": jnp.zeros((b, s.n_heads(d), s.head_dim, s.d_state),
+                         jnp.float32),
+    }
+
+
+def ssm_forward(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
+                state: Optional[Dict] = None, return_state: bool = False
+                ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Train (state=None) or prefill (return_state=True) over (B,S,D)."""
+    s_cfg = cfg.ssm
+    b, s, d = x.shape
+    di = s_cfg.d_inner(d)
+    nh = s_cfg.n_heads(d)
+    proj = x @ p["in_proj"]
+    z, xbc_raw, dt_raw = _split_proj(proj, cfg)
+    xbc = _causal_conv(xbc_raw, p["conv"])
+    xs = xbc[..., :di].reshape(b, s, nh, s_cfg.head_dim)
+    bbc = xbc[..., di:di + s_cfg.d_state]
+    ccc = xbc[..., di + s_cfg.d_state:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    init = state["ssd"] if state is not None else None
+    y, final = ssd_chunked(xs, dt, a, bbc, ccc, s_cfg.chunk, init)
+    y = y + p["d_skip"][None, None, :, None].astype(y.dtype) * xs
+    y = y.reshape(b, s, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["gate_norm"])
+    out = y @ p["out_proj"]
+    new_state = None
+    if return_state:
+        k = s_cfg.d_conv - 1
+        tail = xbc_raw[:, -k:] if s >= k else jnp.pad(
+            xbc_raw, ((0, 0), (k - s, 0), (0, 0)))
+        new_state = {"conv": tail.astype(x.dtype), "ssd": final}
+    return out, new_state
+
+
+def ssm_decode(p: Dict, x: jnp.ndarray, state: Dict, cfg: ModelConfig
+               ) -> Tuple[jnp.ndarray, Dict]:
+    """One-token recurrent update. x (B,1,D)."""
+    s_cfg = cfg.ssm
+    b, _, d = x.shape
+    di = s_cfg.d_inner(d)
+    nh = s_cfg.n_heads(d)
+    proj = x[:, 0] @ p["in_proj"]                       # (B, ·)
+    z, xbc_raw, dt_raw = _split_proj(proj, cfg)
+    hist = jnp.concatenate([state["conv"], xbc_raw[:, None]], axis=1)
+    w = p["conv"]
+    conv_out = jnp.einsum("bkc,kc->bc", hist, w)
+    xbc = jax.nn.silu(conv_out)
+    xs = xbc[..., :di].reshape(b, nh, s_cfg.head_dim)
+    bbc = xbc[..., di:di + s_cfg.d_state]
+    ccc = xbc[..., di + s_cfg.d_state:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(dt * a[None, :])                        # (B,H)
+    ssd = state["ssd"] * da[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xs.astype(jnp.float32),
+        bbc.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", ssd, ccc.astype(jnp.float32))
+    y = y + p["d_skip"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)
+                                 ).astype(y.dtype)[:, None], p["gate_norm"])
+    out = y @ p["out_proj"]
+    return out, {"conv": hist[:, 1:], "ssd": ssd}

@@ -1,0 +1,2 @@
+# Distribution substrate: sharding rules over the (pod, data, model) mesh,
+# compressed collectives, and the optional pipeline-parallel executor.

@@ -1,0 +1,86 @@
+"""GPipe-style pipeline parallelism via shard_map + ppermute.
+
+Optional module (the production dry-run meshes are DP×TP): demonstrates the
+collective-permute microbatch schedule for depth-sharded deployments where
+a 1000+-node cluster adds a "stage" mesh axis.
+
+Schedule: T = n_micro + n_stages - 1 ticks.  At tick t, stage s computes
+microbatch (t - s) if 0 ≤ t - s < n_micro; activations flow s → s+1 through
+ppermute.  Stage 0 injects microbatches; the last stage's outputs are
+collected and all-gathered.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def pipeline_forward(stage_fn: Callable, params_stacked, x, *,
+                     mesh, n_micro: int, axis: str = "stage"):
+    """Run x through n_stages sequential stages with microbatching.
+
+    stage_fn(params_slice, h) -> h    (shape-preserving)
+    params_stacked: pytree with leading (n_stages,) axis
+    x: (B, ...) with B % n_micro == 0
+    """
+    n_stages = mesh.shape[axis]
+    b = x.shape[0]
+    assert b % n_micro == 0
+    mb = b // n_micro
+    perm = [(i, i + 1) for i in range(n_stages - 1)]
+
+    def spmd(params_local, x_all):
+        # params_local: this stage's slice (leading axis stripped by shard_map)
+        params_local = jax.tree.map(lambda a: a[0], params_local)
+        stage = jax.lax.axis_index(axis)
+        micro = x_all.reshape(n_micro, mb, *x_all.shape[1:])
+        ticks = n_micro + n_stages - 1
+        buf = jnp.zeros((mb, *x_all.shape[1:]), x_all.dtype)
+        outs = jnp.zeros((n_micro, mb, *x_all.shape[1:]), x_all.dtype)
+
+        def tick(t, carry):
+            buf, outs = carry
+            # stage 0 injects microbatch t; others take the permuted input
+            inject = micro[jnp.clip(t, 0, n_micro - 1)]
+            h_in = jnp.where(stage == 0, inject, buf)
+            active = (t - stage >= 0) & (t - stage < n_micro)
+            h_out = stage_fn(params_local, h_in)
+            h_out = jnp.where(active, h_out, buf)
+            # collect finished microbatch at the last stage
+            mb_idx = jnp.clip(t - (n_stages - 1), 0, n_micro - 1)
+            take = active & (stage == n_stages - 1)
+            outs = jax.lax.cond(
+                take,
+                lambda o: jax.lax.dynamic_update_index_in_dim(
+                    o, h_out, mb_idx, 0),
+                lambda o: o, outs)
+            nxt = jax.lax.ppermute(h_out, axis, perm)
+            return (nxt, outs)
+
+        _, outs = jax.lax.fori_loop(0, ticks, tick, (buf, outs))
+        # broadcast the last stage's collected outputs to every stage
+        outs = jax.lax.psum(
+            jnp.where(stage == n_stages - 1, outs, jnp.zeros_like(outs)),
+            axis)
+        return outs.reshape(b, *x_all.shape[1:])
+
+    fn = jax.shard_map(
+        spmd, mesh=mesh,
+        in_specs=(P(axis), P()), out_specs=P(),
+        check_vma=False)
+    return fn(params_stacked, x)
+
+
+def sequential_reference(stage_fn, params_stacked, x):
+    """Oracle: apply the stages one after another."""
+    n_stages = jax.tree.leaves(params_stacked)[0].shape[0]
+    h = x
+    for s in range(n_stages):
+        ps = jax.tree.map(lambda a: a[s], params_stacked)
+        h = stage_fn(ps, h)
+    return h

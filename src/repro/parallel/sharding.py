@@ -1,0 +1,188 @@
+"""Sharding rules: logical axes → PartitionSpec over (pod, data, model).
+
+Logical activation/parameter axes:
+  "batch"   data parallel — physical ("pod", "data") when a pod axis exists
+  "model"   tensor parallel — attention heads / ffn hidden / vocab / experts
+  "fsdp"    parameter sharding over the data axis (ZeRO-style), enabled per
+            arch with ``zero=True`` when params+optimizer would not fit TP-only
+  None      replicated
+
+``constrain`` is safe anywhere: it is a no-op without an ambient mesh, so
+model code is runnable unsharded (tests) and sharded (dry-run/train) from
+the same source.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def _ambient_axes() -> Tuple[str, ...]:
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return ()
+    if mesh is None or getattr(mesh, "empty", True):
+        return ()
+    return tuple(mesh.axis_names)
+
+
+def physical_axes(logical: Optional[str],
+                  mesh_axes: Tuple[str, ...]):
+    if logical is None:
+        return None
+    if logical == "batch":
+        have = tuple(a for a in ("pod", "data") if a in mesh_axes)
+        return have if have else None
+    if logical == "fsdp":
+        return "data" if "data" in mesh_axes else None
+    if logical == "model":
+        return "model" if "model" in mesh_axes else None
+    raise ValueError(f"unknown logical axis {logical!r}")
+
+
+def spec(*logical, mesh_axes: Optional[Tuple[str, ...]] = None) -> P:
+    axes = mesh_axes if mesh_axes is not None else _ambient_axes()
+    return P(*[physical_axes(l, axes) for l in logical])
+
+
+def _ambient_shape() -> dict:
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return {}
+    if mesh is None or getattr(mesh, "empty", True):
+        return {}
+    return dict(zip(mesh.axis_names, mesh.shape.values())) \
+        if hasattr(mesh.shape, "values") else dict(mesh.shape)
+
+
+def constrain(x: jnp.ndarray, *logical) -> jnp.ndarray:
+    """with_sharding_constraint against the ambient mesh; no-op unsharded.
+
+    Drops any axis whose mesh extent does not divide the tensor dim (e.g.
+    8 attention heads on a 16-way model axis) — otherwise the partitioner
+    falls back to involuntary full rematerialization."""
+    axes = _ambient_axes()
+    if not axes:
+        return x
+    sizes = _ambient_shape()
+    phys = []
+    for dim, l in zip(x.shape, logical):
+        p = physical_axes(l, axes)
+        if p is None:
+            phys.append(None)
+            continue
+        names = (p,) if isinstance(p, str) else tuple(p)
+        extent = 1
+        for n in names:
+            extent *= sizes.get(n, 1)
+        phys.append(p if extent > 0 and dim % extent == 0 else None)
+    return jax.lax.with_sharding_constraint(x, P(*phys))
+
+
+# ---------------------------------------------------------------------------
+# parameter specs by path convention
+# ---------------------------------------------------------------------------
+
+def _leaf_logical(path: str, ndim: int, zero: bool) -> Tuple:
+    """Logical axes for a parameter, by naming convention.
+
+    Scanned-layer stacks carry a leading L axis (never sharded).  The rules
+    below mirror Megatron TP + optional ZeRO ("fsdp") over the data axis.
+    """
+    fsdp = "fsdp" if zero else None
+    rules = None
+    if path.endswith("embed"):
+        rules = ("model", fsdp)                       # (V, D)
+    elif path.endswith(("wq", "w1", "w3", "wq_b", "wkv_b", "wk", "wv")):
+        rules = (fsdp, "model")                       # (D, H·dh) / (D, F)
+    elif path.endswith(("wo", "w2", "out_proj")):
+        rules = ("model", fsdp)                       # (H·dh, D) / (F, D)
+    elif path.endswith(("wq_a", "wkv_a")):
+        rules = (fsdp, None)                          # low-rank down-proj
+    elif path.endswith("router"):
+        rules = (None, None)                          # (D, E) small
+    elif path.endswith(("we1", "we3")):
+        rules = ("model", fsdp, None)                 # (E, D, F): EP
+    elif path.endswith("we2"):
+        rules = ("model", None, fsdp)                 # (E, F, D): EP
+    elif path.endswith("in_proj"):
+        rules = (fsdp, "model")                       # ssm (D, …)
+    elif path.endswith("conv"):
+        rules = (None, "model")                       # (d_conv, channels)
+    elif path.endswith(("a_log", "d_skip", "dt_bias")):
+        rules = ("model",)                            # per-head
+    elif path.endswith(("scale", "norm", "q_norm", "kv_norm", "gate_norm")):
+        rules = (None,)
+    if rules is None:
+        rules = tuple([None] * ndim)
+    if len(rules) < ndim:                             # scanned leading axes
+        rules = tuple([None] * (ndim - len(rules))) + tuple(rules)
+    return tuple(rules[:ndim])
+
+
+def _axis_extent(p, sizes) -> int:
+    names = (p,) if isinstance(p, str) else tuple(p)
+    extent = 1
+    for n in names:
+        extent *= sizes.get(n, 1)
+    return extent
+
+
+def fit_spec(shape, logical, mesh_axes: Tuple[str, ...],
+             mesh_sizes: dict) -> P:
+    """Divisibility-aware spec: drop axes whose extent does not divide the
+    dim; a dropped "model" axis is relocated to another divisible dim
+    (e.g. granite's 49155-vocab embedding moves TP to the d_model dim)."""
+    phys = [physical_axes(l, mesh_axes) for l in logical]
+    dropped_model = False
+    for i, (dim, p) in enumerate(zip(shape, phys)):
+        if p is None:
+            continue
+        if dim % _axis_extent(p, mesh_sizes) != 0:
+            if p == "model":
+                dropped_model = True
+            phys[i] = None
+    if dropped_model:
+        for i, (dim, p) in enumerate(zip(shape, phys)):
+            if p is None and dim % _axis_extent("model", mesh_sizes) == 0 \
+                    and dim >= _axis_extent("model", mesh_sizes):
+                phys[i] = "model"
+                break
+    return P(*phys)
+
+
+def param_pspecs(params, zero: bool = False,
+                 mesh_axes: Optional[Tuple[str, ...]] = None,
+                 mesh_sizes: Optional[dict] = None):
+    """PartitionSpec pytree mirroring a params pytree (by path rules)."""
+    axes = mesh_axes if mesh_axes is not None else _ambient_axes()
+    if mesh_sizes is None:
+        # production meshes: pod=2, data=16, model=16; local meshes pass
+        # their own sizes
+        mesh_sizes = {"pod": 2, "data": 16, "model": 16}
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            return {k: walk(v, f"{path}/{k}") for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return [walk(v, f"{path}/{i}") for i, v in enumerate(node)]
+        if node is None:
+            return None
+        logical = _leaf_logical(path, node.ndim, zero)
+        return fit_spec(node.shape, logical, axes, mesh_sizes)
+
+    return walk(params, "")
+
+
+def shard_info(params, pspecs) -> dict:
+    """Bytes-per-device accounting used by the dry-run report."""
+    leaves = jax.tree.leaves(params)
+    total = sum(x.size * x.dtype.itemsize if hasattr(x, "dtype") else 0
+                for x in leaves)
+    return {"param_bytes_total": int(total)}

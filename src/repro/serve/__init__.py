@@ -1,0 +1,1 @@
+# Serving substrate: cache shardings, batched prefill/decode engine.

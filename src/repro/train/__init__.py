@@ -1,0 +1,2 @@
+# Training substrate: optimizer, step builder (remat/microbatch/sharding),
+# fault-tolerant checkpointing, and the auto-resume runner.

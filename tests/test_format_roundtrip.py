@@ -1,0 +1,127 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (CPU_DEFAULT, ACCELERATOR_OPTIMIZED, TPU_CASCADE,
+                        CompressionSpec, EncodingPolicy, FileConfig,
+                        StringColumn, TabFileReader, Table, write_table)
+from repro.core.config import intermediate_configs
+
+
+def _table(n=20_000, seed=0):
+    rng = np.random.default_rng(seed)
+    return Table({
+        "sorted": np.cumsum(rng.integers(0, 7, n)).astype(np.int64),
+        "lowcard": rng.integers(0, 9, n).astype(np.int32),
+        "f32": rng.normal(size=n).astype(np.float32),
+        "f64": rng.normal(size=n).astype(np.float64),
+        "flags": rng.random(n) < 0.1,
+        "runs": np.repeat(np.arange(-(-n // 250), dtype=np.int32),
+                          250)[:n],
+        "strs": StringColumn.from_pylist([f"s{i % 40}" for i in range(n)]),
+    })
+
+
+@pytest.mark.parametrize("name,cfg", list(intermediate_configs().items()))
+def test_roundtrip_all_configs(tmp_path, name, cfg):
+    tbl = _table()
+    path = str(tmp_path / f"{name}.tab")
+    meta = write_table(tbl, path, cfg, threads=2)
+    back = TabFileReader(path).read_table()
+    assert back.equals(tbl)
+    d = meta.describe()
+    assert d["num_rows"] == tbl.num_rows
+    assert d["logical_nbytes"] == tbl.nbytes
+
+
+def test_page_count_follows_config(tmp_path):
+    """Insight 1 knob: target_pages_per_chunk controls page counts."""
+    tbl = _table(10_000)
+    for pages in (1, 10, 100):
+        path = str(tmp_path / f"p{pages}.tab")
+        meta = write_table(tbl, path, FileConfig(
+            rows_per_rg=10_000, target_pages_per_chunk=pages,
+            encodings=EncodingPolicy.V1_ONLY,
+            compression=CompressionSpec(codec="none")))
+        counts = [len(c.pages) for rg in meta.row_groups
+                  for c in rg.columns]
+        assert max(counts) == pages
+
+
+def test_rg_size_follows_config(tmp_path):
+    """Insight 2 knob: rows_per_rg controls row-group geometry."""
+    tbl = _table(30_000)
+    meta = write_table(tbl, str(tmp_path / "rg.tab"),
+                       FileConfig(rows_per_rg=7_000))
+    assert [rg.n_rows for rg in meta.row_groups] == [7000, 7000, 7000,
+                                                     7000, 2000]
+
+
+def test_flex_never_larger_than_plain(tmp_path):
+    """Insight 3: smallest-wins can only shrink stored bytes vs PLAIN."""
+    tbl = _table(50_000)
+    none = CompressionSpec(codec="none")
+    plain = write_table(tbl, str(tmp_path / "plain.tab"), FileConfig(
+        rows_per_rg=50_000, encodings=EncodingPolicy.PLAIN_ONLY,
+        compression=none))
+    flex = write_table(tbl, str(tmp_path / "flex.tab"), FileConfig(
+        rows_per_rg=50_000, encodings=EncodingPolicy.FLEX,
+        compression=none))
+    assert flex.stored_bytes <= plain.stored_bytes
+
+
+def test_multi_rowgroup_selected_columns(tmp_path):
+    tbl = _table(25_000)
+    path = str(tmp_path / "m.tab")
+    write_table(tbl, path, FileConfig(rows_per_rg=4_000))
+    rd = TabFileReader(path)
+    back = rd.read_table(columns=["sorted", "strs"])
+    assert back.names == ["sorted", "strs"]
+    assert back.equals(tbl.select(["sorted", "strs"]))
+
+
+def test_zone_map_pruning(tmp_path):
+    tbl = Table({"x": np.arange(100_000, dtype=np.int64)})
+    path = str(tmp_path / "z.tab")
+    write_table(tbl, path, FileConfig(rows_per_rg=10_000))
+    rd = TabFileReader(path)
+    kept = rd.plan_row_groups(
+        lambda name, stats: stats["max"] >= 95_000)
+    assert kept == [9]
+
+
+def test_stats_recorded(tmp_path):
+    tbl = _table(5_000)
+    meta = write_table(tbl, str(tmp_path / "s.tab"), CPU_DEFAULT)
+    chunk = meta.row_groups[0].column("sorted")
+    col = np.asarray(tbl["sorted"])
+    assert chunk.stats == {"min": int(col.min()), "max": int(col.max())}
+
+
+_COL_STRATEGY = st.sampled_from(["int32", "int64", "float32", "bool"])
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 3000), _COL_STRATEGY, st.integers(0, 2 ** 31),
+       st.integers(1, 7))
+def test_roundtrip_property(n, kind, seed, pages):
+    rng = np.random.default_rng(seed)
+    if kind == "int32":
+        col = rng.integers(-100, 100, n).astype(np.int32)
+    elif kind == "int64":
+        col = np.cumsum(rng.integers(0, 10, n)).astype(np.int64)
+    elif kind == "float32":
+        col = rng.normal(size=n).astype(np.float32)
+    else:
+        col = rng.random(n) < 0.5
+    import tempfile, os
+    tbl = Table({"c": col})
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "t.tab")
+        write_table(tbl, path, FileConfig(
+            rows_per_rg=max(1, n // 2), target_pages_per_chunk=pages,
+            encodings=EncodingPolicy.FLEX,
+            compression=CompressionSpec(codec="gzip", min_gain=0.1)))
+        back = TabFileReader(path).read_table()
+    assert back.equals(tbl)

@@ -1,0 +1,188 @@
+"""Per-arch smoke tests (reduced configs): one forward/train step on CPU
+asserting output shapes + no NaNs; decode consistency for cache-bearing
+archs; MoE/SSM unit behaviours."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, concrete_inputs, get_arch, smoke_config
+from repro.models.config import MoEConfig
+from repro.models.model import Model
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_arch_smoke_train(name):
+    cfg = smoke_config(name)
+    arch = dataclasses.replace(get_arch(name), config=cfg)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = concrete_inputs(arch, "train_4k", batch=2, seq_len=64)
+    loss, metrics = jax.jit(model.train_loss)(params, batch)
+    assert np.isfinite(float(loss)), name
+    assert float(loss) > 0
+    assert np.isfinite(float(metrics["aux_loss"]))
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_arch_smoke_grad_step(name):
+    cfg = smoke_config(name)
+    arch = dataclasses.replace(get_arch(name), config=cfg)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = concrete_inputs(arch, "train_4k", batch=2, seq_len=32)
+
+    def loss_fn(p):
+        return model.train_loss(p, batch)[0]
+
+    g = jax.jit(jax.grad(loss_fn))(params)
+    flat = jax.tree.leaves(g)
+    assert all(np.all(np.isfinite(np.asarray(x))) for x in flat), name
+    gnorm = float(sum(jnp.sum(x.astype(jnp.float32) ** 2) for x in flat))
+    assert gnorm > 0, f"{name}: zero gradient"
+
+
+@pytest.mark.parametrize("name", [a for a in ARCHS
+                                  if not get_arch(a).config.encoder_only])
+def test_arch_prefill_decode_shapes(name):
+    cfg = smoke_config(name)
+    arch = dataclasses.replace(get_arch(name), config=cfg)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    caches = model.init_caches(b=2, s_max=80)
+    pre = concrete_inputs(arch, "prefill_32k", batch=2, seq_len=48)
+    logits, caches = jax.jit(model.prefill)(params, pre, caches)
+    assert logits.shape == (2, cfg.vocab_size)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    logits2, _ = jax.jit(model.decode_step)(
+        params, tok, jnp.asarray(48, jnp.int32), caches)
+    assert logits2.shape == (2, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits2))), name
+
+
+@pytest.mark.parametrize("name", ["granite-3-8b", "gemma2-2b",
+                                  "mamba2-2.7b", "zamba2-7b",
+                                  "deepseek-coder-33b"])
+def test_decode_consistency(name):
+    """prefill(t0..tn)+decode(t_{n+1}) == prefill(t0..t_{n+1})."""
+    cfg = smoke_config(name)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(0)
+    s = 29
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, s + 1)),
+                       jnp.int32)
+    c1 = model.init_caches(b=2, s_max=s + 8)
+    full, _ = jax.jit(model.prefill)(params, {"tokens": toks}, c1)
+    c2 = model.init_caches(b=2, s_max=s + 8)
+    _, c2 = jax.jit(model.prefill)(params, {"tokens": toks[:, :s]}, c2)
+    dec, _ = jax.jit(model.decode_step)(
+        params, toks[:, s:], jnp.asarray(s, jnp.int32), c2)
+    rel = float(jnp.max(jnp.abs(full - dec))) / (
+        float(jnp.max(jnp.abs(full))) + 1e-9)
+    assert rel < 2e-2, f"{name}: rel={rel}"
+
+
+@pytest.mark.parametrize("name", ["mixtral-8x22b", "deepseek-v3-671b"])
+def test_decode_consistency_moe_nodrop(name):
+    """MoE consistency holds under no-drop capacity (serve semantics)."""
+    cfg = smoke_config(name)
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(0)
+    s = 21
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, s + 1)),
+                       jnp.int32)
+    c1 = model.init_caches(b=2, s_max=s + 8)
+    full, _ = jax.jit(model.prefill)(params, {"tokens": toks}, c1)
+    c2 = model.init_caches(b=2, s_max=s + 8)
+    _, c2 = jax.jit(model.prefill)(params, {"tokens": toks[:, :s]}, c2)
+    dec, _ = jax.jit(model.decode_step)(
+        params, toks[:, s:], jnp.asarray(s, jnp.int32), c2)
+    rel = float(jnp.max(jnp.abs(full - dec))) / (
+        float(jnp.max(jnp.abs(full))) + 1e-9)
+    assert rel < 2e-2, f"{name}: rel={rel}"
+
+
+def test_param_counts_match_published():
+    expected = {
+        "minitron-8b": (8.8e9, 0.1), "granite-3-8b": (8.2e9, 0.1),
+        "gemma2-2b": (2.6e9, 0.15), "deepseek-coder-33b": (33.1e9, 0.1),
+        "mamba2-2.7b": (2.7e9, 0.1), "deepseek-v3-671b": (671e9, 0.05),
+        "mixtral-8x22b": (141e9, 0.05), "zamba2-7b": (7e9, 0.15),
+    }
+    for name, (target, tol) in expected.items():
+        n = get_arch(name).config.param_count()
+        assert abs(n - target) / target < tol, (name, n)
+    # MoE active params (DeepSeek-V3 reports 37B, Mixtral 39B)
+    assert abs(get_arch("deepseek-v3-671b").config.active_param_count()
+               - 37e9) / 37e9 < 0.05
+    assert abs(get_arch("mixtral-8x22b").config.active_param_count()
+               - 39e9) / 39e9 < 0.05
+
+
+def test_moe_aux_loss_balances():
+    from repro.models.moe import init_moe_params, moe_forward
+    cfg = smoke_config("mixtral-8x22b")
+    p = init_moe_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model))
+    y, aux = moe_forward(p, x, cfg)
+    assert y.shape == x.shape
+    assert float(aux) >= 0.0
+    # perfectly uniform routing would give aux = weight; ours is close-ish
+    assert float(aux) < 10 * cfg.moe.aux_loss_weight
+
+
+def test_ssm_long_context_state_is_constant_size():
+    from repro.models.ssm import init_ssm_state
+    cfg = smoke_config("mamba2-2.7b")
+    s1 = init_ssm_state(1, cfg, jnp.float32)
+    total = sum(np.prod(x.shape) for x in jax.tree.leaves(s1))
+    assert total < 1e6    # O(1) in sequence length
+
+
+def test_window_cache_bounded():
+    cfg = smoke_config("mixtral-8x22b")   # window 16 in smoke
+    model = Model(cfg)
+    caches = model.init_caches(b=1, s_max=1000)
+    k = caches["segments"][0]["pos0"]["k"]
+    assert k.shape[2] == cfg.window       # (steps, B, W, KV, dh)
+
+
+def test_gemma2_softcap_applied():
+    cfg = smoke_config("gemma2-2b")
+    assert cfg.attn_softcap == 50.0 and cfg.final_softcap == 30.0
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    # logits must be bounded by the final softcap
+    caches = model.init_caches(b=1, s_max=16)
+    toks = jnp.asarray(np.arange(8)[None], jnp.int32)
+    logits, _ = jax.jit(model.prefill)(params, {"tokens": toks}, caches)
+    assert float(jnp.max(jnp.abs(logits))) <= 30.0 + 1e-3
+
+
+def test_decode_consistency_int8_cache():
+    """int8 KV cache decode stays within quantization tolerance."""
+    cfg = dataclasses.replace(smoke_config("granite-3-8b"),
+                              kv_cache_dtype="int8")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(0)
+    s = 29
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, s + 1)),
+                       jnp.int32)
+    c1 = model.init_caches(b=2, s_max=s + 8)
+    assert c1["segments"][0]["pos0"]["k"].dtype == jnp.int8
+    full, _ = jax.jit(model.prefill)(params, {"tokens": toks}, c1)
+    c2 = model.init_caches(b=2, s_max=s + 8)
+    _, c2 = jax.jit(model.prefill)(params, {"tokens": toks[:, :s]}, c2)
+    dec, _ = jax.jit(model.decode_step)(
+        params, toks[:, s:], jnp.asarray(s, jnp.int32), c2)
+    rel = float(jnp.max(jnp.abs(full - dec))) / (
+        float(jnp.max(jnp.abs(full))) + 1e-9)
+    assert rel < 5e-2, rel

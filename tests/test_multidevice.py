@@ -1,0 +1,183 @@
+"""Multi-device tests run in subprocesses with placeholder CPU devices —
+keeping the main test process on the real single-device backend."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO_SRC = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src")
+
+
+def run_with_devices(code: str, n_devices: int, timeout: int = 420):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count="
+                        f"{n_devices}")
+    env["PYTHONPATH"] = REPO_SRC
+    env["TF_CPP_MIN_LOG_LEVEL"] = "3"
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=timeout)
+    assert out.returncode == 0, f"STDOUT:{out.stdout}\nSTDERR:{out.stderr}"
+    return out.stdout
+
+
+def test_manual_dp_compression_numerics():
+    """bf16 and int8+EF compressed all-reduce track the exact DP step."""
+    run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import smoke_config
+        from repro.models.model import Model
+        from repro.train.optimizer import OptConfig
+        from repro.train.step import (build_manual_dp_step, build_train_step,
+                                      init_manual_dp_state, init_train_state)
+
+        cfg = smoke_config("granite-3-8b")
+        model = Model(cfg)
+        opt = OptConfig(peak_lr=1e-3, warmup_steps=0, total_steps=50)
+        mesh = jax.make_mesh((8,), ("data",))
+        rng = np.random.default_rng(0)
+        batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                                    (16, 32)), jnp.int32),
+                 "labels": jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                                    (16, 32)), jnp.int32)}
+        exact_step = jax.jit(build_train_step(model, opt))
+        s0 = init_train_state(model, jax.random.PRNGKey(0), opt)
+        s_exact, m_exact = exact_step(s0, batch)
+
+        for method, tol in (("none", 1e-4), ("bf16", 5e-2),
+                            ("int8_ef", 1e-1)):
+            step = build_manual_dp_step(model, opt, mesh, method)
+            s1 = init_manual_dp_state(model, jax.random.PRNGKey(0), opt,
+                                      method)
+            s1, m1 = step(s1, batch)
+            # compare updated param trees
+            diffs = jax.tree.map(
+                lambda a, b: float(jnp.max(jnp.abs(
+                    a.astype(jnp.float32) - b.astype(jnp.float32)))),
+                s_exact["params"], s1["params"])
+            worst = max(jax.tree.leaves(diffs))
+            assert worst < tol, (method, worst)
+            print(method, "worst param diff", worst)
+        # int8 with error feedback converges over steps: loss decreases
+        step = build_manual_dp_step(model, opt, mesh, "int8_ef")
+        s = init_manual_dp_state(model, jax.random.PRNGKey(0), opt,
+                                 "int8_ef")
+        losses = []
+        for i in range(12):
+            s, m = step(s, batch)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0], losses
+        print("int8_ef losses", losses[0], "->", losses[-1])
+    """, n_devices=8)
+
+
+def test_pipeline_parallel_matches_sequential():
+    run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.parallel.pipeline import (pipeline_forward,
+                                             sequential_reference)
+        mesh = jax.make_mesh((4,), ("stage",))
+        k = jax.random.PRNGKey(0)
+        params = {"w": jax.random.normal(k, (4, 16, 16)) * 0.3,
+                  "b": jax.random.normal(jax.random.PRNGKey(1), (4, 16))}
+
+        def stage_fn(p, h):
+            return jnp.tanh(h @ p["w"] + p["b"])
+
+        x = jax.random.normal(jax.random.PRNGKey(2), (8, 16))
+        ref = sequential_reference(stage_fn, params, x)
+        out = pipeline_forward(stage_fn, params, x, mesh=mesh, n_micro=4)
+        err = float(jnp.max(jnp.abs(ref - out)))
+        assert err < 1e-5, err
+        print("pipeline matches sequential, err", err)
+    """, n_devices=4)
+
+
+def test_sharded_train_step_small_mesh():
+    """pjit path: FSDP+TP sharded step runs on a 4x2 placeholder mesh."""
+    run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import smoke_config
+        from repro.models.model import Model
+        from repro.train.optimizer import OptConfig
+        from repro.train.step import make_sharded_step, init_train_state
+        cfg = smoke_config("mixtral-8x22b")
+        model = Model(cfg)
+        opt = OptConfig(peak_lr=1e-3, warmup_steps=0, total_steps=10)
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        step, state_abs, state_sh, jit_for = make_sharded_step(
+            model, opt, mesh, grad_accum=2, zero=True, donate=False)
+        rng = np.random.default_rng(0)
+        batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                                    (8, 32)), jnp.int32),
+                 "labels": jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                                    (8, 32)), jnp.int32)}
+        with jax.set_mesh(mesh):
+            state = init_train_state(model, jax.random.PRNGKey(0), opt)
+            state = jax.device_put(state, state_sh)
+            jitted = jit_for(batch)
+            state, metrics = jitted(state, batch)
+            loss1 = float(metrics["loss"])
+            state, metrics = jitted(state, batch)
+            loss2 = float(metrics["loss"])
+        assert np.isfinite(loss1) and np.isfinite(loss2)
+        assert loss2 < loss1    # same batch twice: must improve
+        print("sharded step losses", loss1, "->", loss2)
+    """, n_devices=8)
+
+
+def test_elastic_reshard_across_meshes():
+    """Save on a 4-way mesh, restore onto a 2-way mesh (elastic rescale)."""
+    run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np, tempfile
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.train.checkpoint import CheckpointManager
+        mesh_a = jax.make_mesh((4, 2), ("data", "model"))
+        mesh_b = jax.make_mesh((2, 4), ("data", "model"))
+        w = jnp.arange(64.0).reshape(8, 8)
+        state = {"w": jax.device_put(
+            w, NamedSharding(mesh_a, P("data", "model")))}
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, async_save=False)
+            mgr.save(1, state, extra={"step": 1})
+            sh_b = {"w": NamedSharding(mesh_b, P("data", "model"))}
+            restored, _ = mgr.restore(shardings=sh_b)
+        np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                      np.asarray(w))
+        assert restored["w"].sharding.mesh.shape["model"] == 4
+        print("elastic reshard OK")
+    """, n_devices=8)
+
+
+def test_moe_shard_map_equivalence():
+    """shard_map MoE (psum combine) ≡ GSPMD dispatch numerically."""
+    run_with_devices("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import smoke_config
+        from repro.models.model import Model
+
+        cfg0 = smoke_config("mixtral-8x22b")
+        cfg0 = dataclasses.replace(cfg0, moe=dataclasses.replace(
+            cfg0.moe, n_experts=4, capacity_factor=8.0))
+        mesh = jax.make_mesh((2, 2), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        rng = np.random.default_rng(0)
+        batch = {"tokens": jnp.asarray(
+            rng.integers(0, cfg0.vocab_size, (4, 32)), jnp.int32),
+            "labels": jnp.asarray(
+            rng.integers(0, cfg0.vocab_size, (4, 32)), jnp.int32)}
+        model0 = Model(cfg0)
+        params = model0.init(jax.random.PRNGKey(0))
+        with jax.set_mesh(mesh):
+            l0, _ = jax.jit(model0.train_loss)(params, batch)
+            cfg1 = dataclasses.replace(cfg0, moe_shmap=True)
+            l1, _ = jax.jit(Model(cfg1).train_loss)(params, batch)
+        d = abs(float(l0) - float(l1))
+        assert d < 2e-4, (float(l0), float(l1))
+        print("moe shmap equivalence:", float(l0), float(l1))
+    """, n_devices=4)

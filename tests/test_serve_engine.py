@@ -1,0 +1,69 @@
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models.model import Model
+from repro.serve.engine import Request, ServeEngine
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = smoke_config("granite-3-8b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, ServeEngine(model, params, max_batch=4, max_seq=128)
+
+
+def test_generate_batched(engine):
+    cfg, eng = engine
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i, prompt=rng.integers(
+        0, cfg.vocab_size, 24).astype(np.int32), max_new_tokens=8)
+        for i in range(6)]
+    done = eng.generate(reqs)
+    assert set(done) == set(range(6))
+    for c in done.values():
+        assert c.tokens.shape == (8,)
+        assert np.all(c.tokens >= 0) and np.all(c.tokens < cfg.vocab_size)
+    rep = eng.throughput_report(done)
+    assert rep["n_requests"] == 6
+    assert rep["decode_tokens_per_s"] > 0
+
+
+def test_greedy_deterministic(engine):
+    cfg, eng = engine
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
+    a = eng.generate([Request(0, prompt, 6)])[0].tokens
+    b = eng.generate([Request(0, prompt, 6)])[0].tokens
+    np.testing.assert_array_equal(a, b)
+
+
+def test_length_buckets(engine):
+    cfg, eng = engine
+    rng = np.random.default_rng(2)
+    reqs = [Request(uid=0, prompt=rng.integers(0, cfg.vocab_size, 8)
+                    .astype(np.int32), max_new_tokens=4),
+            Request(uid=1, prompt=rng.integers(0, cfg.vocab_size, 20)
+                    .astype(np.int32), max_new_tokens=4)]
+    done = eng.generate(reqs)
+    assert set(done) == {0, 1}
+
+
+def test_eos_stop(engine):
+    cfg, eng = engine
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
+    free = eng.generate([Request(0, prompt, 8)])[0].tokens
+    eos = int(free[2])
+    stopped = eng.generate([Request(0, prompt, 8, eos_id=eos)])[0].tokens
+    assert stopped.shape[0] <= 8
+    assert eos in stopped.tolist()
+
+
+def test_encoder_only_rejected():
+    cfg = smoke_config("hubert-xlarge")
+    model = Model(cfg)
+    with pytest.raises(ValueError):
+        ServeEngine(model, {}, max_batch=1)

@@ -1,0 +1,193 @@
+"""Optimizer, checkpoint manager, FT runner, sharding rules."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train.checkpoint import CheckpointManager
+from repro.train.optimizer import (OptConfig, apply_adamw, global_norm,
+                                   init_opt_state, lr_at)
+
+
+def test_lr_schedule_shape():
+    cfg = OptConfig(peak_lr=1e-3, warmup_steps=10, total_steps=100,
+                    min_lr_ratio=0.1)
+    lrs = [float(lr_at(jnp.asarray(s), cfg)) for s in range(0, 101, 5)]
+    assert lrs[0] == 0.0
+    assert max(lrs) == pytest.approx(1e-3, rel=0.01)
+    assert lrs[-1] == pytest.approx(1e-4, rel=0.05)
+    assert lrs[1] < lrs[2]             # warmup rising
+
+
+@pytest.mark.parametrize("moments_dtype", ["float32", "bfloat16"])
+def test_adamw_converges_quadratic(moments_dtype):
+    cfg = OptConfig(peak_lr=0.1, warmup_steps=5, total_steps=300,
+                    weight_decay=0.0, clip_norm=0.0,
+                    moments_dtype=moments_dtype)
+    target = jnp.asarray([3.0, -2.0, 0.5])
+    params = {"w": jnp.zeros(3)}
+    state = init_opt_state(params, cfg)
+    for _ in range(300):
+        g = {"w": 2 * (params["w"] - target)}
+        params, state, _ = apply_adamw(params, g, state, cfg)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=0.05)
+
+
+def test_grad_clipping():
+    cfg = OptConfig(clip_norm=1.0, warmup_steps=0, total_steps=10)
+    params = {"w": jnp.zeros(4)}
+    state = init_opt_state(params, cfg)
+    g = {"w": jnp.full(4, 100.0)}
+    _, _, m = apply_adamw(params, g, state, cfg)
+    assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_no_decay_on_vectors():
+    cfg = OptConfig(peak_lr=0.0, weight_decay=1.0, warmup_steps=0,
+                    total_steps=10)
+    params = {"scale": jnp.ones(8), "w": jnp.ones((4, 4))}
+    state = init_opt_state(params, cfg)
+    g = jax.tree.map(jnp.zeros_like, params)
+    new, _, _ = apply_adamw(params, g, state, cfg)
+    np.testing.assert_array_equal(np.asarray(new["scale"]), np.ones(8))
+
+
+# -- checkpointing -------------------------------------------------------------
+
+def _tree(seed):
+    k = jax.random.PRNGKey(seed)
+    return {"params": {"a": jax.random.normal(k, (8, 8)),
+                       "nested": [jnp.arange(4.0), None]},
+            "opt": {"step": jnp.asarray(seed)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    state = _tree(3)
+    mgr.save(3, state, extra={"step": 3, "loader": {"r": 7}})
+    restored, extra = mgr.restore()
+    assert extra["step"] == 3 and extra["loader"]["r"] == 7
+    np.testing.assert_array_equal(np.asarray(restored["params"]["a"]),
+                                  np.asarray(state["params"]["a"]))
+    assert restored["params"]["nested"][1] is None
+    assert int(restored["opt"]["step"]) == 3
+
+
+def test_checkpoint_keep_k_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree(s), extra={"step": s})
+    assert mgr.list_steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_torn_checkpoint_ignored(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=False)
+    mgr.save(1, _tree(1), extra={"step": 1})
+    # fake a torn write: directory without COMMITTED marker
+    os.makedirs(str(tmp_path / "step_000000002" / "arrays"))
+    with open(str(tmp_path / "step_000000002" / "manifest.json"),
+              "w") as f:
+        f.write("{}")
+    assert mgr.latest_step() == 1
+    restored, extra = mgr.restore()
+    assert extra["step"] == 1
+
+
+def test_async_save_then_restore(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=True)
+    mgr.save(5, _tree(5), extra={"step": 5})
+    mgr.wait()
+    _, extra = mgr.restore()
+    assert extra["step"] == 5
+
+
+def test_elastic_restore_new_sharding(tmp_path):
+    """Cross-mesh restore: place restored leaves with explicit shardings."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mgr = CheckpointManager(str(tmp_path), keep=1, async_save=False)
+    state = {"w": jnp.arange(16.0).reshape(4, 4)}
+    mgr.save(1, state, extra={"step": 1})
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = {"w": NamedSharding(mesh, P("data"))}
+    restored, _ = mgr.restore(shardings=sh)
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(state["w"]))
+    assert restored["w"].sharding == sh["w"]
+
+
+# -- FT runner -------------------------------------------------------------------
+
+def test_runner_preemption_resume(tmp_path):
+    from repro.configs import smoke_config
+    from repro.core.config import ACCELERATOR_OPTIMIZED
+    from repro.data.loader import TabLoader
+    from repro.data.tokens import write_corpus
+    from repro.models.model import Model
+    from repro.train.runner import (RunnerConfig, SimulatedPreemption,
+                                    TrainRunner)
+    corpus = str(tmp_path / "c.tab")
+    cfg = smoke_config("gemma2-2b")
+    write_corpus(corpus, 120_000, cfg.vocab_size,
+                 ACCELERATOR_OPTIMIZED.replace(rows_per_rg=60_000,
+                                               target_pages_per_chunk=8))
+    model = Model(cfg)
+    opt = OptConfig(peak_lr=5e-4, warmup_steps=2, total_steps=20)
+
+    def mk(fail=None):
+        return TrainRunner(
+            model, opt, TabLoader(corpus, seq_len=32, batch_per_shard=2),
+            str(tmp_path / "ckpt"),
+            RunnerConfig(total_steps=14, save_every=7, log_every=7,
+                         fail_at_step=fail))
+
+    with pytest.raises(SimulatedPreemption):
+        mk(fail=9).run()
+    out = mk().run()
+    assert out["final_step"] == 14
+    losses = [h["loss"] for h in out["history"]]
+    assert all(np.isfinite(l) for l in losses)
+
+
+# -- sharding rules ------------------------------------------------------------------
+
+def test_param_pspecs_rules():
+    from jax.sharding import PartitionSpec as P
+    from repro.parallel.sharding import param_pspecs
+    params = {
+        "embed": jnp.zeros((1600, 64)),
+        "segments": [{"pos0": {"attn": {"wq": jnp.zeros((64, 128)),
+                                        "wo": jnp.zeros((128, 64))},
+                               "norm1": jnp.zeros((64,))}}],
+    }
+    specs = param_pspecs(params, zero=False, mesh_axes=("data", "model"),
+                         mesh_sizes={"data": 4, "model": 16})
+    assert specs["embed"] == P("model", None)
+    seg = specs["segments"][0]["pos0"]
+    assert seg["attn"]["wq"] == P(None, "model")
+    assert seg["attn"]["wo"] == P("model", None)
+    assert seg["norm1"] == P(None)
+
+
+def test_fit_spec_relocates_model_axis():
+    from jax.sharding import PartitionSpec as P
+    from repro.parallel.sharding import fit_spec
+    # 49155 vocab is not divisible by 16 → TP moves to d_model dim
+    s = fit_spec((49155, 4096), ("model", None), ("data", "model"),
+                 {"data": 16, "model": 16})
+    assert s == P(None, "model")
+    # divisible stays put
+    s = fit_spec((256000, 4096), ("model", None), ("data", "model"),
+                 {"data": 16, "model": 16})
+    assert s == P("model", None)
+
+
+def test_constrain_noop_without_mesh():
+    from repro.parallel.sharding import constrain
+    x = jnp.ones((4, 4))
+    y = constrain(x, "batch", "model")
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
