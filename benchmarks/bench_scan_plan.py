@@ -1,0 +1,104 @@
+"""DecodePlan: cross-column batched decode + coalesced I/O economics.
+
+Measures the three quantities the planner changes (DESIGN.md §2.4):
+
+  * Pallas launches per multi-column row group — O(encoding groups) with
+    the plan vs O(columns × stride groups) per-chunk (counted, not modeled);
+  * storage requests per row group — coalesced vs one-per-chunk, and the
+    modeled N-lane batch time for each (sim, Insight 2);
+  * host decode wall time for a wide (15-column) scan, per-chunk vs planned
+    (measured) — the per-page numpy overhead the plan's group batching
+    removes, plus plan build vs cache-hit cost.
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import BENCH_SF, emit, ensure_tpch, timeit
+from repro.core.config import ACCELERATOR_OPTIMIZED
+from repro.core.scan import Scanner, open_scanner
+from repro.core.storage import SimulatedStorage, coalesce_ranges
+from repro.kernels.common import kernel_launch_count
+
+WIDE_COLUMNS = [
+    "l_orderkey", "l_partkey", "l_suppkey", "l_linenumber", "l_quantity",
+    "l_extendedprice", "l_discount", "l_tax", "l_returnflag",
+    "l_linestatus", "l_shipdate", "l_commitdate", "l_receiptdate",
+    "l_shipinstruct", "l_shipmode",
+]
+
+
+def _decode_time(path, use_plan: bool) -> float:
+    sc = open_scanner(path, columns=WIDE_COLUMNS, decode_backend="host",
+                      use_plan=use_plan)
+    plan = sc.plan()
+    raws = {i: sc.fetch_rg(i)[0] for i in plan}
+
+    def body():
+        for i in plan:
+            sc.decode_rg(i, raws[i])
+
+    return timeit(body, repeats=5, warmup=1)
+
+
+def run() -> None:
+    cfg = ACCELERATOR_OPTIMIZED.replace(rows_per_rg=1_000_000)
+    base = ensure_tpch(cfg, "scan_plan")
+    path = base["lineitem_path"]
+
+    # -- measured host decode: per-chunk vs planned -------------------------
+    t_chunk = _decode_time(path, use_plan=False)
+    t_plan = _decode_time(path, use_plan=True)
+    emit("scan_plan_decode_per_chunk", t_chunk * 1e6,
+         f"15 columns;host;measured;sf={BENCH_SF}")
+    emit("scan_plan_decode_planned", t_plan * 1e6,
+         f"speedup={t_chunk / max(t_plan, 1e-12):.2f}x;host;measured")
+
+    # -- plan build vs cache hit -------------------------------------------
+    sc = open_scanner(path, columns=WIDE_COLUMNS, decode_backend="host")
+    t0 = time.perf_counter()
+    n_groups = sc.prepare_plans()
+    build = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    sc.prepare_plans()
+    hit = time.perf_counter() - t0
+    emit("scan_plan_build", build * 1e6, f"groups={n_groups};measured")
+    emit("scan_plan_cache_hit", hit * 1e6, "measured")
+
+    # -- kernel-launch economy (pallas, small slice) ------------------------
+    small = ensure_tpch(cfg.replace(rows_per_rg=50_000,
+                                    target_pages_per_chunk=20),
+                        "scan_plan_small", sf=0.004)
+    for use_plan in (False, True):
+        sc = Scanner(small["lineitem_path"], columns=WIDE_COLUMNS,
+                     decode_backend="pallas", use_plan=use_plan)
+        raws, _ = sc.fetch_rg(0)
+        sc.decode_rg(0, raws)          # warm jit
+        l0 = kernel_launch_count()
+        t0 = time.perf_counter()
+        sc.decode_rg(0, raws)
+        dt = time.perf_counter() - t0
+        emit(f"scan_plan_launches_{'planned' if use_plan else 'per_chunk'}",
+             dt * 1e6,
+             f"launches_per_rg={kernel_launch_count() - l0};"
+             "pallas-interpret;measured")
+
+    # -- request coalescing under the N-lane model (Insight 2) --------------
+    meta = Scanner(path, columns=WIDE_COLUMNS, use_plan=False,
+                   decode_backend="host").meta
+    sim = SimulatedStorage(path, n_lanes=1)
+    chunk_ranges = [rg.column(c).byte_range
+                    for rg in meta.row_groups for c in WIDE_COLUMNS]
+    merged, _ = coalesce_ranges(chunk_ranges, gap=64 * 1024)
+    t_split = sim.batch_seconds([s for _, s in chunk_ranges])
+    t_merged = sim.batch_seconds([s for _, s in merged])
+    emit("scan_plan_io_per_chunk", t_split * 1e6,
+         f"requests={len(chunk_ranges)};sim")
+    emit("scan_plan_io_coalesced", t_merged * 1e6,
+         f"requests={len(merged)};"
+         f"speedup={t_split / max(t_merged, 1e-12):.2f}x;sim")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,29 +1,52 @@
 # One module per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+#
+# ``--smoke`` runs a CI-sized subset (tiny scale factor, 1 repeat) of the
+# scan-path suites so per-PR regressions in decode/planning/I-O are caught
+# without the full benchmark cost.
+import argparse
+import os
 import sys
 import traceback
 
-from benchmarks.common import flush_csv
-
 
 def main() -> None:
-    print("name,us_per_call,derived")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-SF subset for CI (scan-path suites only)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names (e.g. bench_queries)")
+    args = ap.parse_args()
+    if args.smoke:
+        os.environ.setdefault("BENCH_SF", "0.01")
+
+    from benchmarks.common import flush_csv
+
     suites = [
         ("bench_page_count", "fig2a"),      # Fig 2(a): page-count sweep
         ("bench_rg_size", "fig2b"),         # Fig 2(b): RG-size sweep
         ("bench_encoding", "fig3"),         # Fig 3: FLEX + SSD scaling
         ("bench_compression", "fig3c"),     # Fig 3: Insight-4 deltas
         ("bench_queries", "fig5"),          # Fig 5: Q6/Q12 query level
+        ("bench_scan_plan", "scan_plan"),   # DecodePlan launch/IO economy
         ("bench_rewriter", "sec5"),         # §5: rewriter overhead
         ("bench_kernels", "kernels"),       # §3: per-encoding decode bw
         ("roofline", "roofline"),           # §Roofline from dry-run JSONs
     ]
+    if args.smoke:
+        suites = [s for s in suites
+                  if s[0] in ("bench_queries", "bench_scan_plan")]
+    if args.only:
+        keep = set(args.only.split(","))
+        suites = [s for s in suites if s[0] in keep]
+
+    print("name,us_per_call,derived")
     failures = []
     for mod_name, tag in suites:
         try:
             mod = __import__(f"benchmarks.{mod_name}",
                              fromlist=["run"])
             mod.run()
-            flush_csv(f"{tag}.csv")
+            flush_csv(f"{tag}{'_smoke' if args.smoke else ''}.csv")
         except Exception:
             failures.append(mod_name)
             traceback.print_exc()

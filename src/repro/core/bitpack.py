@@ -56,11 +56,23 @@ def pack(values: np.ndarray, width: int) -> np.ndarray:
 
 def unpack(words: np.ndarray, width: int, n: int,
            out_dtype=np.uint64) -> np.ndarray:
-    """Inverse of :func:`pack`; returns the first ``n`` values."""
+    """Inverse of :func:`pack`; returns the first ``n`` values.
+
+    Widths ≤ 32 run the shift/or loop in uint32 — half the memory traffic
+    of the uint64 path, which matters because this loop dominates host
+    decode time for dictionary-encoded scans.
+    """
     if width < 1 or width > 64:
         raise ValueError(f"width {width} out of range")
     words = np.ascontiguousarray(words, dtype=np.uint32)
     n_groups = words.shape[0] // width
+    if width <= 32:
+        w = words.reshape(n_groups, width)
+        lane = np.arange(GROUP, dtype=np.uint32)
+        vals = np.zeros((n_groups, GROUP), dtype=np.uint32)
+        for k in range(width):
+            vals |= ((w[:, k, None] >> lane) & np.uint32(1)) << np.uint32(k)
+        return vals.reshape(-1)[:n].astype(out_dtype)
     w = words.reshape(n_groups, width).astype(np.uint64)
     lane = np.arange(GROUP, dtype=np.uint64)
     vals = np.zeros((n_groups, GROUP), dtype=np.uint64)

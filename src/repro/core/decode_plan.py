@@ -1,0 +1,681 @@
+"""Row-group-level decode planning: cross-column batched decode (DESIGN.md §2.4).
+
+The per-chunk decode path (kernels/ops.py::decode_chunk) issues one Pallas
+call per column chunk — and per stride/width group inside it — so a
+16-column row group pays ~16+ kernel launches.  Insight 1 of the paper says
+GPU scan throughput comes from exposing *all* pages to the device at once;
+this module takes that to its logical end at row-group granularity:
+
+  1. a host-side **planning pass** walks every selected column chunk of a
+     row group and groups all data pages — across columns — by
+     ``(encoding, codec, bitwidth/stride class)``;
+  2. each group's payloads are packed into one preallocated uint32 **arena**
+     (contiguous page runs are copied with a single reshape copy, not one
+     ``np.frombuffer`` per page);
+  3. **one Pallas call per group** decodes pages from many columns at once
+     (O(encoding groups) launches instead of O(columns × stride groups));
+  4. decoded rows are scattered back into per-column ``DecodeResult``s that
+     are bit-identical to the per-chunk reference path.
+
+Plans depend only on the file footer + column selection, so they are cached
+(module-level LRU) and repeated scans — the serving/query loop — skip
+planning entirely.
+
+The same plan also drives the *host* backend: group execution batches the
+``bitpack.unpack`` / run-expansion work across every page of a group, which
+collapses the per-page numpy call overhead that dominates host decode for
+many-page files (see benchmarks/bench_scan_plan.py).
+
+Class parameters (the padding buckets) are powers of two so ragged page
+shapes across columns land in O(log size) groups; padded regions decode to
+don't-care values past each page's true ``n_values`` and are sliced away.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import bitpack
+from repro.core.compression import Codec, cascade_manifest, decompress
+from repro.core.encodings import (Encoding, build_delta_manifest,
+                                  decode_plain_page)
+from repro.core.metadata import ChunkMeta, FileMeta, PageMeta
+from repro.core.schema import Field, PhysicalType
+from repro.kernels import ops
+
+_INT_TYPES = (PhysicalType.INT32, PhysicalType.INT64)
+
+# A cross-column dictionary group ships one padded dictionary row per page
+# (n_pages × d_max).  Beyond this arena size the duplication costs more
+# than the saved launches, so the planner splits the group per column and
+# each sub-group uses the shared-dictionary kernel instead.
+_DICT_ARENA_CAP_BYTES = 16 * 1024 * 1024
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, int(n) - 1).bit_length()
+
+
+# ---------------------------------------------------------------------------
+# plan structures
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PageSlot:
+    """One data page's place in a decode group (column + page index)."""
+    column: str
+    page_index: int
+    n_values: int
+
+
+@dataclasses.dataclass
+class DecodeGroup:
+    """Pages from any number of columns that decode in one batched call."""
+    key: tuple                    # (encoding, codec, *class params)
+    encoding: Encoding
+    codec: Codec
+    slots: List[PageSlot]
+
+    @property
+    def n_pages(self) -> int:
+        return len(self.slots)
+
+
+@dataclasses.dataclass
+class RowGroupPlan:
+    rg_index: int
+    groups: List[DecodeGroup]
+    grouped_columns: List[str]    # decoded via the batched group path
+    fallback_columns: List[str]   # decoded via the per-chunk reference path
+
+    @property
+    def n_groups(self) -> int:
+        return len(self.groups)
+
+
+# ---------------------------------------------------------------------------
+# eligibility / group keys
+#
+# The key functions mirror the fallback conditions in ops.decode_chunk so
+# the plan path takes the device (or batched-host) route exactly when the
+# per-chunk reference path would — required for bit-identical results.
+# ---------------------------------------------------------------------------
+
+_DICT_DEVICE_DTYPE = {
+    PhysicalType.INT32: "int32",
+    PhysicalType.INT64: "int32",      # narrowed (stats-gated below)
+    PhysicalType.FLOAT: "float32",
+    PhysicalType.BOOLEAN: "uint8",
+}
+
+
+def _pallas_page_keys(chunk: ChunkMeta, field: Field) -> Optional[List[tuple]]:
+    """Per-page group keys for the device path, or None → per-chunk fallback."""
+    enc = Encoding(chunk.encoding)
+    codec = int(chunk.codec)
+    if not chunk.pages:
+        return None
+    if enc == Encoding.RLE_DICTIONARY:
+        dt = _DICT_DEVICE_DTYPE.get(field.physical)
+        if dt is None:
+            return None
+        if (field.physical == PhysicalType.INT64
+                and not ops._stats_fit_int32(chunk)):
+            return None
+        return [(int(enc), codec, pm.extra["bitwidth"], dt)
+                for pm in chunk.pages]
+    if enc == Encoding.DELTA_BINARY_PACKED:
+        if not ops._stats_fit_int32(chunk):
+            return None
+        if max(pm.extra["n_blocks"] for pm in chunk.pages) == 0:
+            return None
+        return [(int(enc), codec, _next_pow2(max(pm.extra["n_blocks"], 1)))
+                for pm in chunk.pages]
+    if enc == Encoding.RLE:
+        if (field.physical == PhysicalType.INT64
+                and not ops._stats_fit_int32(chunk)):
+            return None
+        if any(pm.extra["n_runs"] > ops._RLE_MAX_RUNS for pm in chunk.pages):
+            return None
+        vdt = "int64" if field.physical == PhysicalType.INT64 else "int32"
+        return [(int(enc), codec,
+                 _next_pow2(-(-max(pm.n_values, 1) // 1024)) * 1024, vdt)
+                for pm in chunk.pages]
+    if enc == Encoding.BYTE_STREAM_SPLIT:
+        if field.physical != PhysicalType.FLOAT:
+            return None
+        return [(int(enc), codec,
+                 _next_pow2((pm.n_values + (-pm.n_values) % 4) // 4))
+                for pm in chunk.pages]
+    # PLAIN is a memcpy (no kernel launch to save); strings/float64 are
+    # host-path encodings — the per-chunk reference handles all of them.
+    return None
+
+
+def _host_page_keys(chunk: ChunkMeta, field: Field) -> Optional[List[tuple]]:
+    """Group keys for the batched-host path (no padding classes needed —
+    numpy handles ragged pages; keys only separate incompatible layouts)."""
+    enc = Encoding(chunk.encoding)
+    codec = int(chunk.codec)
+    if not chunk.pages:
+        return None
+    if enc == Encoding.RLE_DICTIONARY:
+        if field.physical == PhysicalType.BYTE_ARRAY:
+            return None               # StringColumn dictionaries: reference
+        return [(int(enc), codec, pm.extra["bitwidth"]) for pm in chunk.pages]
+    if enc == Encoding.DELTA_BINARY_PACKED:
+        if field.physical not in _INT_TYPES:
+            return None
+        return [(int(enc), codec) for pm in chunk.pages]
+    if enc == Encoding.RLE:
+        vdt = "int64" if field.physical == PhysicalType.INT64 else "int32"
+        return [(int(enc), codec, vdt) for pm in chunk.pages]
+    return None
+
+
+# ---------------------------------------------------------------------------
+# planner
+# ---------------------------------------------------------------------------
+
+class DecodePlanner:
+    """Builds + caches RowGroupPlans for one (file, column selection).
+
+    ``backend`` is 'pallas' (batched device groups) or 'host' (batched numpy
+    groups); both scatter back into per-column results bit-identical to the
+    per-chunk path of the same backend.
+    """
+
+    def __init__(self, meta: FileMeta, columns: Sequence[str],
+                 backend: str = "pallas"):
+        assert backend in ("pallas", "host")
+        self.meta = meta
+        self.columns = list(columns)
+        self.backend = backend
+        self._plans: Dict[int, RowGroupPlan] = {}
+        self.plans_built = 0
+        self.plan_seconds = 0.0
+
+    # -- planning ----------------------------------------------------------
+
+    def plan_rg(self, rg_index: int) -> RowGroupPlan:
+        plan = self._plans.get(rg_index)
+        if plan is not None:
+            return plan
+        t0 = time.perf_counter()
+        key_fn = (_pallas_page_keys if self.backend == "pallas"
+                  else _host_page_keys)
+        rg = self.meta.row_groups[rg_index]
+        groups: "OrderedDict[tuple, DecodeGroup]" = OrderedDict()
+        grouped, fallback = [], []
+        for name in self.columns:
+            chunk = rg.column(name)
+            field = self.meta.schema.field(name)
+            keys = key_fn(chunk, field)
+            if keys is None:
+                fallback.append(name)
+                continue
+            grouped.append(name)
+            for pi, (pm, key) in enumerate(zip(chunk.pages, keys)):
+                g = groups.get(key)
+                if g is None:
+                    g = DecodeGroup(key=key, encoding=Encoding(key[0]),
+                                    codec=Codec(key[1]), slots=[])
+                    groups[key] = g
+                g.slots.append(PageSlot(name, pi, pm.n_values))
+        final: List[DecodeGroup] = []
+        for g in groups.values():
+            final.extend(self._split_oversize_dict_group(g, rg))
+        plan = RowGroupPlan(rg_index, final, grouped, fallback)
+        self._plans[rg_index] = plan
+        self.plans_built += 1
+        self.plan_seconds += time.perf_counter() - t0
+        return plan
+
+    def _split_oversize_dict_group(self, group: DecodeGroup, rg
+                                   ) -> List[DecodeGroup]:
+        """Bound the per-page dictionary duplication of multi-column dict
+        groups (see _DICT_ARENA_CAP_BYTES): oversize groups split per
+        column, which the executor decodes with the shared-dict kernel."""
+        if (self.backend != "pallas"
+                or group.encoding != Encoding.RLE_DICTIONARY):
+            return [group]
+        cols = {s.column for s in group.slots}
+        if len(cols) == 1:
+            return [group]
+        d_max = max(rg.column(c).dict_page.n_values for c in cols)
+        if len(group.slots) * d_max * 4 <= _DICT_ARENA_CAP_BYTES:
+            return [group]
+        by_col: "OrderedDict[str, List[PageSlot]]" = OrderedDict()
+        for s in group.slots:
+            by_col.setdefault(s.column, []).append(s)
+        return [DecodeGroup(key=group.key + (name,), encoding=group.encoding,
+                            codec=group.codec, slots=slots)
+                for name, slots in by_col.items()]
+
+    # -- execution ---------------------------------------------------------
+
+    def execute(self, rg_index: int, raws: Dict[str, bytes]
+                ) -> Dict[str, ops.DecodeResult]:
+        plan = self.plan_rg(rg_index)
+        rg = self.meta.row_groups[rg_index]
+        use_kernels = self.backend == "pallas"
+        out: Dict[str, ops.DecodeResult] = {}
+        demoted: List[str] = []
+
+        # decompressed page payloads for every grouped column
+        payloads = self._decompress_stage(plan, rg, raws)
+
+        per_col_parts: Dict[str, Dict[int, object]] = {
+            name: {} for name in plan.grouped_columns}
+        exec_group = (self._execute_group_pallas if use_kernels
+                      else self._execute_group_host)
+        for group in plan.groups:
+            slots = [s for s in group.slots if s.column not in demoted]
+            if use_kernels and group.encoding == Encoding.DELTA_BINARY_PACKED:
+                slots, newly = self._demote_wide_delta(rg, slots, payloads)
+                demoted.extend(newly)
+            if not slots:
+                continue
+            exec_group(group, slots, rg, payloads, per_col_parts)
+
+        for name in plan.grouped_columns:
+            if name in demoted:
+                continue
+            chunk = rg.column(name)
+            field = self.meta.schema.field(name)
+            out[name] = self._assemble_column(chunk, field,
+                                              per_col_parts[name], payloads)
+        for name in list(plan.fallback_columns) + demoted:
+            chunk = rg.column(name)
+            field = self.meta.schema.field(name)
+            out[name] = ops.decode_chunk(chunk, field, raws[name],
+                                         use_kernels=use_kernels)
+        return {name: out[name] for name in self.columns}
+
+    # -- stages ------------------------------------------------------------
+
+    def _decompress_stage(self, plan: RowGroupPlan, rg,
+                          raws: Dict[str, bytes]
+                          ) -> Dict[Tuple[str, int], bytes]:
+        """(column, page_index) → decoded payload bytes (or raw-view tuple
+        ``(raw, offset, size)`` for uncompressed pages, enabling the
+        single-copy arena fill)."""
+        payloads: Dict[Tuple[str, int], object] = {}
+        cascade_pages: List[Tuple[str, int, bytes]] = []
+        for name in plan.grouped_columns:
+            chunk = rg.column(name)
+            raw = raws[name]
+            off0, _ = chunk.byte_range
+            codec = Codec(chunk.codec)
+            if chunk.dict_page is not None:
+                dp = chunk.dict_page
+                payloads[(name, "dict")] = decompress(
+                    raw[dp.offset - off0:dp.offset - off0 + dp.stored_size],
+                    codec, dp.uncompressed_size)
+            for pi, pm in enumerate(chunk.pages):
+                lo = pm.offset - off0
+                if codec == Codec.NONE:
+                    payloads[(name, pi)] = (raw, lo, pm.stored_size)
+                elif codec == Codec.CASCADE and self.backend == "pallas":
+                    cascade_pages.append((name, pi,
+                                          raw[lo:lo + pm.stored_size]))
+                else:
+                    payloads[(name, pi)] = decompress(
+                        raw[lo:lo + pm.stored_size], codec,
+                        pm.uncompressed_size)
+        if cascade_pages:
+            metas = [rg.column(n).pages[pi] for n, pi, _ in cascade_pages]
+            dec = ops.cascade_decompress_device(
+                [(pm, data) for pm, (_, _, data) in zip(
+                    metas, cascade_pages)])
+            for (name, pi, _), (_, data) in zip(cascade_pages, dec):
+                payloads[(name, pi)] = data
+        return payloads
+
+    def _demote_wide_delta(self, rg, slots: List[PageSlot], payloads
+                           ) -> Tuple[List[PageSlot], List[str]]:
+        """Chunks whose min_delta exceeds int32 take the per-chunk path
+        (mirrors the reference fallback, which is chunk-granular)."""
+        bad: List[str] = []
+        for s in slots:
+            if s.column in bad:
+                continue
+            pm = rg.column(s.column).pages[s.page_index]
+            man = self._manifest(rg, s, payloads)
+            if abs(int(man["min_delta"].min(initial=0))) > ops._INT32_SAFE:
+                bad.append(s.column)
+        return [s for s in slots if s.column not in bad], bad
+
+    def _payload_bytes(self, payloads, slot: PageSlot) -> bytes:
+        p = payloads[(slot.column, slot.page_index)]
+        if isinstance(p, tuple):
+            raw, lo, size = p
+            return raw[lo:lo + size]
+        return p
+
+    def _manifest(self, rg, slot: PageSlot, payloads) -> dict:
+        key = (slot.column, slot.page_index, "man")
+        man = payloads.get(key)
+        if man is None:
+            pm = rg.column(slot.column).pages[slot.page_index]
+            man = build_delta_manifest(self._payload_bytes(payloads, slot),
+                                       pm.n_values, pm.extra)
+            payloads[key] = man
+        return man
+
+    # -- arena packing -----------------------------------------------------
+
+    def _fill_arena(self, arena: np.ndarray, slots: Sequence[PageSlot],
+                    payloads) -> None:
+        """Pack page payload words into the preallocated uint32 arena.
+
+        Uncompressed pages still sitting in the fetched row-group buffer are
+        copied per *contiguous same-width run* (one reshape copy per run —
+        for the common uniform-page chunk this is one copy per column, not
+        one per page); materialized payloads copy row-by-row.
+        """
+        w = arena.shape[1]
+        i, n = 0, len(slots)
+        while i < n:
+            p = payloads[(slots[i].column, slots[i].page_index)]
+            if isinstance(p, tuple) and p[2] == w * 4:
+                raw, lo, _ = p
+                j = i + 1
+                while j < n:
+                    q = payloads[(slots[j].column, slots[j].page_index)]
+                    if not (isinstance(q, tuple) and q[0] is raw
+                            and q[2] == w * 4
+                            and q[1] == lo + (j - i) * w * 4):
+                        break
+                    j += 1
+                k = j - i
+                arena[i:i + k] = np.frombuffer(
+                    raw, dtype=np.uint32, count=k * w,
+                    offset=lo).reshape(k, w)
+                i = j
+            else:
+                data = self._payload_bytes(payloads, slots[i])
+                words = np.frombuffer(data, dtype=np.uint32,
+                                      count=len(data) // 4)
+                arena[i, :words.shape[0]] = words
+                i += 1
+
+    # -- pallas group execution -------------------------------------------
+
+    def _execute_group_pallas(self, group: DecodeGroup,
+                              slots: List[PageSlot], rg, payloads,
+                              per_col_parts) -> None:
+        enc = group.encoding
+        if enc == Encoding.RLE_DICTIONARY:
+            batch = self._dict_group_pallas(group, slots, rg, payloads)
+        elif enc == Encoding.DELTA_BINARY_PACKED:
+            batch = self._delta_group_pallas(group, slots, rg, payloads)
+        elif enc == Encoding.RLE:
+            batch = self._rle_group_pallas(group, slots, rg, payloads)
+        else:
+            batch = self._bss_group_pallas(group, slots, rg, payloads)
+        self._scatter_batch(batch, slots, per_col_parts)
+
+    @staticmethod
+    def _scatter_batch(batch, slots: List[PageSlot], per_col_parts) -> None:
+        """Slice group output rows back to columns.  Consecutive pages of
+        one column compact in a single segment (the uniform-page fast path
+        of ops._compact), keyed by their page range for ordered reassembly."""
+        i, n = 0, len(slots)
+        while i < n:
+            col, p0 = slots[i].column, slots[i].page_index
+            j = i + 1
+            while (j < n and slots[j].column == col
+                   and slots[j].page_index == p0 + (j - i)):
+                j += 1
+            counts = [s.n_values for s in slots[i:j]]
+            per_col_parts[col][(p0, slots[j - 1].page_index)] = \
+                ops._compact(batch[i:j], counts)
+            i = j
+
+    def _dict_group_pallas(self, group, slots, rg, payloads):
+        width = group.key[2]
+        w_arena = max(
+            -(-rg.column(s.column).pages[s.page_index].uncompressed_size
+              // 4) for s in slots)
+        arena = np.zeros((len(slots), max(w_arena, 1)), dtype=np.uint32)
+        self._fill_arena(arena, slots, payloads)
+        dicts = {}
+        for s in slots:
+            if s.column not in dicts:
+                dicts[s.column] = self._device_dictionary(rg, s.column,
+                                                          payloads)
+        if len(dicts) == 1:   # single-column group: no dict duplication
+            return ops.decode_dict_group_shared(
+                arena, next(iter(dicts.values())), width)
+        d_max = max(d.shape[0] for d in dicts.values())
+        dtype = next(iter(dicts.values())).dtype
+        dict_arena = np.zeros((len(slots), d_max), dtype=dtype)
+        for row, s in enumerate(slots):
+            d = dicts[s.column]
+            dict_arena[row, :d.shape[0]] = d
+        return ops.decode_dict_group(arena, dict_arena, width)
+
+    def _device_dictionary(self, rg, name: str, payloads) -> np.ndarray:
+        chunk = rg.column(name)
+        field = self.meta.schema.field(name)
+        dp = chunk.dict_page
+        dictionary = decode_plain_page(payloads[(name, "dict")], dp.n_values,
+                                       field, dp.extra)
+        if field.physical == PhysicalType.INT64:
+            dictionary = dictionary.astype(np.int32)
+        elif field.physical == PhysicalType.BOOLEAN:
+            dictionary = dictionary.astype(np.uint8)
+        return np.ascontiguousarray(dictionary)
+
+    def _delta_group_pallas(self, group, slots, rg, payloads):
+        n_blocks = group.key[2]
+        mans = [self._manifest(rg, s, payloads) for s in slots]
+        pls = [self._payload_bytes(payloads, s) for s in slots]
+        arrays = ops.delta_group_arrays(mans, pls, n_blocks)
+        return ops.decode_delta_group(*arrays, n_blocks=n_blocks)
+
+    def _rle_group_pallas(self, group, slots, rg, payloads):
+        n_out, vdt_name = group.key[2], group.key[3]
+        vdt = np.dtype(vdt_name)
+        runs = []
+        for s in slots:
+            pm = rg.column(s.column).pages[s.page_index]
+            p = self._payload_bytes(payloads, s)
+            r = pm.extra["n_runs"]
+            runs.append((
+                np.frombuffer(p, dtype=vdt, count=r).astype(np.int32),
+                np.frombuffer(p, dtype=np.int32, count=r,
+                              offset=r * vdt.itemsize)))
+        vals, counts = ops.rle_group_arrays(runs)
+        return ops.decode_rle_group(vals, counts, n_out=n_out)
+
+    def _bss_group_pallas(self, group, slots, rg, payloads):
+        stride = group.key[2]
+        arena = np.zeros((len(slots), 4 * stride), dtype=np.uint32)
+        for row, s in enumerate(slots):
+            pm = rg.column(s.column).pages[s.page_index]
+            n = pm.n_values
+            s_words = (n + (-n) % 4) // 4
+            words = np.frombuffer(self._payload_bytes(payloads, s),
+                                  dtype=np.uint32, count=4 * s_words)
+            if s_words == stride:
+                arena[row, :4 * stride] = words
+            else:
+                for plane in range(4):
+                    arena[row, plane * stride:plane * stride + s_words] = \
+                        words[plane * s_words:(plane + 1) * s_words]
+        return ops.decode_bss_group(arena, stride)
+
+    # -- host group execution ---------------------------------------------
+
+    def _execute_group_host(self, group: DecodeGroup, slots: List[PageSlot],
+                            rg, payloads, per_col_parts) -> None:
+        enc = group.encoding
+        if enc == Encoding.RLE_DICTIONARY:
+            self._dict_group_host(group, slots, rg, payloads, per_col_parts)
+        elif enc == Encoding.DELTA_BINARY_PACKED:
+            self._delta_group_host(slots, rg, payloads, per_col_parts)
+        else:
+            self._rle_group_host(group, slots, rg, payloads, per_col_parts)
+
+    def _dict_group_host(self, group, slots, rg, payloads, per_col_parts):
+        """One bitpack.unpack across every page of the group (all columns),
+        then one dictionary gather per column — the per-page unpack overhead
+        is what dominates host decode of many-page files."""
+        width = group.key[2]
+        words, g_offs, g_total = [], [], 0
+        for s in slots:
+            p = self._payload_bytes(payloads, s)
+            w = np.frombuffer(p, dtype=np.uint32, count=len(p) // 4)
+            words.append(w)
+            g_offs.append(g_total)
+            g_total += w.shape[0] // width
+        slab = words[0] if len(words) == 1 else np.concatenate(words)
+        codes = bitpack.unpack(slab, width, g_total * 32,
+                               out_dtype=np.int64)
+        for (s, goff) in zip(slots, g_offs):
+            per_col_parts[s.column][(s.page_index, s.page_index)] = \
+                codes[goff * 32:goff * 32 + s.n_values]
+
+    def _delta_group_host(self, slots, rg, payloads, per_col_parts):
+        """Manifest pass per page, then one gather+unpack per distinct
+        miniblock width across the whole group; per-page cumsum assembles
+        values (bit-identical to encodings.decode_delta_page)."""
+        from repro.core.encodings import BLOCK, MB_GROUPS, MB_VALUES
+        mans = [self._manifest(rg, s, payloads) for s in slots]
+        base, total = [], 0
+        for m in mans:
+            base.append(total)
+            total += m["words"].shape[0]
+        slab = np.concatenate([m["words"] for m in mans]) if mans else \
+            np.zeros(0, np.uint32)
+        page_of, mb_widths, mb_offs = [], [], []
+        for i, m in enumerate(mans):
+            n_mb = m["n_blocks"] * 4
+            page_of.append(np.full(n_mb, i, dtype=np.int64))
+            mb_widths.append(m["mb_width"][:n_mb])
+            mb_offs.append(m["mb_off"][:n_mb].astype(np.int64) + base[i])
+        page_of = np.concatenate(page_of) if page_of else np.zeros(0, np.int64)
+        mb_widths = np.concatenate(mb_widths) if mb_widths else \
+            np.zeros(0, np.int64)
+        mb_offs = np.concatenate(mb_offs) if mb_offs else np.zeros(0, np.int64)
+        rel = np.zeros((max(page_of.shape[0], 1), MB_VALUES), dtype=np.uint64)
+        for w in np.unique(mb_widths) if mb_widths.shape[0] else []:
+            w = int(w)
+            sel = np.flatnonzero(mb_widths == w)
+            idx = mb_offs[sel][:, None] + np.arange(MB_GROUPS * w)[None, :]
+            vals = bitpack.unpack(slab[idx].reshape(-1), w,
+                                  sel.shape[0] * MB_VALUES)
+            rel[sel] = vals.reshape(sel.shape[0], MB_VALUES)
+        mb_of_page = np.concatenate([[0], np.cumsum(
+            [m["n_blocks"] * 4 for m in mans])]).astype(np.int64)
+        for i, (s, m) in enumerate(zip(slots, mans)):
+            field = self.meta.schema.field(s.column)
+            n = s.n_values
+            n_blocks = m["n_blocks"]
+            deltas = rel[mb_of_page[i]:mb_of_page[i + 1]].reshape(-1)[
+                :n_blocks * BLOCK].astype(np.int64)
+            deltas += np.repeat(m["min_delta"][:n_blocks], BLOCK)
+            out = np.empty(n, dtype=np.int64)
+            if n:
+                out[0] = m["first_value"]
+                if n > 1:
+                    np.cumsum(deltas[:n - 1], out=out[1:])
+                    out[1:] += m["first_value"]
+            per_col_parts[s.column][(s.page_index, s.page_index)] = \
+                out.astype(field.numpy_dtype)
+
+    def _rle_group_host(self, group, slots, rg, payloads, per_col_parts):
+        vdt = np.dtype(group.key[2])
+        for s in slots:
+            pm = rg.column(s.column).pages[s.page_index]
+            field = self.meta.schema.field(s.column)
+            p = self._payload_bytes(payloads, s)
+            r = pm.extra["n_runs"]
+            if r == 0:
+                dt = (np.bool_ if field.physical == PhysicalType.BOOLEAN
+                      else field.numpy_dtype)
+                per_col_parts[s.column][(s.page_index, s.page_index)] = \
+                    np.zeros(0, dtype=dt)
+                continue
+            vals = np.frombuffer(p, dtype=vdt, count=r)
+            counts = np.frombuffer(p, dtype=np.int32, count=r,
+                                   offset=r * vdt.itemsize)
+            out = np.repeat(vals, counts)
+            if field.physical == PhysicalType.BOOLEAN:
+                out = out.astype(np.bool_)
+            else:
+                out = out.astype(field.numpy_dtype)
+            per_col_parts[s.column][(s.page_index, s.page_index)] = out
+
+    # -- scatter -----------------------------------------------------------
+
+    def _assemble_column(self, chunk: ChunkMeta, field: Field,
+                         parts: Dict[tuple, object],
+                         payloads) -> ops.DecodeResult:
+        import jax.numpy as jnp
+        ordered = [parts[k] for k in sorted(parts)]  # keys: page ranges
+        on_device = self.backend == "pallas"
+        if on_device:
+            arr = ordered[0] if len(ordered) == 1 else jnp.concatenate(ordered)
+            if (Encoding(chunk.encoding) == Encoding.RLE
+                    and field.physical == PhysicalType.BOOLEAN):
+                arr = arr.astype(jnp.uint8)
+            logical = int(arr.dtype.itemsize) * chunk.n_values
+        else:
+            arr = ordered[0] if len(ordered) == 1 else np.concatenate(ordered)
+            if Encoding(chunk.encoding) == Encoding.RLE_DICTIONARY:
+                arr = self._host_dictionary(chunk, field, payloads)[arr]
+            logical = int(np.dtype(field.numpy_dtype or np.int64).itemsize
+                          * chunk.n_values)
+        return ops.DecodeResult(
+            array=arr, on_device=on_device, n_values=chunk.n_values,
+            encoding=int(chunk.encoding), codec=int(chunk.codec),
+            stored_bytes=chunk.stored_bytes, logical_bytes=int(logical))
+
+    def _host_dictionary(self, chunk: ChunkMeta, field: Field, payloads):
+        dp = chunk.dict_page
+        raw = payloads[(chunk.name, "dict")]
+        return decode_plain_page(raw, dp.n_values, field, dp.extra)
+
+
+# ---------------------------------------------------------------------------
+# planner cache (per file footer + column selection + backend)
+# ---------------------------------------------------------------------------
+
+_PLANNER_CACHE: "OrderedDict[tuple, DecodePlanner]" = OrderedDict()
+_PLANNER_CACHE_MAX = 64
+
+
+def planner_for(path: str, meta: FileMeta, columns: Sequence[str],
+                backend: str) -> DecodePlanner:
+    # st_size + st_mtime_ns catch same-path rewrites whose footers would
+    # otherwise collide (same rows / row groups / stored bytes) — a stale
+    # plan would decode with the old file's page offsets.
+    try:
+        st = os.stat(path)
+        stamp = (st.st_size, st.st_mtime_ns)
+    except OSError:
+        stamp = ()
+    key = (path, tuple(columns), backend, meta.num_rows,
+           len(meta.row_groups), meta.stored_bytes, stamp)
+    planner = _PLANNER_CACHE.get(key)
+    if planner is not None:
+        _PLANNER_CACHE.move_to_end(key)
+        return planner
+    planner = DecodePlanner(meta, columns, backend)
+    _PLANNER_CACHE[key] = planner
+    while len(_PLANNER_CACHE) > _PLANNER_CACHE_MAX:
+        _PLANNER_CACHE.popitem(last=False)
+    return planner
+
+
+def clear_planner_cache() -> None:
+    _PLANNER_CACHE.clear()

@@ -22,8 +22,29 @@ import time
 from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.core.scan import Scanner, ScanMetrics
+from repro.kernels.common import kernel_launch_count
 
 Consume = Callable[[object, int, Dict], object]
+
+
+class _MetricsProbe:
+    """Snapshots launch/request/plan counters around one run so RunReports
+    carry the DecodePlan launch economy (see ScanMetrics field docs)."""
+
+    def __init__(self, scanner: Scanner):
+        self.scanner = scanner
+        self.launches0 = kernel_launch_count()
+        self.requests0 = scanner.storage.stats.requests
+        self.plan_s0 = (scanner.planner.plan_seconds
+                        if scanner.planner else 0.0)
+
+    def finish(self, m: ScanMetrics) -> None:
+        m.n_kernel_launches = kernel_launch_count() - self.launches0
+        m.n_io_requests = (self.scanner.storage.stats.requests
+                           - self.requests0)
+        if self.scanner.planner is not None:
+            m.plan_seconds = (self.scanner.planner.plan_seconds
+                              - self.plan_s0)
 
 
 @dataclasses.dataclass
@@ -48,6 +69,14 @@ class RunReport:
     def effective_bandwidth(self) -> float:
         return self.metrics.logical_bytes / max(1e-12, self.modeled_wall)
 
+    @property
+    def launch_summary(self) -> str:
+        """Kernel-launch / I/O-request economy of this run (DecodePlan)."""
+        m = self.metrics
+        return (f"launches={m.n_kernel_launches};"
+                f"io_requests={m.n_io_requests};"
+                f"plan_ms={m.plan_seconds * 1e3:.2f}")
+
 
 def run_blocking(scanner: Scanner, consume: Optional[Consume] = None,
                  row_groups: Optional[Sequence[int]] = None,
@@ -56,6 +85,7 @@ def run_blocking(scanner: Scanner, consume: Optional[Consume] = None,
     t0 = time.perf_counter()
     plan = scanner.plan(predicate_stats, row_groups)
     m = ScanMetrics(backend=getattr(scanner.storage, "kind", "real"))
+    probe = _MetricsProbe(scanner)
     staged = []
     for i in plan:
         raws, io_dt = scanner.fetch_rg(i)
@@ -78,6 +108,7 @@ def run_blocking(scanner: Scanner, consume: Optional[Consume] = None,
         if consume is not None:
             acc = consume(acc, i, cols)
         consume_times.append(time.perf_counter() - t1)
+    probe.finish(m)
     return acc, RunReport("blocking", time.perf_counter() - t0, m,
                           consume_times)
 
@@ -89,6 +120,7 @@ def run_overlapped(scanner: Scanner, consume: Optional[Consume] = None,
     t0 = time.perf_counter()
     plan = scanner.plan(predicate_stats, row_groups)
     m = ScanMetrics(backend=getattr(scanner.storage, "kind", "real"))
+    probe = _MetricsProbe(scanner)
     q: "queue.Queue" = queue.Queue(maxsize=max(1, depth))
     err: List[BaseException] = []
 
@@ -129,5 +161,6 @@ def run_overlapped(scanner: Scanner, consume: Optional[Consume] = None,
     t.join()
     if err:
         raise err[0]
+    probe.finish(m)
     return acc, RunReport("overlapped", time.perf_counter() - t0, m,
                           consume_times)

@@ -11,6 +11,14 @@ Decode backends:
   'pallas'  the TPU kernels (interpret mode on CPU) — correctness path
   'host'    vectorized numpy decoders — the *measured* throughput path on
             this CPU-only container (labeled in all benchmark output)
+
+Both backends decode through the row-group DecodePlan by default
+(core/decode_plan.py): pages are batched *across columns* per
+(encoding, codec, width class), so a multi-column row group costs
+O(encoding groups) kernel launches instead of O(columns × stride groups);
+``use_plan=False`` selects the per-chunk reference path.  Fetches are
+coalesced (core/storage.py): adjacent chunk byte ranges merge into large
+reads, which the N-lane model rewards per Insight 2.
 """
 
 from __future__ import annotations
@@ -21,10 +29,13 @@ from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.decode_plan import planner_for
 from repro.core.metadata import ChunkMeta
 from repro.core.reader import TabFileReader, read_footer
-from repro.core.storage import RealStorage, open_storage
+from repro.core.storage import (DEFAULT_COALESCE_GAP, RealStorage,
+                                fetch_coalesced, open_storage)
 from repro.kernels import ops
+from repro.kernels.common import kernel_launch_count
 
 
 @dataclasses.dataclass
@@ -38,6 +49,9 @@ class ScanMetrics:
     n_pages: int = 0
     io_per_rg: List[float] = dataclasses.field(default_factory=list)
     decode_per_rg: List[float] = dataclasses.field(default_factory=list)
+    n_kernel_launches: int = 0   # pallas dispatches during this scan
+    n_io_requests: int = 0       # storage requests issued (post-coalescing)
+    plan_seconds: float = 0.0    # decode-plan build time (0 on cache hits)
 
     @property
     def blocking_seconds(self) -> float:
@@ -69,7 +83,9 @@ class ScanMetrics:
 
 class Scanner:
     def __init__(self, path: str, columns: Optional[List[str]] = None,
-                 storage=None, decode_backend: str = "pallas"):
+                 storage=None, decode_backend: str = "pallas",
+                 use_plan: bool = True,
+                 coalesce_gap: int = DEFAULT_COALESCE_GAP):
         self.path = path
         self.meta = read_footer(path)
         self.columns = columns if columns is not None \
@@ -77,6 +93,9 @@ class Scanner:
         self.storage = storage if storage is not None else RealStorage(path)
         assert decode_backend in ("pallas", "host")
         self.decode_backend = decode_backend
+        self.coalesce_gap = coalesce_gap
+        self.planner = planner_for(path, self.meta, self.columns,
+                                   decode_backend) if use_plan else None
         self._reader = TabFileReader(path, fetch=self.storage.fetch)
 
     # -- planning -------------------------------------------------------------
@@ -84,6 +103,16 @@ class Scanner:
     def plan(self, predicate_stats=None,
              row_groups: Optional[Sequence[int]] = None) -> List[int]:
         return self._reader.plan_row_groups(predicate_stats, row_groups)
+
+    def prepare_plans(self, row_groups: Optional[Sequence[int]] = None,
+                      predicate_stats=None) -> int:
+        """Build (and cache) decode plans for the scan's row groups ahead of
+        time — the serving/query loop pattern where planning cost must not
+        land on the first request.  Returns the number of groups planned."""
+        if self.planner is None:
+            return 0
+        return sum(self.planner.plan_rg(i).n_groups
+                   for i in self.plan(predicate_stats, row_groups))
 
     def rg_requests(self, rg_index: int) -> List[Tuple[str, ChunkMeta,
                                                        Tuple[int, int]]]:
@@ -97,22 +126,29 @@ class Scanner:
     # -- stages ----------------------------------------------------------------
 
     def fetch_rg(self, rg_index: int) -> Tuple[Dict[str, bytes], float]:
+        """Fetch every selected chunk of one row group with coalesced
+        requests: adjacent/near-adjacent column byte ranges merge into one
+        large read (Insight 2); per-column zero-copy views come back."""
         reqs = self.rg_requests(rg_index)
-        datas, dt = self.storage.fetch_batch([r for _, _, r in reqs])
+        datas, dt = fetch_coalesced(self.storage, [r for _, _, r in reqs],
+                                    self.coalesce_gap)
         return {name: d for (name, _, _), d in zip(reqs, datas)}, dt
 
     def decode_rg(self, rg_index: int, raws: Dict[str, bytes]
                   ) -> Tuple[Dict[str, ops.DecodeResult], float]:
         t0 = time.perf_counter()
-        out: Dict[str, ops.DecodeResult] = {}
-        rg = self.meta.row_groups[rg_index]
-        for name in self.columns:
-            chunk = rg.column(name)
-            field = self.meta.schema.field(name)
-            res = ops.decode_chunk(chunk, field, raws[name],
-                                   use_kernels=(self.decode_backend
-                                                == "pallas"))
-            out[name] = res
+        if self.planner is not None:
+            out = self.planner.execute(rg_index, raws)
+        else:
+            out = {}
+            rg = self.meta.row_groups[rg_index]
+            for name in self.columns:
+                chunk = rg.column(name)
+                field = self.meta.schema.field(name)
+                res = ops.decode_chunk(chunk, field, raws[name],
+                                       use_kernels=(self.decode_backend
+                                                    == "pallas"))
+                out[name] = res
         # flush async dispatch so decode time is honest
         for res in out.values():
             if res.on_device:
@@ -133,6 +169,9 @@ class Scanner:
                           predicate_stats=None, consume=None
                           ) -> Tuple[Optional[object], ScanMetrics]:
         m = ScanMetrics(backend=getattr(self.storage, "kind", "real"))
+        launches0 = kernel_launch_count()
+        requests0 = self.storage.stats.requests
+        plan_s0 = self.planner.plan_seconds if self.planner else 0.0
         acc = None
         for i in self.plan(predicate_stats, row_groups):
             raws, io_dt = self.fetch_rg(i)
@@ -150,12 +189,18 @@ class Scanner:
             m.n_row_groups += 1
             if consume is not None:
                 acc = consume(acc, i, cols)
+        m.n_kernel_launches = kernel_launch_count() - launches0
+        m.n_io_requests = self.storage.stats.requests - requests0
+        if self.planner is not None:
+            m.plan_seconds = self.planner.plan_seconds - plan_s0
         return acc, m
 
 
 def open_scanner(path: str, columns=None, backend: str = "real",
                  n_lanes: int = 1, decode_backend: str = "pallas",
-                 lane_bandwidth: float = 7e9, latency: float = 20e-6
-                 ) -> Scanner:
+                 lane_bandwidth: float = 7e9, latency: float = 20e-6,
+                 use_plan: bool = True,
+                 coalesce_gap: int = DEFAULT_COALESCE_GAP) -> Scanner:
     storage = open_storage(path, backend, n_lanes, lane_bandwidth, latency)
-    return Scanner(path, columns, storage, decode_backend)
+    return Scanner(path, columns, storage, decode_backend,
+                   use_plan=use_plan, coalesce_gap=coalesce_gap)

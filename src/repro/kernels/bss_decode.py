@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import interpret_default
+from repro.kernels.common import count_launch, interpret_default
 
 
 def _kernel(payload_ref, out_ref, *, stride_words: int, n_out: int):
@@ -35,13 +35,20 @@ def _kernel(payload_ref, out_ref, *, stride_words: int, n_out: int):
     out_ref[0, :] = jax.lax.bitcast_convert_type(out, jnp.float32)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("stride_words", "n_out", "interpret"))
 def bss_decode_pages(payload: jnp.ndarray, *, stride_words: int, n_out: int,
                      interpret: bool | None = None) -> jnp.ndarray:
     """payload: (n_pages, ≥4*stride_words) uint32 → (n_pages, n_out) f32."""
     if interpret is None:
         interpret = interpret_default()
+    count_launch()
+    return _bss_decode_pages_jit(payload, stride_words=stride_words,
+                                 n_out=n_out, interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("stride_words", "n_out", "interpret"))
+def _bss_decode_pages_jit(payload, *, stride_words: int, n_out: int,
+                          interpret: bool) -> jnp.ndarray:
     n_pages, n_words = payload.shape
     return pl.pallas_call(
         functools.partial(_kernel, stride_words=stride_words, n_out=n_out),

@@ -16,8 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import (expand_runs_tile, interpret_default,
-                                  unpack_words_static)
+from repro.kernels.common import (count_launch, expand_runs_tile,
+                                  interpret_default, unpack_words_static)
 
 TILE = 1024
 
@@ -31,8 +31,6 @@ def _kernel(val_words_ref, cnt_words_ref, out_ref, *,
                                      tile_start, TILE)
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "value_width", "count_width", "n_runs", "n_out", "interpret"))
 def cascade_decode_pages(val_words: jnp.ndarray, cnt_words: jnp.ndarray, *,
                          value_width: int, count_width: int, n_runs: int,
                          n_out: int, interpret: bool | None = None
@@ -45,6 +43,20 @@ def cascade_decode_pages(val_words: jnp.ndarray, cnt_words: jnp.ndarray, *,
     """
     if interpret is None:
         interpret = interpret_default()
+    count_launch()
+    return _cascade_decode_pages_jit(val_words, cnt_words,
+                                     value_width=value_width,
+                                     count_width=count_width,
+                                     n_runs=n_runs, n_out=n_out,
+                                     interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "value_width", "count_width", "n_runs", "n_out", "interpret"))
+def _cascade_decode_pages_jit(val_words, cnt_words, *,
+                              value_width: int, count_width: int,
+                              n_runs: int, n_out: int,
+                              interpret: bool) -> jnp.ndarray:
     n_pages = val_words.shape[0]
     assert n_out % TILE == 0
     n_tiles = n_out // TILE

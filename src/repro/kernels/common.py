@@ -25,6 +25,21 @@ BLOCK_VALUES = 1024
 MINIBLOCKS = 4
 LANES = 32             # values per packing group
 
+# Pallas dispatch counter: every decode-kernel entry point increments this
+# once per pallas_call it issues (outside jit, so retraces don't matter).
+# The DecodePlan's launch economy — O(encoding groups) instead of
+# O(columns × stride groups) per row group — is asserted against it.
+_kernel_launches = 0
+
+
+def count_launch(n: int = 1) -> None:
+    global _kernel_launches
+    _kernel_launches += n
+
+
+def kernel_launch_count() -> int:
+    return _kernel_launches
+
 
 def interpret_default() -> bool:
     return jax.default_backend() != "tpu"

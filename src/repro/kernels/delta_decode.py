@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import (BLOCK_VALUES, MINIBLOCKS,
+from repro.kernels.common import (BLOCK_VALUES, MINIBLOCKS, count_launch,
                                   interpret_default,
                                   unpack_miniblock_dynamic)
 
@@ -44,18 +44,19 @@ def _kernel(payload_ref, mb_off_ref, mb_width_ref, min_delta_ref, first_ref,
         deltas = rel + min_delta[b]
         ecs = jnp.cumsum(deltas) - deltas          # exclusive prefix sum
         vals = carry + ecs
-        pl.store(out_ref, (0, pl.dslice(b * BLOCK_VALUES, BLOCK_VALUES)),
-                 vals)
+        pl.store(out_ref,
+                 (pl.dslice(0, 1), pl.dslice(b * BLOCK_VALUES, BLOCK_VALUES)),
+                 vals[None, :])
         return carry + jnp.sum(deltas)
 
     last = jax.lax.fori_loop(0, n_blocks, body, first)
     # deltas count n-1: the final value (index n_blocks*1024) lands in the
     # tail lane block
-    pl.store(out_ref, (0, pl.dslice(n_blocks * BLOCK_VALUES, TAIL)),
-             jnp.full((TAIL,), last, jnp.int32))
+    pl.store(out_ref,
+             (pl.dslice(0, 1), pl.dslice(n_blocks * BLOCK_VALUES, TAIL)),
+             jnp.full((1, TAIL), last, jnp.int32))
 
 
-@functools.partial(jax.jit, static_argnames=("n_blocks", "interpret"))
 def delta_decode_pages(payload: jnp.ndarray, mb_off: jnp.ndarray,
                        mb_width: jnp.ndarray, min_delta: jnp.ndarray,
                        first_value: jnp.ndarray, *, n_blocks: int,
@@ -73,6 +74,16 @@ def delta_decode_pages(payload: jnp.ndarray, mb_off: jnp.ndarray,
     """
     if interpret is None:
         interpret = interpret_default()
+    count_launch()
+    return _delta_decode_pages_jit(payload, mb_off, mb_width, min_delta,
+                                   first_value, n_blocks=n_blocks,
+                                   interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("n_blocks", "interpret"))
+def _delta_decode_pages_jit(payload, mb_off, mb_width, min_delta,
+                            first_value, *, n_blocks: int,
+                            interpret: bool) -> jnp.ndarray:
     n_pages, n_words = payload.shape
     n_mb = n_blocks * MINIBLOCKS
     n_out = n_blocks * BLOCK_VALUES + TAIL

@@ -13,7 +13,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import interpret_default, unpack_words_static
+from repro.kernels.common import (count_launch, interpret_default,
+                                  unpack_words_static)
 
 
 def _kernel(words_ref, dict_ref, out_ref, *, width: int):
@@ -22,7 +23,6 @@ def _kernel(words_ref, dict_ref, out_ref, *, width: int):
     out_ref[0, :] = dict_ref[:][codes]
 
 
-@functools.partial(jax.jit, static_argnames=("width", "interpret"))
 def dict_decode_pages(words: jnp.ndarray, dictionary: jnp.ndarray, *,
                       width: int, interpret: bool | None = None
                       ) -> jnp.ndarray:
@@ -32,6 +32,14 @@ def dict_decode_pages(words: jnp.ndarray, dictionary: jnp.ndarray, *,
     """
     if interpret is None:
         interpret = interpret_default()
+    count_launch()
+    return _dict_decode_pages_jit(words, dictionary, width=width,
+                                  interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("width", "interpret"))
+def _dict_decode_pages_jit(words, dictionary, *, width: int,
+                           interpret: bool) -> jnp.ndarray:
     n_pages, n_words = words.shape
     n_vals = (n_words // width) * 32
     d = dictionary.shape[0]
@@ -46,3 +54,46 @@ def dict_decode_pages(words: jnp.ndarray, dictionary: jnp.ndarray, *,
         out_shape=jax.ShapeDtypeStruct((n_pages, n_vals), dictionary.dtype),
         interpret=interpret,
     )(words, dictionary)
+
+
+def _kernel_multi(words_ref, dict_ref, out_ref, *, width: int):
+    codes = unpack_words_static(words_ref[0, :], width).astype(jnp.int32)
+    codes = jnp.clip(codes, 0, dict_ref.shape[1] - 1)
+    out_ref[0, :] = dict_ref[0, :][codes]
+
+
+def dict_decode_pages_multi(words: jnp.ndarray, dictionaries: jnp.ndarray, *,
+                            width: int, interpret: bool | None = None
+                            ) -> jnp.ndarray:
+    """Cross-column batched variant: one dictionary row *per page*.
+
+    words: (n_pages, G*width) uint32; dictionaries: (n_pages, D) — row i is
+    page i's (padded) dictionary, so pages of many column chunks decode in
+    a single pallas_call (the DecodePlan group path).
+    Returns (n_pages, G*32) of dictionaries.dtype.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    count_launch()
+    return _dict_decode_pages_multi_jit(words, dictionaries, width=width,
+                                        interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("width", "interpret"))
+def _dict_decode_pages_multi_jit(words, dictionaries, *, width: int,
+                                 interpret: bool) -> jnp.ndarray:
+    n_pages, n_words = words.shape
+    n_vals = (n_words // width) * 32
+    d = dictionaries.shape[1]
+    return pl.pallas_call(
+        functools.partial(_kernel_multi, width=width),
+        grid=(n_pages,),
+        in_specs=[
+            pl.BlockSpec((1, n_words), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n_vals), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pages, n_vals),
+                                       dictionaries.dtype),
+        interpret=interpret,
+    )(words, dictionaries)

@@ -29,7 +29,8 @@ from repro.core.schema import Field, PhysicalType
 from repro.kernels.bss_decode import bss_decode_pages
 from repro.kernels.cascade_decode import cascade_decode_pages
 from repro.kernels.delta_decode import delta_decode_pages
-from repro.kernels.dict_decode import dict_decode_pages
+from repro.kernels.dict_decode import (dict_decode_pages,
+                                       dict_decode_pages_multi)
 from repro.kernels.rle_decode import rle_decode_pages
 
 _INT32_SAFE = 2 ** 30  # conservative: keeps deltas within int32 too
@@ -82,7 +83,77 @@ def _stats_fit_int32(chunk: ChunkMeta) -> bool:
 
 
 # ---------------------------------------------------------------------------
-# per-encoding device decoders
+# group-level device decoders (pre-batched inputs)
+#
+# These accept already-batched (n_pages, …) arrays so a caller may batch
+# pages from *many* column chunks into one pallas_call (the DecodePlan path,
+# core/decode_plan.py).  The per-chunk decoders below are thin assemblers
+# over these and remain the reference/fallback path.
+# ---------------------------------------------------------------------------
+
+def decode_dict_group(words: np.ndarray, dictionaries: np.ndarray,
+                      width: int) -> jnp.ndarray:
+    """words (n_pages, G*width) u32; dictionaries (n_pages, D) — one padded
+    dictionary row per page (pages may come from different columns)."""
+    return dict_decode_pages_multi(jnp.asarray(words),
+                                   jnp.asarray(dictionaries), width=width)
+
+
+def decode_dict_group_shared(words: np.ndarray, dictionary: np.ndarray,
+                             width: int) -> jnp.ndarray:
+    """Single-column group: one dictionary shared by every page — no
+    per-page duplication (same kernel as the per-chunk reference path)."""
+    return dict_decode_pages(jnp.asarray(words), jnp.asarray(dictionary),
+                             width=width)
+
+
+def decode_delta_group(payload: np.ndarray, mb_off: np.ndarray,
+                       mb_width: np.ndarray, min_delta: np.ndarray,
+                       first: np.ndarray, n_blocks: int) -> jnp.ndarray:
+    return delta_decode_pages(
+        jnp.asarray(payload), jnp.asarray(mb_off), jnp.asarray(mb_width),
+        jnp.asarray(min_delta), jnp.asarray(first), n_blocks=n_blocks)
+
+
+def decode_rle_group(vals: np.ndarray, counts: np.ndarray,
+                     n_out: int) -> jnp.ndarray:
+    return rle_decode_pages(jnp.asarray(vals), jnp.asarray(counts),
+                            n_out=n_out)
+
+
+def decode_bss_group(payload: np.ndarray, stride: int) -> jnp.ndarray:
+    return bss_decode_pages(jnp.asarray(payload), stride_words=stride,
+                            n_out=stride * 4)
+
+
+def delta_group_arrays(mans: Sequence[dict], payloads: Sequence[bytes],
+                       n_blocks: int) -> Tuple[np.ndarray, ...]:
+    """Assemble the batched host arrays for a DELTA group.  ``n_blocks`` may
+    exceed any page's true block count (class padding): padded miniblocks get
+    width 0 / min_delta 0, which the kernel decodes as constant carry —
+    positions below each page's n_values are unaffected."""
+    n_mb = n_blocks * 4
+    payload = _stack_pad_u32(payloads)
+    mb_off = _stack_pad([m["mb_off"] for m in mans], n_mb, np.int32)
+    mb_width = _stack_pad([m["mb_width"] for m in mans], n_mb, np.int32)
+    min_delta = _stack_pad(
+        [m["min_delta"][:m["n_blocks"]].astype(np.int32) for m in mans],
+        n_blocks, np.int32)
+    first = np.array([[m["first_value"]] for m in mans], dtype=np.int32)
+    return payload, mb_off, mb_width, min_delta, first
+
+
+def rle_group_arrays(pages_runs: Sequence[Tuple[np.ndarray, np.ndarray]]
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """(vals, counts) per page → padded (n_pages, R) int32 pair."""
+    r_max = max(max((v.shape[0] for v, _ in pages_runs), default=1), 1)
+    vals = _stack_pad([v for v, _ in pages_runs], r_max, np.int32)
+    counts = _stack_pad([c for _, c in pages_runs], r_max, np.int32)
+    return vals, counts
+
+
+# ---------------------------------------------------------------------------
+# per-encoding device decoders (per-chunk reference path)
 # ---------------------------------------------------------------------------
 
 def _decode_plain_device(pages, field):
@@ -126,17 +197,8 @@ def _decode_delta_device(chunk, field, pages):
     if any(abs(int(m["min_delta"].min(initial=0))) > _INT32_SAFE
            for m in mans):
         return None
-    n_mb = n_blocks * 4
-    payload = _stack_pad_u32([p for _, p in pages])
-    mb_off = _stack_pad([m["mb_off"] for m in mans], n_mb, np.int32)
-    mb_width = _stack_pad([m["mb_width"] for m in mans], n_mb, np.int32)
-    min_delta = _stack_pad(
-        [m["min_delta"][:m["n_blocks"]].astype(np.int32) for m in mans],
-        n_blocks, np.int32)
-    first = np.array([[m["first_value"]] for m in mans], dtype=np.int32)
-    out = delta_decode_pages(
-        jnp.asarray(payload), jnp.asarray(mb_off), jnp.asarray(mb_width),
-        jnp.asarray(min_delta), jnp.asarray(first), n_blocks=n_blocks)
+    arrays = delta_group_arrays(mans, [p for _, p in pages], n_blocks)
+    out = decode_delta_group(*arrays, n_blocks=n_blocks)
     return _compact(out, [pm.n_values for pm, _ in pages])
 
 
@@ -152,12 +214,10 @@ def _decode_rle_device(chunk, field, pages):
         vals.append(np.frombuffer(p, dtype=vdt, count=r).astype(np.int32))
         counts.append(np.frombuffer(p, dtype=np.int32, count=r,
                                     offset=r * np.dtype(vdt).itemsize))
-    r_max = max(max((v.shape[0] for v in vals), default=1), 1)
     max_nv = max(pm.n_values for pm, _ in pages)
     n_out = -(-max_nv // 1024) * 1024
-    out = rle_decode_pages(
-        jnp.asarray(_stack_pad(vals, r_max, np.int32)),
-        jnp.asarray(_stack_pad(counts, r_max, np.int32)), n_out=n_out)
+    bvals, bcounts = rle_group_arrays(list(zip(vals, counts)))
+    out = decode_rle_group(bvals, bcounts, n_out=n_out)
     res = _compact(out, [pm.n_values for pm, _ in pages])
     if field.physical == PhysicalType.BOOLEAN:
         res = res.astype(jnp.uint8)
@@ -175,9 +235,7 @@ def _decode_bss_device(chunk, field, pages):
     outs = {}
     for stride, grp in groups.items():
         payload = _stack_pad_u32([p for _, p in grp])
-        n_out = stride * 4
-        dec = bss_decode_pages(jnp.asarray(payload), stride_words=stride,
-                               n_out=n_out)
+        dec = decode_bss_group(payload, stride)
         for (pm, _), row in zip(grp, dec):
             outs[id(pm)] = row[:pm.n_values]
     return jnp.concatenate([outs[id(pm)] for pm, _ in pages])

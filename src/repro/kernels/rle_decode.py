@@ -16,7 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import expand_runs_tile, interpret_default
+from repro.kernels.common import (count_launch, expand_runs_tile,
+                                  interpret_default)
 
 TILE = 1024
 
@@ -27,7 +28,6 @@ def _kernel(vals_ref, counts_ref, out_ref):
                                      tile_start, TILE)
 
 
-@functools.partial(jax.jit, static_argnames=("n_out", "interpret"))
 def rle_decode_pages(run_values: jnp.ndarray, run_counts: jnp.ndarray,
                      *, n_out: int, interpret: bool | None = None
                      ) -> jnp.ndarray:
@@ -39,6 +39,14 @@ def rle_decode_pages(run_values: jnp.ndarray, run_counts: jnp.ndarray,
     """
     if interpret is None:
         interpret = interpret_default()
+    count_launch()
+    return _rle_decode_pages_jit(run_values, run_counts, n_out=n_out,
+                                 interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("n_out", "interpret"))
+def _rle_decode_pages_jit(run_values, run_counts, *, n_out: int,
+                          interpret: bool) -> jnp.ndarray:
     n_pages, r = run_values.shape
     assert n_out % TILE == 0
     n_tiles = n_out // TILE

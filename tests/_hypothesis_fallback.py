@@ -1,0 +1,108 @@
+"""Deterministic fallback for the tiny slice of the hypothesis API the test
+suite uses, so property tests still *run* (not skip) in environments where
+hypothesis isn't installed (e.g. this container).
+
+With hypothesis available the real library is used (see the guarded imports
+in the test modules); this shim draws ``max_examples`` pseudo-random examples
+from the declared strategies with a fixed seed per example index, so runs
+are reproducible.  No shrinking, no example database — a failure prints the
+drawn arguments via the plain assert message instead.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(
+        lambda rng: int(rng.integers(min_value, max_value, endpoint=True)))
+
+
+def lists(elements: _Strategy, min_size: int = 0,
+          max_size: int = None) -> _Strategy:
+    hi = max_size if max_size is not None else min_size + 10
+
+    def draw(rng):
+        n = int(rng.integers(min_size, hi, endpoint=True))
+        return [elements.draw(rng) for _ in range(n)]
+
+    return _Strategy(draw)
+
+
+def binary(min_size: int = 0, max_size: int = None) -> _Strategy:
+    hi = max_size if max_size is not None else min_size + 64
+
+    def draw(rng):
+        n = int(rng.integers(min_size, hi, endpoint=True))
+        return rng.integers(0, 256, size=n, dtype=np.uint16
+                            ).astype(np.uint8).tobytes()
+
+    return _Strategy(draw)
+
+
+_TEXT_POOL = ("abcdefghijklmnopqrstuvwxyz" "ABCDEFGHIJKLMNOPQRSTUVWXYZ"
+              "0123456789 _-.,!?" "éßñ" "日本語" "🙂🚀")
+
+
+def text(min_size: int = 0, max_size: int = None) -> _Strategy:
+    hi = max_size if max_size is not None else min_size + 20
+    pool = list(_TEXT_POOL)
+
+    def draw(rng):
+        n = int(rng.integers(min_size, hi, endpoint=True))
+        idx = rng.integers(0, len(pool), size=n)
+        return "".join(pool[i] for i in idx)
+
+    return _Strategy(draw)
+
+
+def sampled_from(seq) -> _Strategy:
+    seq = list(seq)
+    return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
+
+
+def settings(max_examples: int = 20, deadline=None, **_kw):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_max_examples", 20)
+            for ex in range(n):
+                rng = np.random.default_rng(0xC0FFEE + ex)
+                drawn = [s.draw(rng) for s in strategies]
+                fn(*args, *drawn, **kwargs)
+
+        # keep pytest from treating the strategy-drawn parameters as
+        # fixtures: hide the wrapped signature entirely
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return deco
+
+
+class _St:
+    integers = staticmethod(integers)
+    lists = staticmethod(lists)
+    binary = staticmethod(binary)
+    text = staticmethod(text)
+    sampled_from = staticmethod(sampled_from)
+
+
+st = _St()

@@ -1,8 +1,11 @@
 import numpy as np
 import numpy.testing as npt
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # deterministic fallback shim (hypothesis not installed)
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import encodings as enc
 from repro.core.config import EncodingPolicy, FileConfig

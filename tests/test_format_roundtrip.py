@@ -1,7 +1,10 @@
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # deterministic fallback shim (hypothesis not installed)
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import (CPU_DEFAULT, ACCELERATOR_OPTIMIZED, TPU_CASCADE,
                         CompressionSpec, EncodingPolicy, FileConfig,
