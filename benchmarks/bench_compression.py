@@ -9,8 +9,10 @@ Also benchmarks the TPU-native cascade codec variant.
 from __future__ import annotations
 
 from benchmarks.common import emit, ensure_tpch
+from repro.core.compression import chunk_decompress_memo
 from repro.core.config import (ACCELERATOR_OPTIMIZED, CPU_DEFAULT,
                                CompressionSpec, TPU_CASCADE)
+from repro.kernels.dict_decode import dict_cache_clear
 from repro.core.query import Q6_COLUMNS
 from repro.core.reader import TabFileReader
 from repro.core.rewriter import rewrite_file
@@ -36,9 +38,13 @@ def run() -> None:
         path = base["lineitem_path"] + f".{name}"
         rewrite_file(base["lineitem_path"], path, cfg)
         meta = TabFileReader(path).meta
+        # cold-scan per round: a hot decompress memo would skip the blind
+        # gzip inflation this Insight-4 comparison exists to measure
         for lanes in (1, 4):
             best = None
             for _ in range(3):
+                chunk_decompress_memo().clear()
+                dict_cache_clear()
                 sc = open_scanner(path, columns=None,
                                   backend="sim", n_lanes=lanes,
                                   decode_backend="host")

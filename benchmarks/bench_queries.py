@@ -1,14 +1,29 @@
 """Fig. 5: query-level validation — Q6 and Q12 runtimes across file
-configurations, blocking vs overlapped reader, against a CPU-baseline
-engine and the theoretical storage lower bound."""
+configurations, blocking vs pipelined reader, against a CPU-baseline
+engine and the theoretical storage lower bound.
+
+Each configuration runs BENCH_ROUNDS times (default 3) and keeps the best
+modeled wall: decode at benchmark SF is tens of ms, where scheduler noise
+on a shared container swamps single measurements, and later rounds hit
+the decode-plan / dictionary / decompress caches — the serving-loop
+pattern the executor is built for (DESIGN.md §2.4/§2.5).
+
+Note these are therefore *hot-cache* numbers for every configuration: a
+gzip-everything baseline file stops paying inflation on revisit, so the
+paper's cold-scan configuration ladder (optimized ≥ baseline) is not what
+this table shows.  The cold-scan ladder is asserted in
+tests/test_system.py (caches cleared per run) and measured by the
+fig2/fig3 suites; the cold-vs-hot gzip delta itself is the
+scan_plan_gzip_* pair in bench_scan_plan.py."""
 
 from __future__ import annotations
 
+import os
 import time
 
 import numpy as np
 
-from benchmarks.common import emit, ensure_tpch
+from benchmarks.common import emit, emit_cpu_reference, ensure_tpch
 from repro.core.config import (ACCELERATOR_OPTIMIZED, CPU_DEFAULT,
                                EncodingPolicy, FileConfig)
 from repro.core.query import (Q12_LINEITEM_COLUMNS, Q12_ORDERS_COLUMNS,
@@ -38,6 +53,7 @@ def _cpu_baseline_q6(path: str) -> float:
 
 
 def run() -> None:
+    emit_cpu_reference()   # lets the CI gate normalize by machine speed
     base = ensure_tpch(CPU_DEFAULT, "fig5_base")
     obase = base["orders_path"]
     # warm the jitted query consumers so compile time never lands in the
@@ -52,38 +68,81 @@ def run() -> None:
                           columns=Q12_ORDERS_COLUMNS,
                           decode_backend="host")
     q12(warm_l, warm_o, overlapped=False)
+    rounds = max(1, int(os.environ.get("BENCH_ROUNDS", "3")))
+    bounds = {}
+    paths = {}
     for name, cfg in CONFIGS.items():
         lpath = base["lineitem_path"] + f".q_{name}"
         rewrite_file(base["lineitem_path"], lpath, cfg)
         opath = obase + f".q_{name}"
         rewrite_file(obase, opath, cfg)
+        paths[name] = (lpath, opath)
         meta = TabFileReader(lpath).meta
         # theoretical lower bound: stored bytes / 1-lane bandwidth
         sim = SimulatedStorage(lpath, n_lanes=1)
         q6_cols_bytes = sum(rg.column(c).stored_bytes
                             for rg in meta.row_groups for c in Q6_COLUMNS)
-        bound = q6_cols_bytes / sim.lane_bandwidth
+        bounds[name] = q6_cols_bytes / sim.lane_bandwidth
 
-        for mode in ("blocking", "overlapped"):
-            sc = open_scanner(lpath, columns=list(Q6_COLUMNS),
-                              backend="sim", n_lanes=1,
-                              decode_backend="host")
-            rev, rep = q6(sc, overlapped=(mode == "overlapped"),
-                          prune=False)
-            emit(f"fig5_q6_{name}_{mode}", rep.modeled_wall * 1e6,
-                 f"lower_bound_us={bound*1e6:.0f};"
-                 f"x_over_bound={rep.modeled_wall/bound:.2f}")
+    # Rounds are interleaved *across* configurations (like
+    # tests/test_system.py) so a noisy period on a shared host penalizes
+    # every configuration equally instead of wiping out one config's
+    # entire sample.  The overlapped rows try both executor shapes — W=0
+    # (inline decode, the PR-1 double buffer) and W=2 (decode pool) — and
+    # keep the best; ``workers=`` in derived records which one won.  On a
+    # 2-core container the pool pays for decode-heavy/consume-busy streams
+    # and loses to GIL contention elsewhere; on wider hosts it wins
+    # outright (DESIGN.md §2.5).
+    best = {}   # row name → (wall_seconds, derived)
+    for _ in range(rounds):
+        for name in CONFIGS:
+            lpath, opath = paths[name]
+            bound = bounds[name]
+            for mode, workers in (("blocking", 0), ("overlapped", 0),
+                                  ("overlapped", 2)):
+                sc = open_scanner(lpath, columns=list(Q6_COLUMNS),
+                                  backend="sim", n_lanes=1,
+                                  decode_backend="host")
+                rev, rep = q6(sc, overlapped=(mode == "overlapped"),
+                              prune=False, decode_workers=workers)
+                # per-stage wall spans + the deterministic launch/request
+                # economy (the CI gate trips on any io_requests increase)
+                row = (f"fig5_q6_{name}_{mode}", rep.modeled_wall,
+                       f"lower_bound_us={bound*1e6:.0f};"
+                       f"x_over_bound={rep.modeled_wall/bound:.2f};"
+                       f"io_requests={rep.metrics.n_io_requests};"
+                       f"{rep.stage_summary}")
+                if row[0] not in best or row[1] < best[row[0]][0]:
+                    best[row[0]] = (row[1], row[2])
 
-        lsc = open_scanner(lpath, columns=Q12_LINEITEM_COLUMNS,
-                           backend="sim", n_lanes=1, decode_backend="host")
-        osc = open_scanner(opath, columns=Q12_ORDERS_COLUMNS,
-                           backend="sim", n_lanes=1, decode_backend="host")
-        _, brep, prep = q12(lsc, osc, overlapped=True)
-        emit(f"fig5_q12_{name}_overlapped",
-             (brep.modeled_wall + prep.modeled_wall) * 1e6,
-             f"build_us={brep.modeled_wall*1e6:.0f};"
-             f"probe_us={prep.modeled_wall*1e6:.0f}")
+            for workers in (0, 2):
+                lsc = open_scanner(lpath, columns=Q12_LINEITEM_COLUMNS,
+                                   backend="sim", n_lanes=1,
+                                   decode_backend="host")
+                osc = open_scanner(opath, columns=Q12_ORDERS_COLUMNS,
+                                   backend="sim", n_lanes=1,
+                                   decode_backend="host")
+                _, brep, prep = q12(lsc, osc, overlapped=True,
+                                    decode_workers=workers)
+                wall = brep.modeled_wall + prep.modeled_wall
+                key = f"fig5_q12_{name}_overlapped"
+                derived = (
+                    f"build_us={brep.modeled_wall*1e6:.0f};"
+                    f"probe_us={prep.modeled_wall*1e6:.0f};"
+                    f"io_requests="
+                    f"{brep.metrics.n_io_requests + prep.metrics.n_io_requests};"
+                    f"{prep.stage_summary}")
+                if key not in best or wall < best[key][0]:
+                    best[key] = (wall, derived)
 
-    cpu_s = _cpu_baseline_q6(base["lineitem_path"] + ".q_optimized")
+    for name in CONFIGS:
+        for key in (f"fig5_q6_{name}_blocking",
+                    f"fig5_q6_{name}_overlapped",
+                    f"fig5_q12_{name}_overlapped"):
+            wall, derived = best[key]
+            emit(key, wall * 1e6, derived)
+
+    cpu_s = min(_cpu_baseline_q6(base["lineitem_path"] + ".q_optimized")
+                for _ in range(rounds))   # same noise treatment as fig5 rows
     emit("fig5_q6_cpu_engine_baseline", cpu_s * 1e6,
          "blocking full-read numpy engine on optimized file (measured)")

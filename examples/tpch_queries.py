@@ -49,6 +49,8 @@ def main():
             print(f"Q6  {mode} wall={rep.modeled_wall*1e3:8.3f} ms "
                   f"({rep.modeled_wall/bound:6.1f}x bound) "
                   f"revenue={rev:.2f}")
+            if overlapped:
+                print(f"    pipeline stages: {rep.stage_summary}")
 
         for overlapped in (False, True):
             res, brep, prep = q12(

@@ -24,11 +24,12 @@ from __future__ import annotations
 
 import enum
 import zlib
-from typing import Tuple
+from typing import Dict, Tuple
 
 import numpy as np
 
 from repro.core import bitpack
+from repro.core.lru import ByteCappedLRU
 
 
 class Codec(enum.IntEnum):
@@ -104,6 +105,43 @@ def cascade_manifest(data: bytes) -> dict:
     return {"n_words": n, "n_runs": n_runs, "value_width": vw,
             "count_width": cw, "value_words": val_words.copy(),
             "count_words": cnt_words.copy()}
+
+
+# ---------------------------------------------------------------------------
+# chunk-level decompress memo
+# ---------------------------------------------------------------------------
+
+def _entry_bytes(payloads: Dict) -> int:
+    return sum(len(p) for p in payloads.values()
+               if isinstance(p, (bytes, bytearray, memoryview)))
+
+
+class DecompressMemo(ByteCappedLRU):
+    """Byte-capped LRU of decompressed page payloads, one entry per column
+    chunk (entries are dicts keyed by page index, plus ``"dict"``).
+
+    gzip is the host-decompress bottleneck for min_gain=0 files (one zlib
+    call per page, ~100 per chunk): when the query loop revisits a chunk —
+    repeated Q6/Q12 over the same file, or a second scan in the same
+    process — re-inflating identical bytes is pure waste.  The DecodePlan's
+    decompress stage consults this memo keyed by
+    ``(file token, column, chunk byte range)`` and stores the whole chunk's
+    page payloads (data pages + dictionary page) as one entry, so a hit
+    skips every zlib call for that chunk.
+
+    Thread-safe: the pipeline executor's decode workers share it.
+    """
+
+    def __init__(self, max_bytes: int = 256 * 1024 * 1024):
+        super().__init__(max_bytes, _entry_bytes)
+
+
+_CHUNK_MEMO = DecompressMemo()
+
+
+def chunk_decompress_memo() -> DecompressMemo:
+    """The process-wide chunk decompress memo (see DecompressMemo)."""
+    return _CHUNK_MEMO
 
 
 # ---------------------------------------------------------------------------

@@ -34,7 +34,9 @@ don't-care values past each page's true ``n_values`` and are sliced away.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import os
+import threading
 import time
 from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -42,12 +44,13 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import bitpack
-from repro.core.compression import Codec, cascade_manifest, decompress
+from repro.core.compression import (Codec, cascade_manifest,
+                                    chunk_decompress_memo, decompress)
 from repro.core.encodings import (Encoding, build_delta_manifest,
                                   decode_plain_page)
 from repro.core.metadata import ChunkMeta, FileMeta, PageMeta
 from repro.core.schema import Field, PhysicalType
-from repro.kernels import ops
+from repro.kernels import dict_decode, ops
 
 _INT_TYPES = (PhysicalType.INT32, PhysicalType.INT64)
 
@@ -60,6 +63,62 @@ _DICT_ARENA_CAP_BYTES = 16 * 1024 * 1024
 
 def _next_pow2(n: int) -> int:
     return 1 << max(0, int(n) - 1).bit_length()
+
+
+_planner_token_counter = itertools.count()
+
+
+# ---------------------------------------------------------------------------
+# arena pool
+# ---------------------------------------------------------------------------
+
+class ArenaPool:
+    """Reusable decode-arena buffers (DESIGN.md §2.4).
+
+    ``take`` returns a ``(shape, dtype)`` ndarray view over a pooled byte
+    buffer; ``give`` returns the buffer once the row group's kernels have
+    consumed it, so consecutive row groups of the same file share arenas
+    instead of paying a fresh ``np.zeros`` each (the PR-1 allocation).
+    Reused buffers are **not** re-zeroed: arena words past each page's
+    payload decode to don't-care values that the scatter stage slices away
+    (``n_values``-exact), so zero-filling per row group is pure overhead.
+
+    Thread-safe (the pipeline executor's decode workers share the planner);
+    byte-capped — buffers beyond ``max_bytes`` are dropped on ``give``.
+    """
+
+    def __init__(self, max_bytes: int = 32 * 1024 * 1024):
+        self.max_bytes = max_bytes
+        self._free: Dict[int, List[np.ndarray]] = {}
+        self._lock = threading.Lock()
+        self._pooled_bytes = 0
+        self.allocs = 0
+        self.reuses = 0
+
+    def take(self, shape: Tuple[int, ...], dtype
+             ) -> Tuple[np.ndarray, np.ndarray]:
+        """Returns ``(view, buffer)``; pass ``buffer`` back to ``give``."""
+        dt = np.dtype(dtype)
+        need = int(np.prod(shape, dtype=np.int64)) * dt.itemsize
+        cap = _next_pow2(need)
+        buf = None
+        with self._lock:
+            stack = self._free.get(cap)
+            if stack:
+                buf = stack.pop()
+                self._pooled_bytes -= cap
+                self.reuses += 1
+        if buf is None:
+            buf = np.zeros(cap, dtype=np.uint8)
+            self.allocs += 1
+        return buf[:need].view(dt).reshape(shape), buf
+
+    def give(self, buf: np.ndarray) -> None:
+        cap = buf.shape[0]
+        with self._lock:
+            if self._pooled_bytes + cap <= self.max_bytes:
+                self._free.setdefault(cap, []).append(buf)
+                self._pooled_bytes += cap
 
 
 # ---------------------------------------------------------------------------
@@ -192,7 +251,8 @@ class DecodePlanner:
     """
 
     def __init__(self, meta: FileMeta, columns: Sequence[str],
-                 backend: str = "pallas"):
+                 backend: str = "pallas",
+                 cache_token: Optional[tuple] = None):
         assert backend in ("pallas", "host")
         self.meta = meta
         self.columns = list(columns)
@@ -200,6 +260,13 @@ class DecodePlanner:
         self._plans: Dict[int, RowGroupPlan] = {}
         self.plans_built = 0
         self.plan_seconds = 0.0
+        # identifies the file *contents* this planner decodes; keys the
+        # cross-row-group dictionary cache and decompress memo so a
+        # same-path rewrite can never serve stale entries
+        self.cache_token = (cache_token if cache_token is not None
+                            else ("planner", next(_planner_token_counter)))
+        self._plan_lock = threading.Lock()
+        self._arena_pool = ArenaPool()
 
     # -- planning ----------------------------------------------------------
 
@@ -207,35 +274,39 @@ class DecodePlanner:
         plan = self._plans.get(rg_index)
         if plan is not None:
             return plan
-        t0 = time.perf_counter()
-        key_fn = (_pallas_page_keys if self.backend == "pallas"
-                  else _host_page_keys)
-        rg = self.meta.row_groups[rg_index]
-        groups: "OrderedDict[tuple, DecodeGroup]" = OrderedDict()
-        grouped, fallback = [], []
-        for name in self.columns:
-            chunk = rg.column(name)
-            field = self.meta.schema.field(name)
-            keys = key_fn(chunk, field)
-            if keys is None:
-                fallback.append(name)
-                continue
-            grouped.append(name)
-            for pi, (pm, key) in enumerate(zip(chunk.pages, keys)):
-                g = groups.get(key)
-                if g is None:
-                    g = DecodeGroup(key=key, encoding=Encoding(key[0]),
-                                    codec=Codec(key[1]), slots=[])
-                    groups[key] = g
-                g.slots.append(PageSlot(name, pi, pm.n_values))
-        final: List[DecodeGroup] = []
-        for g in groups.values():
-            final.extend(self._split_oversize_dict_group(g, rg))
-        plan = RowGroupPlan(rg_index, final, grouped, fallback)
-        self._plans[rg_index] = plan
-        self.plans_built += 1
-        self.plan_seconds += time.perf_counter() - t0
-        return plan
+        with self._plan_lock:     # decode workers may plan concurrently
+            plan = self._plans.get(rg_index)
+            if plan is not None:
+                return plan
+            t0 = time.perf_counter()
+            key_fn = (_pallas_page_keys if self.backend == "pallas"
+                      else _host_page_keys)
+            rg = self.meta.row_groups[rg_index]
+            groups: "OrderedDict[tuple, DecodeGroup]" = OrderedDict()
+            grouped, fallback = [], []
+            for name in self.columns:
+                chunk = rg.column(name)
+                field = self.meta.schema.field(name)
+                keys = key_fn(chunk, field)
+                if keys is None:
+                    fallback.append(name)
+                    continue
+                grouped.append(name)
+                for pi, (pm, key) in enumerate(zip(chunk.pages, keys)):
+                    g = groups.get(key)
+                    if g is None:
+                        g = DecodeGroup(key=key, encoding=Encoding(key[0]),
+                                        codec=Codec(key[1]), slots=[])
+                        groups[key] = g
+                    g.slots.append(PageSlot(name, pi, pm.n_values))
+            final: List[DecodeGroup] = []
+            for g in groups.values():
+                final.extend(self._split_oversize_dict_group(g, rg))
+            plan = RowGroupPlan(rg_index, final, grouped, fallback)
+            self._plans[rg_index] = plan
+            self.plans_built += 1
+            self.plan_seconds += time.perf_counter() - t0
+            return plan
 
     def _split_oversize_dict_group(self, group: DecodeGroup, rg
                                    ) -> List[DecodeGroup]:
@@ -267,6 +338,7 @@ class DecodePlanner:
         use_kernels = self.backend == "pallas"
         out: Dict[str, ops.DecodeResult] = {}
         demoted: List[str] = []
+        leases: List[np.ndarray] = []   # pooled arena buffers in use
 
         # decompressed page payloads for every grouped column
         payloads = self._decompress_stage(plan, rg, raws)
@@ -282,7 +354,7 @@ class DecodePlanner:
                 demoted.extend(newly)
             if not slots:
                 continue
-            exec_group(group, slots, rg, payloads, per_col_parts)
+            exec_group(group, slots, rg, payloads, per_col_parts, leases)
 
         for name in plan.grouped_columns:
             if name in demoted:
@@ -294,25 +366,98 @@ class DecodePlanner:
         for name in list(plan.fallback_columns) + demoted:
             chunk = rg.column(name)
             field = self.meta.schema.field(name)
-            out[name] = ops.decode_chunk(chunk, field, raws[name],
-                                         use_kernels=use_kernels)
+            out[name] = ops.decode_chunk(
+                chunk, field, raws[name], use_kernels=use_kernels,
+                payloads=self._fallback_payloads(chunk, name, raws))
+        if leases:
+            # flush before returning arenas: a pooled buffer may be aliased
+            # by in-flight device computation until results materialize
+            for res in out.values():
+                if res.on_device:
+                    res.array.block_until_ready()
+            for buf in leases:
+                self._arena_pool.give(buf)
         return {name: out[name] for name in self.columns}
 
     # -- stages ------------------------------------------------------------
+
+    def _memo_key(self, chunk, name: str) -> Optional[tuple]:
+        """Memo key for host-decompressed chunks (gzip on either backend,
+        cascade on the host backend); None → not memoizable."""
+        codec = Codec(chunk.codec)
+        if codec == Codec.GZIP or (codec == Codec.CASCADE
+                                   and self.backend != "pallas"):
+            return (self.cache_token, name, chunk.byte_range)
+        return None
+
+    @staticmethod
+    def _inflate_chunk_entry(chunk, raw) -> Dict[object, object]:
+        """Decompress every page of one chunk into the memo entry format:
+        {page_index: payload, "dict": dictionary payload} — the shape both
+        the grouped decompress stage and ops.decode_chunk consume."""
+        codec = Codec(chunk.codec)
+        off0, _ = chunk.byte_range
+        entry: Dict[object, object] = {}
+        if chunk.dict_page is not None:
+            dp = chunk.dict_page
+            entry["dict"] = decompress(
+                raw[dp.offset - off0:dp.offset - off0 + dp.stored_size],
+                codec, dp.uncompressed_size)
+        for pi, pm in enumerate(chunk.pages):
+            lo = pm.offset - off0
+            entry[pi] = decompress(raw[lo:lo + pm.stored_size], codec,
+                                   pm.uncompressed_size)
+        return entry
+
+    def _fallback_payloads(self, chunk, name: str, raws
+                           ) -> Optional[Dict]:
+        """Pre-inflated page payloads for a fallback column, served from
+        (and feeding) the chunk decompress memo — strings/float64 gzip
+        chunks are exactly the host-decompress bottleneck the memo is
+        for.  None → decode_chunk decompresses itself (NONE codec,
+        device-cascade)."""
+        memo_key = self._memo_key(chunk, name)
+        if memo_key is None:
+            return None
+        memo = chunk_decompress_memo()
+        hit = memo.get(memo_key)
+        if hit is not None:
+            return hit
+        return memo.put(memo_key,
+                        self._inflate_chunk_entry(chunk, raws[name]))
 
     def _decompress_stage(self, plan: RowGroupPlan, rg,
                           raws: Dict[str, bytes]
                           ) -> Dict[Tuple[str, int], bytes]:
         """(column, page_index) → decoded payload bytes (or raw-view tuple
         ``(raw, offset, size)`` for uncompressed pages, enabling the
-        single-copy arena fill)."""
+        single-copy arena fill).
+
+        Host-decompressed chunks (gzip on either backend, cascade on the
+        host backend) go through the chunk-level decompress memo: a scan
+        that revisits the chunk — repeated queries, a second pass — reuses
+        the inflated payloads instead of re-running one zlib call per page.
+        """
         payloads: Dict[Tuple[str, int], object] = {}
         cascade_pages: List[Tuple[str, int, bytes]] = []
+        memo = chunk_decompress_memo()
         for name in plan.grouped_columns:
             chunk = rg.column(name)
             raw = raws[name]
             off0, _ = chunk.byte_range
             codec = Codec(chunk.codec)
+            memo_key = self._memo_key(chunk, name)
+            if memo_key is not None:
+                # memo entries are keyed by page index ("dict" for the
+                # dictionary page) and shared with the fallback path
+                entry = memo.get(memo_key)
+                if entry is None:
+                    entry = memo.put(
+                        memo_key, self._inflate_chunk_entry(chunk, raw))
+                for k, v in entry.items():
+                    payloads[(name, k)] = v
+                continue
+            # not memoizable: raw views (NONE) / device-side cascade
             if chunk.dict_page is not None:
                 dp = chunk.dict_page
                 payloads[(name, "dict")] = decompress(
@@ -322,13 +467,9 @@ class DecodePlanner:
                 lo = pm.offset - off0
                 if codec == Codec.NONE:
                     payloads[(name, pi)] = (raw, lo, pm.stored_size)
-                elif codec == Codec.CASCADE and self.backend == "pallas":
+                else:
                     cascade_pages.append((name, pi,
                                           raw[lo:lo + pm.stored_size]))
-                else:
-                    payloads[(name, pi)] = decompress(
-                        raw[lo:lo + pm.stored_size], codec,
-                        pm.uncompressed_size)
         if cascade_pages:
             metas = [rg.column(n).pages[pi] for n, pi, _ in cascade_pages]
             dec = ops.cascade_decompress_device(
@@ -410,16 +551,18 @@ class DecodePlanner:
 
     def _execute_group_pallas(self, group: DecodeGroup,
                               slots: List[PageSlot], rg, payloads,
-                              per_col_parts) -> None:
+                              per_col_parts, leases) -> None:
         enc = group.encoding
         if enc == Encoding.RLE_DICTIONARY:
-            batch = self._dict_group_pallas(group, slots, rg, payloads)
+            batch = self._dict_group_pallas(group, slots, rg, payloads,
+                                            leases)
         elif enc == Encoding.DELTA_BINARY_PACKED:
             batch = self._delta_group_pallas(group, slots, rg, payloads)
         elif enc == Encoding.RLE:
             batch = self._rle_group_pallas(group, slots, rg, payloads)
         else:
-            batch = self._bss_group_pallas(group, slots, rg, payloads)
+            batch = self._bss_group_pallas(group, slots, rg, payloads,
+                                           leases)
         self._scatter_batch(batch, slots, per_col_parts)
 
     @staticmethod
@@ -439,40 +582,55 @@ class DecodePlanner:
                 ops._compact(batch[i:j], counts)
             i = j
 
-    def _dict_group_pallas(self, group, slots, rg, payloads):
+    def _dict_group_pallas(self, group, slots, rg, payloads, leases):
         width = group.key[2]
         w_arena = max(
             -(-rg.column(s.column).pages[s.page_index].uncompressed_size
               // 4) for s in slots)
-        arena = np.zeros((len(slots), max(w_arena, 1)), dtype=np.uint32)
+        arena, buf = self._arena_pool.take(
+            (len(slots), max(w_arena, 1)), np.uint32)
+        leases.append(buf)
         self._fill_arena(arena, slots, payloads)
-        dicts = {}
+        dicts: Dict[str, dict_decode.CachedDictionary] = {}
         for s in slots:
             if s.column not in dicts:
                 dicts[s.column] = self._device_dictionary(rg, s.column,
                                                           payloads)
         if len(dicts) == 1:   # single-column group: no dict duplication
             return ops.decode_dict_group_shared(
-                arena, next(iter(dicts.values())), width)
-        d_max = max(d.shape[0] for d in dicts.values())
-        dtype = next(iter(dicts.values())).dtype
-        dict_arena = np.zeros((len(slots), d_max), dtype=dtype)
+                arena, next(iter(dicts.values())).device, width)
+        d_max = max(d.host.shape[0] for d in dicts.values())
+        dtype = next(iter(dicts.values())).host.dtype
+        dict_arena, dbuf = self._arena_pool.take((len(slots), d_max), dtype)
+        leases.append(dbuf)
         for row, s in enumerate(slots):
-            d = dicts[s.column]
+            d = dicts[s.column].host
             dict_arena[row, :d.shape[0]] = d
         return ops.decode_dict_group(arena, dict_arena, width)
 
-    def _device_dictionary(self, rg, name: str, payloads) -> np.ndarray:
+    def _device_dictionary(self, rg, name: str, payloads
+                           ) -> dict_decode.CachedDictionary:
+        """Decoded dictionary for one column chunk, served from the
+        cross-row-group cache (kernels/dict_decode.py) keyed by
+        (file token, column, dict-page offset) — repeated scans skip both
+        the host PLAIN-decode and the host→device staging."""
         chunk = rg.column(name)
-        field = self.meta.schema.field(name)
         dp = chunk.dict_page
+        # "device" variant: stored narrowed (int64→int32, bool→uint8);
+        # distinct from the "host" variant of _host_dictionary
+        key = (self.cache_token, name, dp.offset, "device")
+        entry = dict_decode.dict_cache_get(key)
+        if entry is not None:
+            return entry
+        field = self.meta.schema.field(name)
         dictionary = decode_plain_page(payloads[(name, "dict")], dp.n_values,
                                        field, dp.extra)
         if field.physical == PhysicalType.INT64:
             dictionary = dictionary.astype(np.int32)
         elif field.physical == PhysicalType.BOOLEAN:
             dictionary = dictionary.astype(np.uint8)
-        return np.ascontiguousarray(dictionary)
+        return dict_decode.dict_cache_put(
+            key, np.ascontiguousarray(dictionary))
 
     def _delta_group_pallas(self, group, slots, rg, payloads):
         n_blocks = group.key[2]
@@ -496,9 +654,11 @@ class DecodePlanner:
         vals, counts = ops.rle_group_arrays(runs)
         return ops.decode_rle_group(vals, counts, n_out=n_out)
 
-    def _bss_group_pallas(self, group, slots, rg, payloads):
+    def _bss_group_pallas(self, group, slots, rg, payloads, leases):
         stride = group.key[2]
-        arena = np.zeros((len(slots), 4 * stride), dtype=np.uint32)
+        arena, buf = self._arena_pool.take((len(slots), 4 * stride),
+                                           np.uint32)
+        leases.append(buf)
         for row, s in enumerate(slots):
             pm = rg.column(s.column).pages[s.page_index]
             n = pm.n_values
@@ -516,7 +676,8 @@ class DecodePlanner:
     # -- host group execution ---------------------------------------------
 
     def _execute_group_host(self, group: DecodeGroup, slots: List[PageSlot],
-                            rg, payloads, per_col_parts) -> None:
+                            rg, payloads, per_col_parts, leases) -> None:
+        del leases  # host groups build exact-size numpy slabs, no arenas
         enc = group.encoding
         if enc == Encoding.RLE_DICTIONARY:
             self._dict_group_host(group, slots, rg, payloads, per_col_parts)
@@ -642,8 +803,13 @@ class DecodePlanner:
 
     def _host_dictionary(self, chunk: ChunkMeta, field: Field, payloads):
         dp = chunk.dict_page
-        raw = payloads[(chunk.name, "dict")]
-        return decode_plain_page(raw, dp.n_values, field, dp.extra)
+        key = (self.cache_token, chunk.name, dp.offset, "host")
+        entry = dict_decode.dict_cache_get(key)
+        if entry is None:
+            raw = payloads[(chunk.name, "dict")]
+            entry = dict_decode.dict_cache_put(
+                key, decode_plain_page(raw, dp.n_values, field, dp.extra))
+        return entry.host
 
 
 # ---------------------------------------------------------------------------
@@ -670,7 +836,10 @@ def planner_for(path: str, meta: FileMeta, columns: Sequence[str],
     if planner is not None:
         _PLANNER_CACHE.move_to_end(key)
         return planner
-    planner = DecodePlanner(meta, columns, backend)
+    # cache_token omits the column selection: scanners over different
+    # column subsets of one file share dictionary/decompress cache entries
+    planner = DecodePlanner(meta, columns, backend,
+                            cache_token=(path, stamp, meta.stored_bytes))
     _PLANNER_CACHE[key] = planner
     while len(_PLANNER_CACHE) > _PLANNER_CACHE_MAX:
         _PLANNER_CACHE.popitem(last=False)

@@ -1,0 +1,62 @@
+"""Byte-capped, thread-safe LRU shared by the scan path's cross-scan
+caches: the chunk decompress memo (core/compression.py) and the decoded
+dictionary cache (kernels/dict_decode.py).  One implementation of the
+lock + ordered-dict + eviction + hit/miss accounting, parameterized only
+by how an entry's size is computed."""
+
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from typing import Callable, Dict, Optional
+
+
+class ByteCappedLRU:
+    def __init__(self, max_bytes: int, sizer: Callable[[object], int]):
+        self.max_bytes = max_bytes
+        self._sizer = sizer
+        self._entries: "OrderedDict[object, object]" = OrderedDict()
+        self._sizes: Dict[object, int] = {}
+        self._lock = threading.Lock()
+        self.bytes = 0
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key) -> Optional[object]:
+        with self._lock:
+            value = self._entries.get(key)
+            if value is None:
+                self.misses += 1
+                return None
+            self._entries.move_to_end(key)
+            self.hits += 1
+            return value
+
+    def put(self, key, value) -> object:
+        """Stores ``value`` (oversize values are returned uncached) and
+        returns it, so call sites can build-and-insert in one expression."""
+        size = self._sizer(value)
+        if size > self.max_bytes:
+            return value
+        with self._lock:
+            self.bytes -= self._sizes.pop(key, 0)
+            self._entries[key] = value
+            self._sizes[key] = size
+            self.bytes += size
+            self._entries.move_to_end(key)
+            while self.bytes > self.max_bytes and self._entries:
+                k, _ = self._entries.popitem(last=False)
+                self.bytes -= self._sizes.pop(k)
+        return value
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self._sizes.clear()
+            self.bytes = 0
+            self.hits = 0
+            self.misses = 0
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)

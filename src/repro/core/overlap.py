@@ -1,21 +1,43 @@
-"""Blocking vs overlapped execution (paper §4).
+"""Staged pipeline scan executor (paper §4): fetch ∥ decompress/decode ∥ consume.
 
 The blocking reader fetches *all* I/O, then decodes, then runs the query —
-the accelerator idles through the I/O phase.  The overlapped reader
-double-buffers at row-group granularity: a background thread prefetches RG
-i+1..i+depth while RG i decodes and is consumed, which both hides I/O and
-bounds memory (the paper's OOM point).
+the accelerator idles through the I/O phase.  The pipelined reader splits a
+scan into three stages at row-group granularity (DESIGN.md §2.5):
+
+  fetch    one I/O thread prefetches RG byte ranges (coalesced requests);
+  decode   a pool of ``decode_workers`` threads (default: one fewer than
+           the core count, capped at 2 — see default_decode_workers) runs
+           decompress + decode (``Scanner.decode_rg``) *off the consume
+           thread*, so host decode work no longer serializes kernel
+           execution;
+  consume  the caller's thread executes query kernels strictly in plan
+           order while later row groups decode behind it.
+
+Backpressure: at most ``depth`` row groups are in flight (fetched or decoded
+but not yet consumed) — the fetch thread blocks on an in-flight semaphore
+that the consume stage releases, which bounds memory (the paper's OOM
+point).  ``decode_workers=0`` degenerates to the PR-1 executor: decode runs
+inline on the consume thread.
 
 Two time accountings are produced:
   measured_wall  actual wall time of this process (real thread overlap)
   modeled        pipeline schedule combining per-RG stage times — required
                  when storage time is simulated (sim backend), since a
-                 simulated fetch returns instantly on the host clock.
+                 simulated fetch returns instantly on the host clock.  The
+                 overlapped model schedules decode on ``decode_workers``
+                 parallel servers feeding an in-order consume stage; with
+                 ``decode_workers=0`` decode shares the consume thread and
+                 the schedule reduces to the PR-1 two-stage model.
+
+Per-stage wall spans (first-start → last-end per stage) are recorded in
+``RunReport.stage_walls`` and mirrored into ``ScanMetrics`` so measured and
+modeled walls can be cross-checked.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import os
 import queue
 import threading
 import time
@@ -25,6 +47,19 @@ from repro.core.scan import Scanner, ScanMetrics
 from repro.kernels.common import kernel_launch_count
 
 Consume = Callable[[object, int, Dict], object]
+
+
+def default_decode_workers() -> int:
+    """Decode-pool width: leave one core for the consume stage.  On the
+    2-core CI/container class one worker is already the full win (decode
+    off the consume thread); wider pools only pay with spare cores.
+    Override with REPRO_DECODE_WORKERS (0 → inline decode).  Resolved at
+    call time — ``decode_workers=None`` in run_overlapped/q6/q12 — so
+    setting the env var after import still takes effect."""
+    env = os.environ.get("REPRO_DECODE_WORKERS")
+    if env is not None:
+        return max(0, int(env))
+    return max(1, min(2, (os.cpu_count() or 2) - 1))
 
 
 class _MetricsProbe:
@@ -53,18 +88,54 @@ class RunReport:
     measured_wall: float
     metrics: ScanMetrics
     consume_per_rg: List[float]
+    decode_workers: int = 0     # 0 → decode ran inline on the consume thread
+    depth: int = 2              # in-flight bound the executor ran with
+    stage_walls: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     @property
     def modeled_wall(self) -> float:
-        compute = [d + c for d, c in zip(self.metrics.decode_per_rg,
-                                         self.consume_per_rg)]
+        """Pipeline schedule over the per-RG stage times.
+
+        blocking            io_total + Σ(decode + consume)
+        overlapped, W = 0   two stages: storage ∥ (decode + consume) serial
+                            on the consume thread (the PR-1 executor)
+        overlapped, W ≥ 1   three stages: storage → W parallel decode
+                            servers → in-order consume; RG i's decode starts
+                            at max(io_done(i), earliest-free server) and its
+                            consume at max(decode_done(i), consume_done(i-1))
+
+        Overlapped schedules honor the executor's ``depth`` backpressure:
+        RG k's fetch cannot start before RG k-depth is consumed (the
+        in-flight semaphore), so the model never reports a schedule the
+        real executor could not achieve.
+        """
+        dec = self.metrics.decode_per_rg
+        cons = self.consume_per_rg
+        ios = self.metrics.io_per_rg
         if self.mode == "blocking":
-            return self.metrics.io_seconds + sum(compute)
-        io_done, compute_done = 0.0, 0.0
-        for io, comp in zip(self.metrics.io_per_rg, compute):
-            io_done += io
-            compute_done = max(io_done, compute_done) + comp
-        return compute_done
+            return (self.metrics.io_seconds + sum(dec) + sum(cons))
+        depth = max(1, self.depth)
+        done_hist: List[float] = []     # per-RG consume completion
+        io_done = 0.0
+        if self.decode_workers <= 0:
+            compute_done = 0.0
+            for k, (io, d, c) in enumerate(zip(ios, dec, cons)):
+                gate = done_hist[k - depth] if k >= depth else 0.0
+                io_done = max(io_done, gate) + io
+                compute_done = max(io_done, compute_done) + d + c
+                done_hist.append(compute_done)
+            return compute_done
+        free = [0.0] * self.decode_workers
+        consume_done = 0.0
+        for k, (io, d, c) in enumerate(zip(ios, dec, cons)):
+            gate = done_hist[k - depth] if k >= depth else 0.0
+            io_done = max(io_done, gate) + io
+            j = min(range(len(free)), key=free.__getitem__)
+            decode_done = max(io_done, free[j]) + d
+            free[j] = decode_done
+            consume_done = max(consume_done, decode_done) + c
+            done_hist.append(consume_done)
+        return consume_done
 
     def effective_bandwidth(self) -> float:
         return self.metrics.logical_bytes / max(1e-12, self.modeled_wall)
@@ -77,6 +148,29 @@ class RunReport:
                 f"io_requests={m.n_io_requests};"
                 f"plan_ms={m.plan_seconds * 1e3:.2f}")
 
+    @property
+    def stage_summary(self) -> str:
+        """Per-stage wall spans of this run (pipeline observability)."""
+        w = self.stage_walls
+        return (f"fetch_ms={w.get('fetch', 0.0) * 1e3:.2f};"
+                f"decode_ms={w.get('decode', 0.0) * 1e3:.2f};"
+                f"consume_ms={w.get('consume', 0.0) * 1e3:.2f};"
+                f"workers={self.decode_workers}")
+
+
+def _account_rg(scanner: Scanner, m: ScanMetrics, i: int, cols: Dict,
+                io_dt: float, dec_dt: float) -> None:
+    m.io_seconds += io_dt
+    m.io_per_rg.append(io_dt)
+    m.decode_seconds += dec_dt
+    m.decode_per_rg.append(dec_dt)
+    rg = scanner.meta.row_groups[i]
+    for name in scanner.columns:
+        m.stored_bytes += rg.column(name).stored_bytes
+        m.n_pages += len(rg.column(name).pages)
+    m.logical_bytes += sum(r.logical_bytes for r in cols.values())
+    m.n_row_groups += 1
+
 
 def run_blocking(scanner: Scanner, consume: Optional[Consume] = None,
                  row_groups: Optional[Sequence[int]] = None,
@@ -87,80 +181,168 @@ def run_blocking(scanner: Scanner, consume: Optional[Consume] = None,
     m = ScanMetrics(backend=getattr(scanner.storage, "kind", "real"))
     probe = _MetricsProbe(scanner)
     staged = []
+    t_f0 = time.perf_counter()
     for i in plan:
         raws, io_dt = scanner.fetch_rg(i)
-        staged.append((i, raws))
-        m.io_seconds += io_dt
-        m.io_per_rg.append(io_dt)
+        staged.append((i, raws, io_dt))
+    fetch_wall = time.perf_counter() - t_f0
     acc = None
     consume_times: List[float] = []
-    for i, raws in staged:
+    decode_wall = 0.0
+    for i, raws, io_dt in staged:
+        t_d = time.perf_counter()
         cols, dec_dt = scanner.decode_rg(i, raws)
-        m.decode_seconds += dec_dt
-        m.decode_per_rg.append(dec_dt)
-        rg = scanner.meta.row_groups[i]
-        for name in scanner.columns:
-            m.stored_bytes += rg.column(name).stored_bytes
-            m.n_pages += len(rg.column(name).pages)
-        m.logical_bytes += sum(r.logical_bytes for r in cols.values())
-        m.n_row_groups += 1
+        decode_wall += time.perf_counter() - t_d
+        _account_rg(scanner, m, i, cols, io_dt, dec_dt)
         t1 = time.perf_counter()
         if consume is not None:
             acc = consume(acc, i, cols)
         consume_times.append(time.perf_counter() - t1)
     probe.finish(m)
+    m.fetch_wall_seconds = fetch_wall
+    m.decode_wall_seconds = decode_wall
+    m.consume_seconds = sum(consume_times)
+    walls = {"fetch": fetch_wall, "decode": decode_wall,
+             "consume": sum(consume_times)}
     return acc, RunReport("blocking", time.perf_counter() - t0, m,
-                          consume_times)
+                          consume_times, decode_workers=0, depth=0,
+                          stage_walls=walls)
+
+
+class _PipelineState:
+    """Cross-thread state for one pipelined run: completed decodes keyed by
+    plan position (consume reorders), first-error capture, and the abort
+    flag every stage polls so failures drain instead of deadlocking."""
+
+    def __init__(self):
+        self.cv = threading.Condition()
+        self.done: Dict[int, tuple] = {}
+        self.errors: List[BaseException] = []
+        self.abort = threading.Event()
+        self.decode_t0: Optional[float] = None
+        self.decode_t1: float = 0.0
+
+    def fail(self, exc: BaseException) -> None:
+        with self.cv:
+            self.errors.append(exc)
+            self.abort.set()
+            self.cv.notify_all()
 
 
 def run_overlapped(scanner: Scanner, consume: Optional[Consume] = None,
                    row_groups: Optional[Sequence[int]] = None,
-                   predicate_stats=None, depth: int = 2):
-    """RG-granular pipeline: I/O thread ∥ decode+consume (paper Fig. 4)."""
+                   predicate_stats=None, depth: int = 2,
+                   decode_workers: Optional[int] = None):
+    """Staged pipeline: I/O thread ∥ decode pool ∥ in-order consume.
+
+    ``depth`` bounds row groups in flight (fetched or decoded, not yet
+    consumed).  ``decode_workers=0`` decodes inline on the consume thread —
+    the PR-1 double-buffered executor; None → default_decode_workers().
+    """
     t0 = time.perf_counter()
     plan = scanner.plan(predicate_stats, row_groups)
     m = ScanMetrics(backend=getattr(scanner.storage, "kind", "real"))
     probe = _MetricsProbe(scanner)
-    q: "queue.Queue" = queue.Queue(maxsize=max(1, depth))
-    err: List[BaseException] = []
+    if decode_workers is None:
+        decode_workers = default_decode_workers()
+    workers = max(0, int(decode_workers))
+    state = _PipelineState()
+    inflight = threading.Semaphore(max(1, depth))
+    fetched: "queue.Queue" = queue.Queue()
+    fetch_wall = [0.0]
 
-    def io_worker():
+    def fetch_worker():
+        t_start = time.perf_counter()
         try:
-            for i in plan:
+            for seq, i in enumerate(plan):
+                while not state.abort.is_set():
+                    if inflight.acquire(timeout=0.05):
+                        break
+                if state.abort.is_set():
+                    break
                 raws, io_dt = scanner.fetch_rg(i)
-                q.put((i, raws, io_dt))
-        except BaseException as e:  # surfaced on the consumer side
-            err.append(e)
+                fetched.put((seq, i, raws, io_dt))
+        except BaseException as e:  # surfaced on the consume thread
+            state.fail(e)
         finally:
-            q.put(None)
+            fetch_wall[0] = time.perf_counter() - t_start
+            for _ in range(max(1, workers)):
+                fetched.put(None)
 
-    t = threading.Thread(target=io_worker, daemon=True)
-    t.start()
+    def decode_worker():
+        while True:
+            item = fetched.get()
+            if item is None:
+                break
+            if state.abort.is_set():
+                continue            # drain without decoding
+            seq, i, raws, io_dt = item
+            try:
+                t_d = time.perf_counter()
+                cols, dec_dt = scanner.decode_rg(i, raws)
+                t_e = time.perf_counter()
+            except BaseException as e:
+                state.fail(e)
+                continue
+            with state.cv:
+                if state.decode_t0 is None or t_d < state.decode_t0:
+                    state.decode_t0 = t_d
+                state.decode_t1 = max(state.decode_t1, t_e)
+                state.done[seq] = (i, cols, io_dt, dec_dt)
+                state.cv.notify_all()
+
+    threads = [threading.Thread(target=fetch_worker, daemon=True)]
+    threads += [threading.Thread(target=decode_worker, daemon=True)
+                for _ in range(workers)]
+    for t in threads:
+        t.start()
+
     acc = None
     consume_times: List[float] = []
-    while True:
-        item = q.get()
-        if item is None:
-            break
-        i, raws, io_dt = item
-        m.io_seconds += io_dt
-        m.io_per_rg.append(io_dt)
-        cols, dec_dt = scanner.decode_rg(i, raws)
-        m.decode_seconds += dec_dt
-        m.decode_per_rg.append(dec_dt)
-        rg = scanner.meta.row_groups[i]
-        for name in scanner.columns:
-            m.stored_bytes += rg.column(name).stored_bytes
-            m.n_pages += len(rg.column(name).pages)
-        m.logical_bytes += sum(r.logical_bytes for r in cols.values())
-        m.n_row_groups += 1
-        t1 = time.perf_counter()
-        if consume is not None:
-            acc = consume(acc, i, cols)
-        consume_times.append(time.perf_counter() - t1)
-    t.join()
-    if err:
-        raise err[0]
+    decode_wall_inline = 0.0
+    try:
+        for seq in range(len(plan)):
+            if workers:
+                with state.cv:
+                    while seq not in state.done and not state.abort.is_set():
+                        state.cv.wait(timeout=0.05)
+                    if seq not in state.done:
+                        break       # aborted upstream
+                    i, cols, io_dt, dec_dt = state.done.pop(seq)
+            else:
+                item = fetched.get()
+                if item is None:
+                    break           # fetch aborted
+                _, i, raws, io_dt = item
+                t_d = time.perf_counter()
+                cols, dec_dt = scanner.decode_rg(i, raws)
+                decode_wall_inline += time.perf_counter() - t_d
+            _account_rg(scanner, m, i, cols, io_dt, dec_dt)
+            t1 = time.perf_counter()
+            if consume is not None:
+                acc = consume(acc, i, cols)
+            consume_times.append(time.perf_counter() - t1)
+            inflight.release()
+    except BaseException:
+        state.abort.set()
+        raise
+    finally:
+        if state.errors:
+            state.abort.set()
+        for t in threads:
+            t.join(timeout=5.0)
+    if state.errors:
+        raise state.errors[0]
     probe.finish(m)
+    if workers and state.decode_t0 is not None:
+        decode_wall = state.decode_t1 - state.decode_t0
+    else:
+        decode_wall = decode_wall_inline
+    m.fetch_wall_seconds = fetch_wall[0]
+    m.decode_wall_seconds = decode_wall
+    m.consume_seconds = sum(consume_times)
+    walls = {"fetch": fetch_wall[0], "decode": decode_wall,
+             "consume": sum(consume_times)}
     return acc, RunReport("overlapped", time.perf_counter() - t0, m,
-                          consume_times)
+                          consume_times, decode_workers=workers,
+                          depth=max(1, depth), stage_walls=walls)

@@ -81,16 +81,22 @@ def _q6_consume(use_kernel: bool):
 
 
 def q6(scanner: Scanner, overlapped: bool = True, use_kernel: bool = False,
-       prune: bool = True, prepare_plan: bool = False
+       prune: bool = True, prepare_plan: bool = False, depth: int = 2,
+       decode_workers: Optional[int] = None
        ) -> Tuple[float, RunReport]:
     """Run Q6 over the scanner's stream.  ``prepare_plan`` pre-builds the
     row-group decode plans before timing starts (the serving-loop case —
     plans are cached per file footer + column selection, so repeated
-    queries always hit)."""
+    queries always hit).  ``depth``/``decode_workers`` shape the pipelined
+    executor (overlap.py); both are ignored for blocking runs."""
     if prepare_plan:
         scanner.prepare_plans(
             predicate_stats=q6_rg_stats_predicate if prune else None)
-    runner = run_overlapped if overlapped else run_blocking
+    if overlapped:
+        runner = functools.partial(run_overlapped, depth=depth,
+                                   decode_workers=decode_workers)
+    else:
+        runner = run_blocking
     acc, report = runner(scanner, _q6_consume(use_kernel),
                          predicate_stats=(q6_rg_stats_predicate
                                           if prune else None))
@@ -136,7 +142,8 @@ def _q12_probe(skeys, sprio, okey, mode, ship, commit, receipt):
 
 
 def q12(lineitem_scanner: Scanner, orders_scanner: Scanner,
-        overlapped: bool = True, prepare_plan: bool = False
+        overlapped: bool = True, prepare_plan: bool = False,
+        depth: int = 2, decode_workers: Optional[int] = None
         ) -> Tuple[Dict[str, int], RunReport, RunReport]:
     if prepare_plan:
         lineitem_scanner.prepare_plans()
@@ -148,7 +155,11 @@ def q12(lineitem_scanner: Scanner, orders_scanner: Scanner,
         return (k, p) if acc is None else (jnp.concatenate([acc[0], k]),
                                            jnp.concatenate([acc[1], p]))
 
-    runner = run_overlapped if overlapped else run_blocking
+    if overlapped:
+        runner = functools.partial(run_overlapped, depth=depth,
+                                   decode_workers=decode_workers)
+    else:
+        runner = run_blocking
     (keys, prio), build_report = runner(orders_scanner, build_consume)
     order = jnp.argsort(keys)
     skeys, sprio = keys[order], prio[order]

@@ -52,6 +52,12 @@ class ScanMetrics:
     n_kernel_launches: int = 0   # pallas dispatches during this scan
     n_io_requests: int = 0       # storage requests issued (post-coalescing)
     plan_seconds: float = 0.0    # decode-plan build time (0 on cache hits)
+    # per-stage wall spans of a pipelined run (overlap.py): elapsed time
+    # between each stage's first start and last end — distinct from the
+    # summed per-RG stage times above, which ignore thread overlap.
+    fetch_wall_seconds: float = 0.0
+    decode_wall_seconds: float = 0.0
+    consume_seconds: float = 0.0
 
     @property
     def blocking_seconds(self) -> float:

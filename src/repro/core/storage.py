@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import threading
 import time
 from typing import List, Sequence, Tuple
 
@@ -138,6 +139,9 @@ class RealStorage:
         self.path = path
         self._fd = os.open(path, os.O_RDONLY)
         self.stats = FetchStats()
+        # the pipeline executor's fetch thread and decode workers may issue
+        # concurrent reads; stats mutation is the only shared state
+        self._stats_lock = threading.Lock()
 
     def close(self) -> None:
         if self._fd is not None:
@@ -154,7 +158,8 @@ class RealStorage:
         t0 = time.perf_counter()
         data = os.pread(self._fd, size, offset)
         dt = time.perf_counter() - t0
-        self.stats.add(FetchStats(1, len(data), dt))
+        with self._stats_lock:
+            self.stats.add(FetchStats(1, len(data), dt))
         return data
 
     def fetch_batch(self, requests: Sequence[Tuple[int, int]]
@@ -162,10 +167,11 @@ class RealStorage:
         t0 = time.perf_counter()
         out = [os.pread(self._fd, s, o) for o, s in requests]
         dt = time.perf_counter() - t0
-        self.stats.add(FetchStats(len(requests),
-                                  sum(len(d) for d in out), dt,
-                                  batches=1,
-                                  last_batch_requests=len(requests)))
+        with self._stats_lock:
+            self.stats.add(FetchStats(len(requests),
+                                      sum(len(d) for d in out), dt,
+                                      batches=1,
+                                      last_batch_requests=len(requests)))
         return out, dt
 
 
@@ -187,6 +193,7 @@ class SimulatedStorage:
         self.latency = latency
         self._fd = os.open(path, os.O_RDONLY)
         self.stats = FetchStats()
+        self._stats_lock = threading.Lock()
 
     def close(self) -> None:
         if self._fd is not None:
@@ -214,17 +221,20 @@ class SimulatedStorage:
 
     def fetch(self, offset: int, size: int) -> bytes:
         data = self._read(offset, size)
-        self.stats.add(FetchStats(1, len(data), self.request_seconds(size)))
+        with self._stats_lock:
+            self.stats.add(FetchStats(1, len(data),
+                                      self.request_seconds(size)))
         return data
 
     def fetch_batch(self, requests: Sequence[Tuple[int, int]]
                     ) -> Tuple[List[bytes], float]:
         out = [self._read(o, s) for o, s in requests]
         dt = self.batch_seconds([s for _, s in requests])
-        self.stats.add(FetchStats(len(requests),
-                                  sum(len(d) for d in out), dt,
-                                  batches=1,
-                                  last_batch_requests=len(requests)))
+        with self._stats_lock:
+            self.stats.add(FetchStats(len(requests),
+                                      sum(len(d) for d in out), dt,
+                                      batches=1,
+                                      last_batch_requests=len(requests)))
         return out, dt
 
     def effective_bandwidth(self, size: int) -> float:

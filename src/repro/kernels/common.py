@@ -16,6 +16,8 @@ Pallas interpreter on CPU (the container's validation mode).
 
 from __future__ import annotations
 
+import threading
+
 import jax
 import jax.numpy as jnp
 
@@ -29,12 +31,16 @@ LANES = 32             # values per packing group
 # once per pallas_call it issues (outside jit, so retraces don't matter).
 # The DecodePlan's launch economy — O(encoding groups) instead of
 # O(columns × stride groups) per row group — is asserted against it.
+# Lock-guarded: the pipeline executor's decode workers dispatch kernels
+# concurrently with the consume thread.
 _kernel_launches = 0
+_launch_lock = threading.Lock()
 
 
 def count_launch(n: int = 1) -> None:
     global _kernel_launches
-    _kernel_launches += n
+    with _launch_lock:
+        _kernel_launches += n
 
 
 def kernel_launch_count() -> int:

@@ -16,7 +16,7 @@ Dispatch rules (documented fallbacks, DESIGN.md §2):
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -290,12 +290,18 @@ def cascade_decompress_device(raw_pages: List[Tuple[PageMeta, bytes]]
 # ---------------------------------------------------------------------------
 
 def decode_chunk(chunk: ChunkMeta, field: Field, raw: bytes,
-                 use_kernels: bool = True) -> DecodeResult:
+                 use_kernels: bool = True,
+                 payloads: Optional[Dict] = None) -> DecodeResult:
     """Decode one column chunk from its raw stored bytes.
 
     ``raw`` covers chunk.byte_range (dict page + data pages, possibly
     compressed).  Device-decodable encodings go through the Pallas kernels;
     everything else uses the host decoders.
+
+    ``payloads``, if given, is pre-decompressed page data keyed by page
+    index (plus ``"dict"``) — the DecodePlanner passes it so fallback
+    columns share the chunk-level decompress memo instead of re-inflating
+    per scan (core/compression.py).
     """
     off0, _ = chunk.byte_range
     codec = Codec(chunk.codec)
@@ -305,16 +311,23 @@ def decode_chunk(chunk: ChunkMeta, field: Field, raw: bytes,
         return raw[pm.offset - off0:pm.offset - off0 + pm.stored_size]
 
     # --- decompression stage ------------------------------------------------
-    if codec == Codec.CASCADE and use_kernels:
+    if payloads is not None:
+        pages = [(pm, payloads[pi]) for pi, pm in enumerate(chunk.pages)]
+        dict_payload = payloads.get("dict")
+    elif codec == Codec.CASCADE and use_kernels:
         pages = cascade_decompress_device(
             [(pm, stored(pm)) for pm in chunk.pages])
+        dict_payload = None
+        if chunk.dict_page is not None:
+            dict_payload = decompress(stored(chunk.dict_page), codec,
+                                      chunk.dict_page.uncompressed_size)
     else:
         pages = [(pm, decompress(stored(pm), codec, pm.uncompressed_size))
                  for pm in chunk.pages]
-    dict_payload = None
-    if chunk.dict_page is not None:
-        dict_payload = decompress(stored(chunk.dict_page), codec,
-                                  chunk.dict_page.uncompressed_size)
+        dict_payload = None
+        if chunk.dict_page is not None:
+            dict_payload = decompress(stored(chunk.dict_page), codec,
+                                      chunk.dict_page.uncompressed_size)
 
     # --- decode stage --------------------------------------------------------
     arr = None

@@ -1,0 +1,155 @@
+"""CI perf-gate logic (tools/check_regression.py): CSV parsing, the
+wall-time threshold, the exact counter gate, and coverage loss."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tools"))
+import check_regression as cr  # noqa: E402
+
+
+def _write_csv(path, rows):
+    with open(path, "w") as f:
+        f.write("name,us_per_call,derived\n")
+        for r in rows:
+            f.write(r + "\n")
+
+
+def test_parse_csv_extracts_counters(tmp_path):
+    p = str(tmp_path / "b.csv")
+    _write_csv(p, [
+        "q6_overlapped,1234.5,lower_bound_us=268;x_over_bound=4.6",
+        "plan_launches,90.0,launches_per_rg=5;pallas-interpret;measured",
+        "io_coalesced,50.0,requests=3;speedup=4.00x;sim",
+    ])
+    rows = cr.parse_csv(p)
+    assert rows["q6_overlapped"][0] == pytest.approx(1234.5)
+    assert rows["q6_overlapped"][1] == {}          # non-counter keys ignored
+    assert rows["plan_launches"][1] == {"launches_per_rg": 5.0}
+    assert rows["io_coalesced"][1] == {"requests": 3.0}
+
+
+def test_clean_run_passes():
+    base = {"a": (1000.0, {"launches": 4.0})}
+    cur = {"a": (1200.0, {"launches": 4.0})}       # +20% < 25%
+    regs, table = cr.compare(base, cur, 0.25, 500.0)
+    assert regs == []
+    assert table[0][-1] == "ok"
+
+
+def test_wall_regression_trips():
+    base = {"a": (1000.0, {})}
+    cur = {"a": (1300.0, {})}                      # +30%
+    regs, _ = cr.compare(base, cur, 0.25, 500.0)
+    assert len(regs) == 1 and "wall" in regs[0]
+
+
+def test_wall_noise_floor_skips_tiny_rows():
+    base = {"cache_hit": (10.0, {})}
+    cur = {"cache_hit": (30.0, {})}                # 3x but microseconds
+    regs, _ = cr.compare(base, cur, 0.25, 500.0)
+    assert regs == []
+
+
+def test_any_counter_increase_trips():
+    base = {"a": (1000.0, {"requests": 8.0})}
+    cur = {"a": (900.0, {"requests": 9.0})}        # faster but chattier
+    regs, _ = cr.compare(base, cur, 0.25, 500.0)
+    assert len(regs) == 1 and "requests" in regs[0]
+    # decreases are fine
+    regs2, _ = cr.compare(base, {"a": (900.0, {"requests": 7.0})},
+                          0.25, 500.0)
+    assert regs2 == []
+
+
+def test_missing_counter_token_trips():
+    """Dropping a gated counter from the derived column must not silently
+    disable its gate."""
+    base = {"a": (1000.0, {"launches": 4.0})}
+    cur = {"a": (1000.0, {})}
+    regs, _ = cr.compare(base, cur, 0.25, 500.0)
+    assert len(regs) == 1 and "missing" in regs[0]
+
+
+def test_missing_row_is_coverage_loss():
+    base = {"a": (1000.0, {}), "b": (1000.0, {})}
+    cur = {"a": (1000.0, {})}
+    regs, _ = cr.compare(base, cur, 0.25, 500.0)
+    assert len(regs) == 1 and "missing" in regs[0]
+
+
+def test_new_rows_do_not_trip():
+    base = {"a": (1000.0, {})}
+    cur = {"a": (1000.0, {}), "brand_new": (5.0, {})}
+    regs, table = cr.compare(base, cur, 0.25, 500.0)
+    assert regs == []
+    assert any("new (no baseline)" in row[-1] for row in table)
+
+
+def test_cli_end_to_end_pass_and_fail(tmp_path):
+    basedir = tmp_path / "baselines"
+    curdir = tmp_path / "current"
+    basedir.mkdir()
+    curdir.mkdir()
+    _write_csv(str(basedir / "fig5_smoke.csv"),
+               ["q6,1000.0,launches=4;sim"])
+    _write_csv(str(curdir / "fig5_smoke.csv"),
+               ["q6,1050.0,launches=4;sim"])
+    tool = os.path.join(os.path.dirname(__file__), "..", "tools",
+                        "check_regression.py")
+    report = str(tmp_path / "report.md")
+    ok = subprocess.run(
+        [sys.executable, tool, "--baseline", str(basedir), "--current",
+         str(curdir), "--report", report, "fig5_smoke.csv"],
+        capture_output=True, text=True)
+    assert ok.returncode == 0, ok.stdout + ok.stderr
+    assert os.path.exists(report)
+    # inject: doubled wall + one extra launch
+    _write_csv(str(curdir / "fig5_smoke.csv"),
+               ["q6,2000.0,launches=5;sim"])
+    bad = subprocess.run(
+        [sys.executable, tool, "--baseline", str(basedir), "--current",
+         str(curdir), "--report", report, "fig5_smoke.csv"],
+        capture_output=True, text=True)
+    assert bad.returncode == 1
+    assert "wall" in bad.stdout and "launches" in bad.stdout
+    with open(report) as f:
+        text = f.read()
+    assert "REGRESSIONS" in text
+
+
+def test_speed_scale_normalizes_slower_machine():
+    base = {"cpu_reference": (1000.0, {}), "a": (10000.0, {})}
+    # machine 2x slower; row +90% raw — normalized it's 5% faster
+    cur = {"cpu_reference": (2000.0, {}), "a": (19000.0, {})}
+    scale = cr.speed_scale(base, cur)
+    assert scale == pytest.approx(0.5)
+    regs, _ = cr.compare(base, cur, 0.25, 500.0, scale)
+    assert regs == []
+    # a real regression still trips through the normalization
+    cur2 = {"cpu_reference": (2000.0, {}), "a": (30000.0, {})}
+    regs2, _ = cr.compare(base, cur2, 0.25, 500.0,
+                          cr.speed_scale(base, cur2))
+    assert len(regs2) == 1 and "wall" in regs2[0]
+
+
+def test_speed_scale_clamped_and_optional():
+    assert cr.speed_scale({"a": (1.0, {})}, {"a": (1.0, {})}) == 1.0
+    base = {"cpu_reference": (10000.0, {})}
+    assert cr.speed_scale(base, {"cpu_reference": (100.0, {})}) == 4.0
+    assert cr.speed_scale(base, {"cpu_reference": (1e9, {})}) == 0.25
+
+
+def test_merge_min_takes_faster_run_per_row():
+    a = {"x": (1000.0, {"launches": 4.0}), "only_a": (5.0, {})}
+    b = {"x": (800.0, {"launches": 4.0}), "only_b": (7.0, {})}
+    merged = cr.merge_min(a, b)
+    assert merged["x"][0] == 800.0
+    assert merged["only_a"][0] == 5.0 and merged["only_b"][0] == 7.0
+
+
+def test_selftest_demonstrates_gate():
+    assert cr.selftest() == 0

@@ -1,0 +1,320 @@
+"""Pipelined scan executor (core/overlap.py): in-order consume, error
+propagation, degeneration to the inline executor, the 3-stage modeled
+wall, and the arena-reuse / dict-cache / decompress-memo decode paths."""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (CompressionSpec, EncodingPolicy, FileConfig,
+                        StringColumn, Table, write_table)
+from repro.core.compression import chunk_decompress_memo
+from repro.core.decode_plan import ArenaPool, clear_planner_cache
+from repro.core.overlap import RunReport, run_overlapped
+from repro.core.query import Q6_COLUMNS, q6, q6_reference
+from repro.core.scan import ScanMetrics, Scanner, open_scanner
+from repro.data import tpch
+from repro.kernels import dict_decode
+
+
+@pytest.fixture(scope="module")
+def tpch_files(tmp_path_factory):
+    d = tmp_path_factory.mktemp("tpch_pipe")
+    from repro.core.config import ACCELERATOR_OPTIMIZED
+    metas = tpch.write_tpch(str(d), sf=0.004,
+                            config=ACCELERATOR_OPTIMIZED.replace(
+                                rows_per_rg=4_000,
+                                target_pages_per_chunk=8),
+                            seed=33)
+    line, orders = tpch.generate_tables(sf=0.004, seed=33)
+    return metas, line, orders
+
+
+def _mixed_table(n=5_000, seed=0):
+    """Dict + delta + rle + bss + host-path columns, as in test_decode_plan."""
+    rng = np.random.default_rng(seed)
+    return Table({
+        "sorted32": np.cumsum(rng.integers(0, 5, n)).astype(np.int32),
+        "lowcard": rng.integers(0, 11, n).astype(np.int32),
+        "f32dict": rng.integers(0, 9, n).astype(np.float32) / 8.0,
+        "f32noise": rng.normal(size=n).astype(np.float32),
+        "flags": rng.random(n) < 0.2,
+        "runs": np.repeat(np.arange(-(-n // 500), dtype=np.int32), 500)[:n],
+        "strs": StringColumn.from_pylist([f"s{i % 23}" for i in range(n)]),
+    })
+
+
+# -- executor behaviour ------------------------------------------------------
+
+def test_pipelined_q6_matches_blocking(tpch_files):
+    metas, line, _ = tpch_files
+    ref = q6_reference({c: np.asarray(line[c]) for c in Q6_COLUMNS})
+    sc_b = open_scanner(metas["lineitem_path"], columns=Q6_COLUMNS,
+                        decode_backend="host")
+    sc_p = open_scanner(metas["lineitem_path"], columns=Q6_COLUMNS,
+                        decode_backend="host")
+    got_b, rep_b = q6(sc_b, overlapped=False)
+    got_p, rep_p = q6(sc_p, overlapped=True, decode_workers=2)
+    assert abs(got_b - ref) / max(1.0, abs(ref)) < 1e-5
+    assert abs(got_p - got_b) < 1e-6 * max(1.0, abs(got_b))
+    assert rep_p.decode_workers == 2
+    assert rep_p.metrics.n_row_groups == rep_b.metrics.n_row_groups
+    # no wall comparison between the two measured runs: each uses its own
+    # noisy per-RG times, and decode-thread contention on a 2-core CI host
+    # can invert it — the schedule itself is pinned on synthetic timings in
+    # test_modeled_wall_three_stage_schedule
+    assert rep_p.modeled_wall > 0.0
+
+
+def test_in_order_consume_under_out_of_order_decode(tpch_files):
+    """Later row groups decode *first* (inverted delays); the consume stage
+    must still see strictly ascending plan order."""
+    metas, line, _ = tpch_files
+    sc = open_scanner(metas["lineitem_path"], columns=["l_quantity"],
+                      decode_backend="host")
+    plan = sc.plan()
+    assert len(plan) >= 3
+    real_decode = sc.decode_rg
+
+    def inverted(i, raws):
+        time.sleep(0.01 * (plan[-1] - i))   # RG 0 finishes last
+        return real_decode(i, raws)
+
+    sc.decode_rg = inverted
+    seen = []
+
+    def consume(acc, i, cols):
+        seen.append(i)
+        part = np.asarray(cols["l_quantity"].array, dtype=np.float64).sum()
+        return part if acc is None else acc + part
+
+    total, rep = run_overlapped(sc, consume, depth=len(plan),
+                                decode_workers=4)
+    assert seen == plan
+    assert total == pytest.approx(
+        np.asarray(line["l_quantity"], dtype=np.float64).sum())
+    assert rep.metrics.n_row_groups == len(plan)
+    # per-RG accounting must be in plan order too (the modeled wall zips it)
+    assert len(rep.metrics.decode_per_rg) == len(plan)
+
+
+def test_decode_worker_error_propagates(tpch_files):
+    metas, _, _ = tpch_files
+    sc = open_scanner(metas["lineitem_path"], columns=["l_quantity"],
+                      decode_backend="host")
+    real_decode = sc.decode_rg
+
+    def bad(i, raws):
+        if i >= 1:
+            raise RuntimeError("decode boom")
+        return real_decode(i, raws)
+
+    sc.decode_rg = bad
+    with pytest.raises(RuntimeError, match="decode boom"):
+        run_overlapped(sc, lambda acc, i, cols: acc, decode_workers=2)
+
+
+def test_fetch_error_propagates(tpch_files):
+    metas, _, _ = tpch_files
+    sc = open_scanner(metas["lineitem_path"], columns=["l_quantity"],
+                      decode_backend="host")
+
+    def bad_fetch(i):
+        raise OSError("fetch boom")
+
+    sc.fetch_rg = bad_fetch
+    with pytest.raises(OSError, match="fetch boom"):
+        run_overlapped(sc, lambda acc, i, cols: acc, decode_workers=2)
+
+
+def test_width_zero_depth_one_degenerates_to_inline(tpch_files):
+    """decode_workers=0, depth=1 is the PR-1 executor: same results, inline
+    decode accounting, and the two-stage modeled schedule."""
+    metas, line, _ = tpch_files
+    ref = q6_reference({c: np.asarray(line[c]) for c in Q6_COLUMNS})
+    sc = open_scanner(metas["lineitem_path"], columns=Q6_COLUMNS,
+                      decode_backend="host")
+    got, rep = q6(sc, overlapped=True, depth=1, decode_workers=0)
+    assert abs(got - ref) / max(1.0, abs(ref)) < 1e-5
+    assert rep.decode_workers == 0
+    # hand-compute the two-stage schedule (with the depth=1 fetch gate:
+    # RG k's fetch waits for RG k-1's consume) the report must reproduce
+    io_done = compute_done = 0.0
+    hist = []
+    for k, (io, d, c) in enumerate(zip(rep.metrics.io_per_rg,
+                                       rep.metrics.decode_per_rg,
+                                       rep.consume_per_rg)):
+        gate = hist[k - 1] if k >= 1 else 0.0
+        io_done = max(io_done, gate) + io
+        compute_done = max(io_done, compute_done) + d + c
+        hist.append(compute_done)
+    assert rep.modeled_wall == pytest.approx(compute_done)
+
+
+def test_stage_walls_recorded(tpch_files):
+    metas, _, _ = tpch_files
+    sc = open_scanner(metas["lineitem_path"], columns=Q6_COLUMNS,
+                      decode_backend="host")
+    _, rep = q6(sc, overlapped=True, decode_workers=2)
+    for stage in ("fetch", "decode", "consume"):
+        assert stage in rep.stage_walls
+        assert rep.stage_walls[stage] >= 0.0
+    assert rep.metrics.decode_wall_seconds == rep.stage_walls["decode"]
+    assert rep.metrics.consume_seconds == pytest.approx(
+        sum(rep.consume_per_rg))
+    assert "workers=2" in rep.stage_summary
+
+
+# -- modeled wall (satellite: decode ∥ consume) ------------------------------
+
+def _synthetic_report(workers: int, depth: int = 8) -> RunReport:
+    m = ScanMetrics()
+    m.io_per_rg = [1.0, 1.0, 1.0]
+    m.io_seconds = 3.0
+    m.decode_per_rg = [2.0, 2.0, 2.0]
+    m.decode_seconds = 6.0
+    return RunReport("overlapped", 0.0, m, [1.0, 1.0, 1.0],
+                     decode_workers=workers, depth=depth)
+
+
+def test_modeled_wall_three_stage_schedule():
+    """io=[1,1,1], decode=[2,2,2], consume=[1,1,1], depth unconstrained:
+
+    W=0 (inline):   compute_done = 4, 7, 10          → 10
+    W=1:            decode_done = 3, 5, 7; consume → 4, 6, 8
+    W=2:            decode_done = 3, 4, 5; consume → 4, 5, 6
+    """
+    assert _synthetic_report(0).modeled_wall == pytest.approx(10.0)
+    assert _synthetic_report(1).modeled_wall == pytest.approx(8.0)
+    assert _synthetic_report(2).modeled_wall == pytest.approx(6.0)
+    # blocking sums every stage
+    blk = _synthetic_report(0)
+    blk.mode = "blocking"
+    assert blk.modeled_wall == pytest.approx(12.0)
+
+
+def test_modeled_wall_monotone_in_workers():
+    walls = [_synthetic_report(w).modeled_wall for w in (0, 1, 2, 4)]
+    assert walls == sorted(walls, reverse=True)
+    # beyond n_rgs workers there is nothing left to parallelize
+    assert _synthetic_report(4).modeled_wall == \
+        _synthetic_report(3).modeled_wall
+
+
+def test_modeled_wall_honors_depth_backpressure():
+    """The in-flight semaphore gates RG k's fetch on RG k-depth's consume:
+    with depth=2 and W=2, RG2's fetch waits for RG0 (consumed at 4), so
+    decode_done = 3, 4, 7 and consume → 4, 5, 8 — the depth-free schedule
+    (6.0) is infeasible for the real executor and must not be reported."""
+    assert _synthetic_report(2, depth=2).modeled_wall == pytest.approx(8.0)
+    # wider depth releases the gate back to the pure pipeline schedule
+    assert _synthetic_report(2, depth=3).modeled_wall == pytest.approx(6.0)
+    # depth=1 serializes fetch behind every consume for W=0 too
+    assert _synthetic_report(0, depth=1).modeled_wall == pytest.approx(12.0)
+
+
+# -- arena reuse + dict cache + decompress memo ------------------------------
+
+@pytest.mark.parametrize("backend", ["host", "pallas"])
+def test_second_pass_bit_identical_with_caches_hot(tmp_path, backend):
+    """Pass 2 exercises arena reuse, dictionary-cache hits, and the gzip
+    chunk decompress memo; results must stay bit-identical to the
+    per-chunk reference path (the PR-1 decode)."""
+    tbl = _mixed_table()
+    path = str(tmp_path / f"mixed_{backend}.tab")
+    write_table(tbl, path, FileConfig(
+        rows_per_rg=2_000, target_pages_per_chunk=6,
+        encodings=EncodingPolicy.FLEX,
+        compression=CompressionSpec(codec="gzip", min_gain=0.0)))
+    clear_planner_cache()
+    dict_decode.dict_cache_clear()
+    chunk_decompress_memo().clear()
+    ref = Scanner(path, decode_backend=backend, use_plan=False)
+    pln = Scanner(path, decode_backend=backend, use_plan=True)
+    for pass_no in range(2):
+        for i in ref.plan():
+            raws, _ = ref.fetch_rg(i)
+            cols_r, _ = ref.decode_rg(i, raws)
+            cols_p, _ = pln.decode_rg(i, raws)
+            for name in tbl.columns:
+                a, b = cols_p[name], cols_r[name]
+                if isinstance(a.array, StringColumn):
+                    np.testing.assert_array_equal(a.array.offsets,
+                                                  b.array.offsets)
+                    np.testing.assert_array_equal(a.array.payload,
+                                                  b.array.payload)
+                else:
+                    ra, rb = np.asarray(a.array), np.asarray(b.array)
+                    assert ra.dtype == rb.dtype, (pass_no, name)
+                    np.testing.assert_array_equal(ra, rb,
+                                                  err_msg=f"{pass_no}:{name}")
+    stats = dict_decode.dict_cache_stats()
+    assert stats["hits"] > 0            # pass 2 reused decoded dictionaries
+    memo = chunk_decompress_memo()
+    assert memo.hits > 0                # pass 2 skipped gzip inflation
+    if backend == "pallas":
+        assert pln.planner._arena_pool.reuses > 0   # arenas recycled
+
+
+def test_arena_pool_reuses_buffers():
+    pool = ArenaPool(max_bytes=1 << 20)
+    view1, buf1 = pool.take((4, 100), np.uint32)
+    assert view1.shape == (4, 100) and view1.dtype == np.uint32
+    view1[:] = 7                        # dirty it; reuse must not care
+    pool.give(buf1)
+    view2, buf2 = pool.take((4, 100), np.uint32)
+    assert buf2 is buf1                 # same pooled capacity bucket
+    assert pool.reuses == 1 and pool.allocs == 1
+    # a different dtype/shape in the same byte bucket also reuses
+    pool.give(buf2)
+    view3, buf3 = pool.take((100, 4), np.float32)
+    assert buf3 is buf1
+    assert view3.shape == (100, 4) and view3.dtype == np.float32
+
+
+def test_arena_pool_cap_drops_excess():
+    pool = ArenaPool(max_bytes=1024)
+    _, small = pool.take((16,), np.uint8)       # 16B bucket
+    _, big = pool.take((4096,), np.uint8)       # 4KiB > cap
+    pool.give(small)
+    pool.give(big)                               # dropped, over cap
+    _, again = pool.take((4096,), np.uint8)
+    assert again is not big
+    assert pool.allocs == 3
+
+
+def test_dict_cache_keyed_and_capped():
+    dict_decode.dict_cache_clear()
+    a = np.arange(10, dtype=np.int32)
+    entry = dict_decode.dict_cache_put(("t", "col", 0, "device"), a)
+    assert dict_decode.dict_cache_get(("t", "col", 0, "device")) is entry
+    assert dict_decode.dict_cache_get(("t", "col", 1, "device")) is None
+    np.testing.assert_array_equal(np.asarray(entry.device), a)
+    stats = dict_decode.dict_cache_stats()
+    assert stats["entries"] == 1 and stats["hits"] == 1
+    assert stats["misses"] == 1
+    dict_decode.dict_cache_clear()
+    assert dict_decode.dict_cache_stats()["entries"] == 0
+
+
+def test_gzip_memo_scan_results_unchanged(tmp_path):
+    """End-to-end: two q6 runs over a gzip file — the second hits the memo
+    and returns the same revenue."""
+    line, _ = tpch.generate_tables(sf=0.002, seed=7)
+    path = str(tmp_path / "gz.tab")
+    write_table(line.select(Q6_COLUMNS), path, FileConfig(
+        rows_per_rg=4_000, target_pages_per_chunk=10,
+        encodings=EncodingPolicy.FLEX,
+        compression=CompressionSpec(codec="gzip", min_gain=0.0)))
+    clear_planner_cache()
+    chunk_decompress_memo().clear()
+    got1, _ = q6(open_scanner(path, columns=Q6_COLUMNS,
+                              decode_backend="host"), prune=False)
+    hits_before = chunk_decompress_memo().hits
+    got2, _ = q6(open_scanner(path, columns=Q6_COLUMNS,
+                              decode_backend="host"), prune=False)
+    assert chunk_decompress_memo().hits > hits_before
+    assert got1 == pytest.approx(got2)
+    ref = q6_reference({c: np.asarray(line[c]) for c in Q6_COLUMNS})
+    assert abs(got1 - ref) / max(1.0, abs(ref)) < 1e-5

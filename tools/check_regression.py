@@ -1,0 +1,276 @@
+"""CI perf-regression gate over benchmark CSVs.
+
+Compares the current ``--smoke`` benchmark CSVs against checked-in
+baselines (results/benchmarks/baselines/) and fails when the scan path's
+economy regresses:
+
+  * **wall time**: any shared row whose ``us_per_call`` grew by more than
+    ``--threshold`` (default 25%) — skipped when both sides are under
+    ``--min-us``, where scheduler noise dominates a tiny-SF run.  When
+    both CSVs carry a ``cpu_reference`` calibration row
+    (benchmarks/common.py), current walls are first normalized by the
+    machine-speed ratio so a slower runner than the baseline's doesn't
+    read as a regression of every row at once;
+  * **counters**: any increase in a counted quantity parsed from the
+    ``derived`` column (``launches=``, ``launches_per_rg=``, ``requests=``,
+    ``io_requests=``, ``groups=``) — these are deterministic, so the gate
+    on them is exact (an increase of even one launch fails);
+  * **coverage**: a row present in the baseline but missing from the
+    current run (a silently-dropped measurement reads as a pass otherwise).
+
+Writes a markdown comparison table (``--report``) for upload as a CI
+artifact and exits non-zero on any regression.
+
+Usage:
+    python tools/check_regression.py \
+        --baseline results/benchmarks/baselines \
+        --current results/benchmarks \
+        --report regression-report.md \
+        fig5_smoke.csv scan_plan_smoke.csv
+
+Demo an injected regression (doubles one wall time, bumps one counter):
+    python tools/check_regression.py --selftest
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import Dict, List, Tuple
+
+COUNT_KEYS = ("launches", "launches_per_rg", "requests", "io_requests",
+              "groups")
+
+
+def parse_csv(path: str) -> "Dict[str, tuple]":
+    """name → (us_per_call, {counter: value}, tags) from a benchmark CSV.
+    ``tags`` are the bare (non key=value) derived tokens, e.g. ``sim`` /
+    ``measured`` — ``sim`` rows are deterministic model times and are
+    never machine-speed scaled."""
+    rows: Dict[str, tuple] = {}
+    with open(path) as f:
+        header = f.readline()
+        if not header.startswith("name,"):
+            raise SystemExit(f"{path}: not a benchmark CSV")
+        for line in f:
+            line = line.rstrip("\n")
+            if not line:
+                continue
+            name, us, derived = line.split(",", 2)
+            counters: Dict[str, float] = {}
+            tags = set()
+            for token in derived.split(";"):
+                if "=" not in token:
+                    if token:
+                        tags.add(token)
+                    continue
+                k, _, v = token.partition("=")
+                if k in COUNT_KEYS:
+                    try:
+                        counters[k] = float(v)
+                    except ValueError:
+                        pass
+            rows[name] = (float(us), counters, tags)
+    return rows
+
+
+REFERENCE_ROW = "cpu_reference"
+
+
+def speed_scale(baseline: Dict, current: Dict) -> float:
+    """base_ref / cur_ref: multiplied into current wall times so a slower
+    (or noisier) machine than the baseline's doesn't read as a regression
+    of every row at once.  Clamped — a wildly different reference means
+    the machines aren't comparable, and over-correcting would mask real
+    regressions.  1.0 when either side lacks the reference row."""
+    if REFERENCE_ROW not in baseline or REFERENCE_ROW not in current:
+        return 1.0
+    base_ref = baseline[REFERENCE_ROW][0]
+    cur_ref = current[REFERENCE_ROW][0]
+    if base_ref <= 0 or cur_ref <= 0:
+        return 1.0
+    return min(4.0, max(0.25, base_ref / cur_ref))
+
+
+def merge_min(a: Dict, b: Dict) -> Dict:
+    """Per-row minimum wall across two runs of the same suite (counters
+    ride along from whichever run was faster; they are deterministic, so
+    the choice cannot hide a counter regression).  Rows present in only
+    one run keep that run's value."""
+    out = dict(a)
+    for name, row in b.items():
+        if name not in out or row[0] < out[name][0]:
+            out[name] = row
+    return out
+
+
+def compare(baseline: Dict, current: Dict, threshold: float, min_us: float,
+            scale: float = 1.0) -> Tuple[List[str], List[List[str]]]:
+    """Returns (regressions, report_rows).
+
+    A wall regression must hold in BOTH the raw and the machine-speed
+    normalized (× ``scale``, see speed_scale) reading: normalization
+    exists to forgive machine differences, not to manufacture failures
+    when the calibration lands in a different noise window than the rows.
+    Deterministic ``sim``-tagged rows are never scaled."""
+    regressions: List[str] = []
+    table: List[List[str]] = []
+    for name, row in sorted(baseline.items()):
+        base_us, base_counts = row[0], row[1]
+        if name == REFERENCE_ROW:
+            continue
+        if name not in current:
+            regressions.append(f"{name}: missing from current run")
+            table.append([name, f"{base_us:.1f}", "—", "—", "MISSING"])
+            continue
+        cur = current[name]
+        cur_us, cur_counts = cur[0], cur[1]
+        tags = cur[2] if len(cur) > 2 else set()
+        row_scale = 1.0 if "sim" in tags else scale
+        gated_us = min(cur_us, cur_us * row_scale)
+        ratio = gated_us / base_us if base_us > 0 else float("inf")
+        status = "ok"
+        if gated_us > base_us * (1.0 + threshold) and (
+                gated_us >= min_us or base_us >= min_us):
+            status = "WALL REGRESSION"
+            regressions.append(
+                f"{name}: wall {base_us:.1f}us -> {gated_us:.1f}us "
+                f"(+{(ratio - 1.0) * 100:.0f}% > {threshold * 100:.0f}%, "
+                "raw and machine-normalized)")
+        for k, base_v in base_counts.items():
+            cur_v = cur_counts.get(k)
+            if cur_v is None:
+                # a dropped counter token would otherwise disable its gate
+                status = "COUNTER MISSING"
+                regressions.append(
+                    f"{name}: counter {k} missing from current run "
+                    "(gated counters must keep being emitted)")
+            elif cur_v > base_v:
+                status = "COUNTER REGRESSION"
+                regressions.append(
+                    f"{name}: {k} {base_v:g} -> {cur_v:g} (any increase "
+                    "fails)")
+        counts = ";".join(f"{k}={cur_counts.get(k, float('nan')):g}"
+                          for k in base_counts) or "—"
+        table.append([name, f"{base_us:.1f}", f"{gated_us:.1f}",
+                      counts, status])
+    for name in sorted(set(current) - set(baseline)):
+        if name == REFERENCE_ROW:
+            continue
+        table.append([name, "—", f"{current[name][0]:.1f}", "—",
+                      "new (no baseline)"])
+    return regressions, table
+
+
+def write_report(path: str, file_tables: Dict[str, List[List[str]]],
+                 regressions: List[str], threshold: float) -> None:
+    with open(path, "w") as f:
+        f.write("# Benchmark regression gate\n\n")
+        f.write(f"Wall-time threshold: +{threshold * 100:.0f}% · counter "
+                "increases: any\n\n")
+        if regressions:
+            f.write("## REGRESSIONS\n\n")
+            for r in regressions:
+                f.write(f"- {r}\n")
+            f.write("\n")
+        else:
+            f.write("No regressions detected.\n\n")
+        for fname, table in file_tables.items():
+            f.write(f"## {fname}\n\n")
+            f.write("| name | baseline us | current us | counters | "
+                    "status |\n|---|---|---|---|---|\n")
+            for row in table:
+                f.write("| " + " | ".join(row) + " |\n")
+            f.write("\n")
+
+
+def selftest() -> int:
+    """Inject a regression into a synthetic pair and assert the gate trips."""
+    base = {"q6_overlapped": (1000.0, {"launches": 4.0}),
+            "q12_overlapped": (2000.0, {"requests": 8.0})}
+    good = {"q6_overlapped": (1100.0, {"launches": 4.0}),
+            "q12_overlapped": (1900.0, {"requests": 8.0})}
+    bad = {"q6_overlapped": (2000.0, {"launches": 4.0}),      # 2x wall
+           "q12_overlapped": (1900.0, {"requests": 9.0})}     # +1 request
+    ok_regs, _ = compare(base, good, 0.25, 500.0)
+    bad_regs, _ = compare(base, bad, 0.25, 500.0)
+    print("clean run ->", ok_regs or "no regressions")
+    print("injected run ->")
+    for r in bad_regs:
+        print(" ", r)
+    assert not ok_regs and len(bad_regs) == 2
+    print("selftest ok: gate passes clean runs and trips on injected "
+          "wall/counter regressions")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("files", nargs="*",
+                    default=["fig5_smoke.csv", "scan_plan_smoke.csv"])
+    ap.add_argument("--baseline", default="results/benchmarks/baselines")
+    ap.add_argument("--current", default="results/benchmarks")
+    ap.add_argument("--current2", default=None,
+                    help="optional second run of the same CSVs; rows are "
+                         "gated on the per-row minimum wall of the two "
+                         "runs, so one noisy scheduler window on a shared "
+                         "runner cannot fail the gate by itself")
+    ap.add_argument("--threshold", type=float,
+                    default=float(os.environ.get("REGRESSION_THRESHOLD",
+                                                 "0.25")))
+    ap.add_argument("--min-us", type=float, default=500.0,
+                    help="skip wall gate when both sides are below this "
+                         "(scheduler noise floor at smoke SF)")
+    ap.add_argument("--report", default=None,
+                    help="write a markdown comparison here (CI artifact)")
+    ap.add_argument("--selftest", action="store_true",
+                    help="demonstrate the gate on an injected regression")
+    args = ap.parse_args()
+    if args.selftest:
+        return selftest()
+
+    files = args.files or ["fig5_smoke.csv", "scan_plan_smoke.csv"]
+    all_regressions: List[str] = []
+    file_tables: Dict[str, List[List[str]]] = {}
+    for fname in files:
+        base_path = os.path.join(args.baseline, fname)
+        cur_path = os.path.join(args.current, fname)
+        if not os.path.exists(base_path):
+            print(f"[check_regression] no baseline for {fname} — skipping "
+                  "(check one in under results/benchmarks/baselines/)")
+            continue
+        if not os.path.exists(cur_path):
+            all_regressions.append(f"{fname}: current CSV missing "
+                                   f"({cur_path})")
+            continue
+        base_rows = parse_csv(base_path)
+        cur_rows = parse_csv(cur_path)
+        if args.current2:
+            cur2_path = os.path.join(args.current2, fname)
+            if os.path.exists(cur2_path):
+                cur_rows = merge_min(cur_rows, parse_csv(cur2_path))
+        scale = speed_scale(base_rows, cur_rows)
+        if scale != 1.0:
+            print(f"[check_regression] {fname}: machine-speed scale "
+                  f"{scale:.3f} (cpu_reference rows)")
+        regs, table = compare(base_rows, cur_rows, args.threshold,
+                              args.min_us, scale)
+        all_regressions.extend(f"{fname}: {r}" for r in regs)
+        file_tables[fname] = table
+    if args.report:
+        write_report(args.report, file_tables, all_regressions,
+                     args.threshold)
+        print(f"[check_regression] report -> {args.report}")
+    if all_regressions:
+        print("[check_regression] FAIL")
+        for r in all_regressions:
+            print(" ", r)
+        return 1
+    print("[check_regression] ok — no regressions "
+          f"(threshold +{args.threshold * 100:.0f}%, counters exact)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
