@@ -1,0 +1,199 @@
+"""Concurrent-scan throughput: N overlapped Q6/Q12 scans through the
+shared ScanService vs the same N scans run back-to-back.
+
+The ROADMAP north star is a serving loop running *many small scans*
+concurrently; PR 2's executor gave each scan a private pipeline, so the
+pipeline head/tail (first RG with nothing overlapped, last consume with
+nothing decoding behind it) went idle N times and concurrent callers
+fought over cores.  The ScanService (core/scheduler.py) shares one fetch
+thread + one decode pool across scans, so scan B's chunks decode inside
+scan A's bubbles.
+
+For N ∈ {1, 2, 4, 8} this suite measures the *measured* aggregate wall
+(real thread overlap — the modeled per-scan schedule cannot see cross-scan
+sharing) plus per-scan p50/p95, and the deterministic launch / I/O-request
+economy (totals across the N scans; the CI gate fails on any increase).
+Storage is the calibrated sim backend (host-instant reads), decode the
+host backend — the same shape as the fig5 rows.
+
+Concurrent identical scans additionally exercise **cooperative scans**:
+a scan subscribes to an already-in-flight fetch+decode job for the same
+(file, columns, backend) row group instead of redoing the work, so the
+service arm's fetched-request count (``io_fetched``) can only ever be
+*lower* than the sequential arm's gated ``io_requests``.
+
+Best-of-BENCH_ROUNDS like every suite; rounds interleave the sequential
+and concurrent arms so a noisy scheduler window penalizes both equally.
+Smoke mode (CI) runs N = 4 only (the gated rows).
+
+Standalone:  python -m benchmarks.bench_concurrent --smoke
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from benchmarks.common import emit, emit_cpu_reference, ensure_tpch
+from repro.core.config import CPU_DEFAULT, ACCELERATOR_OPTIMIZED
+from repro.core.query import (Q12_LINEITEM_COLUMNS, Q12_ORDERS_COLUMNS,
+                              Q6_COLUMNS, q6, q12)
+from repro.core.rewriter import rewrite_file
+from repro.core.scan import open_scanner
+from repro.core.scheduler import ScanService
+from repro.kernels.common import kernel_launch_count
+
+
+def _q6_scanner(lpath: str):
+    return open_scanner(lpath, columns=list(Q6_COLUMNS), backend="sim",
+                        n_lanes=1, decode_backend="host")
+
+
+def _q12_scanners(lpath: str, opath: str):
+    return (open_scanner(lpath, columns=Q12_LINEITEM_COLUMNS, backend="sim",
+                         n_lanes=1, decode_backend="host"),
+            open_scanner(opath, columns=Q12_ORDERS_COLUMNS, backend="sim",
+                         n_lanes=1, decode_backend="host"))
+
+
+def _run_n(make_job, n: int, service: ScanService, concurrent: bool
+           ) -> Tuple[float, List[float], Dict[str, int]]:
+    """Run n scan jobs; returns (aggregate wall, per-scan walls, counters).
+
+    ``make_job(k, service)`` returns a zero-arg callable executing one full
+    scan k through ``service``.  Counters are totals across the n scans —
+    deterministic, so concurrency must not change them ("zero increase in
+    launches or I/O requests per scan").
+    """
+    jobs = [make_job(k, service) for k in range(n)]
+    walls = [0.0] * n
+    launches0 = kernel_launch_count()
+    shared0 = service.shared_rgs
+
+    def one(k: int) -> None:
+        t0 = time.perf_counter()
+        jobs[k]()
+        walls[k] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    if concurrent:
+        threads = [threading.Thread(target=one, args=(k,)) for k in range(n)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    else:
+        for k in range(n):
+            one(k)
+    agg = time.perf_counter() - t0
+    counters = {"launches": kernel_launch_count() - launches0,
+                "io_requests": sum(getattr(j, "io_requests", 0)
+                                   for j in jobs),
+                "shared_rgs": service.shared_rgs - shared0}
+    return agg, walls, counters
+
+
+def _emit_pair(name: str, n: int, service: ScanService, make_job,
+               rounds: int) -> None:
+    """Best-of-rounds sequential vs concurrent rows for one workload."""
+    best = {}   # arm -> (agg, walls, counters)
+    for _ in range(rounds):
+        for arm, concurrent in (("sequential", False), ("service", True)):
+            agg, walls, counters = _run_n(make_job, n, service, concurrent)
+            if arm not in best or agg < best[arm][0]:
+                best[arm] = (agg, walls, counters)
+    seq_agg = best["sequential"][0]
+    for arm in ("sequential", "service"):
+        agg, walls, counters = best[arm]
+        # the sequential arm's request count is deterministic → gated
+        # (``io_requests=``); the service arm's depends on how many RGs
+        # cooperative subscription happened to share (thread timing), so it
+        # is emitted under a non-gated name — it can only ever be LOWER
+        # than the sequential count, never higher
+        io_key = "io_requests" if arm == "sequential" else "io_fetched"
+        derived = (f"p50_us={np.percentile(walls, 50) * 1e6:.0f};"
+                   f"p95_us={np.percentile(walls, 95) * 1e6:.0f};"
+                   f"launches={counters['launches']};"
+                   f"{io_key}={counters['io_requests']};"
+                   f"shared_rgs={counters['shared_rgs']};"
+                   f"speedup_vs_seq={seq_agg / max(agg, 1e-12):.2f}x;"
+                   f"n={n};measured")
+        emit(f"conc_{name}_n{n}_{arm}", agg * 1e6, derived)
+
+
+def run() -> None:
+    smoke = bool(os.environ.get("BENCH_SMOKE"))
+    emit_cpu_reference()   # lets the CI gate normalize by machine speed
+    base = ensure_tpch(CPU_DEFAULT, "fig5_base")
+    # Moderate row groups: each scan is a short pipeline (~5 RGs at smoke
+    # SF, ~25 at the default SF) — the serving-loop shape where per-scan
+    # head/tail bubbles and repeated decode work are what the shared pool
+    # and cooperative-scan subscription recover.
+    cfg = ACCELERATOR_OPTIMIZED.replace(rows_per_rg=12_000,
+                                        target_pages_per_chunk=4)
+    lpath = base["lineitem_path"] + ".conc"
+    opath = base["orders_path"] + ".conc"
+    rewrite_file(base["lineitem_path"], lpath, cfg)
+    rewrite_file(base["orders_path"], opath, cfg)
+    rounds = max(1, int(os.environ.get("BENCH_ROUNDS", "3")))
+
+    # One dedicated service for the whole suite: the serving-loop shape
+    # (persistent pool, adaptive sizing warm).  Both arms run through it so
+    # the comparison isolates *concurrency*, not pool spin-up.
+    service = ScanService()
+
+    def q6_job(k: int, svc: ScanService):
+        sc = _q6_scanner(lpath)
+
+        def job():
+            rev, rep = q6(sc, prune=False, service=svc)
+            job.io_requests = rep.metrics.n_io_requests
+            return rev
+
+        job.io_requests = 0
+        return job
+
+    def q12_job(k: int, svc: ScanService):
+        lsc, osc = _q12_scanners(lpath, opath)
+
+        def job():
+            _, brep, prep = q12(lsc, osc, service=svc)
+            job.io_requests = (brep.metrics.n_io_requests
+                               + prep.metrics.n_io_requests)
+
+        job.io_requests = 0
+        return job
+
+    # warm the jitted consumers + plan/dict caches outside timing
+    q6(_q6_scanner(lpath), prune=False, service=service)
+    q12(*_q12_scanners(lpath, opath), service=service)
+
+    q6_ns = (4,) if smoke else (1, 2, 4, 8)
+    q12_ns = (4,) if smoke else (1, 2, 4, 8)
+    for n in q6_ns:
+        _emit_pair("q6", n, service, q6_job, rounds)
+    for n in q12_ns:
+        _emit_pair("q12", n, service, q12_job, rounds)
+    service.shutdown()
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from benchmarks.common import flush_csv
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized subset (tiny SF, N ∈ {1,4})")
+    args = ap.parse_args()
+    if args.smoke:
+        os.environ.setdefault("BENCH_SF", "0.01")
+        os.environ.setdefault("BENCH_ROUNDS", "5")
+        os.environ["BENCH_SMOKE"] = "1"
+    print("name,us_per_call,derived")
+    run()
+    flush_csv(f"concurrent{'_smoke' if args.smoke else ''}.csv")

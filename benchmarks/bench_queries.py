@@ -88,11 +88,12 @@ def run() -> None:
     # tests/test_system.py) so a noisy period on a shared host penalizes
     # every configuration equally instead of wiping out one config's
     # entire sample.  The overlapped rows try both executor shapes — W=0
-    # (inline decode, the PR-1 double buffer) and W=2 (decode pool) — and
-    # keep the best; ``workers=`` in derived records which one won.  On a
-    # 2-core container the pool pays for decode-heavy/consume-busy streams
-    # and loses to GIL contention elsewhere; on wider hosts it wins
-    # outright (DESIGN.md §2.5).
+    # (inline decode, the private PR-1 double buffer) and W=2 (the shared
+    # ScanService pool floored at 2, per-chunk dispatch) — and keep the
+    # best; ``workers=`` in derived records which one won.  On a 2-core
+    # container the pool pays for decode-heavy/consume-busy streams and
+    # loses to GIL contention elsewhere; on wider hosts it wins outright
+    # (DESIGN.md §2.5/§2.6).
     best = {}   # row name → (wall_seconds, derived)
     for _ in range(rounds):
         for name in CONFIGS:

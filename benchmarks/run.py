@@ -21,6 +21,7 @@ def main() -> None:
         # smoke rows are small enough that extra best-of rounds are cheap,
         # and the CI perf gate needs the min to be noise-proof
         os.environ.setdefault("BENCH_ROUNDS", "5")
+        os.environ["BENCH_SMOKE"] = "1"   # bench_concurrent: N subset
 
     from benchmarks.common import flush_csv
 
@@ -31,13 +32,15 @@ def main() -> None:
         ("bench_compression", "fig3c"),     # Fig 3: Insight-4 deltas
         ("bench_queries", "fig5"),          # Fig 5: Q6/Q12 query level
         ("bench_scan_plan", "scan_plan"),   # DecodePlan launch/IO economy
+        ("bench_concurrent", "concurrent"),  # ScanService N-scan sharing
         ("bench_rewriter", "sec5"),         # §5: rewriter overhead
         ("bench_kernels", "kernels"),       # §3: per-encoding decode bw
         ("roofline", "roofline"),           # §Roofline from dry-run JSONs
     ]
     if args.smoke:
         suites = [s for s in suites
-                  if s[0] in ("bench_queries", "bench_scan_plan")]
+                  if s[0] in ("bench_queries", "bench_scan_plan",
+                              "bench_concurrent")]
     if args.only:
         keep = set(args.only.split(","))
         suites = [s for s in suites if s[0] in keep]

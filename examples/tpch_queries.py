@@ -60,6 +60,36 @@ def main():
             mode = "overlapped" if overlapped else "blocking  "
             print(f"Q12 {mode} wall={wall*1e3:8.3f} ms counts={res}")
 
+        # -- the serving loop: N concurrent Q6 clients share the pool -----
+        # Every overlapped scan above already ran through the process-wide
+        # ScanService; submitting from several threads at once additionally
+        # exercises fair round-robin scheduling and cooperative-scan
+        # sharing (identical in-flight row groups decode once).
+        import threading
+        import time
+
+        from repro.core.scheduler import scan_service
+
+        svc = scan_service()
+        walls = {}
+
+        def client(k):
+            t0 = time.perf_counter()
+            q6(scanner(lpath, list(Q6_COLUMNS)), prune=False)
+            walls[k] = time.perf_counter() - t0
+
+        threads = [threading.Thread(target=client, args=(k,))
+                   for k in range(4)]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        agg = time.perf_counter() - t0
+        print(f"Q6  serving loop: 4 concurrent clients in {agg*1e3:.1f} ms "
+              f"(p95 {max(walls.values())*1e3:.1f} ms, "
+              f"{svc.shared_rgs} row groups served cooperatively)")
+
 
 if __name__ == "__main__":
     main()

@@ -31,6 +31,33 @@ import numpy as np
 from repro.core import bitpack
 from repro.core.lru import ByteCappedLRU
 
+# -- accelerated inflate backend --------------------------------------------
+#
+# gzip inflate is the cold-pass host bottleneck for min_gain=0 files (the
+# chunk memo only removes *revisit* inflation).  When an accelerated
+# zlib-compatible library is present, prefer it for decompression:
+# ISA-L's igzip is ~2-3x stdlib zlib on inflate, zlib-ng ~1.5-2x.  The
+# deflate (write) path stays on stdlib zlib — its levels are what the
+# Insight-4 gate was calibrated against, and write throughput is not the
+# paper's axis.  Fallback is silent: the stdlib module is always correct.
+try:
+    from isal import isal_zlib as _inflate_zlib
+    _INFLATE_BACKEND = "isal"
+except ImportError:
+    try:
+        from zlib_ng import zlib_ng as _inflate_zlib
+        _INFLATE_BACKEND = "zlib-ng"
+    except ImportError:
+        _inflate_zlib = zlib
+        _INFLATE_BACKEND = "zlib"
+
+
+def inflate_backend() -> str:
+    """Name of the active gzip-inflate backend: ``isal`` (ISA-L igzip),
+    ``zlib-ng``, or stdlib ``zlib``.  Logged in FetchStats/ScanMetrics so
+    benchmark rows record which inflate path produced them."""
+    return _INFLATE_BACKEND
+
 
 class Codec(enum.IntEnum):
     NONE = 0
@@ -161,7 +188,7 @@ def decompress(data: bytes, codec: Codec, uncompressed_size: int) -> bytes:
     if codec == Codec.NONE:
         return data
     if codec == Codec.GZIP:
-        out = zlib.decompress(data)
+        out = _inflate_zlib.decompress(data)
         assert len(out) == uncompressed_size
         return out
     return cascade_decompress(data, uncompressed_size)

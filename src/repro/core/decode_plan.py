@@ -34,12 +34,13 @@ don't-care values past each page's true ``n_values`` and are sliced away.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
 import os
 import threading
 import time
 from collections import OrderedDict
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -147,11 +148,29 @@ class DecodeGroup:
 
 
 @dataclasses.dataclass
+class CascadeGroup:
+    """Device-cascade pages sharing one (value_width, count_width) class —
+    one ``cascade_decode_pages`` launch.  Grouped at *plan* time from the
+    widths the writer stamps into ``PageMeta.extra`` (``cascade_vw/cw``);
+    ``key=None`` collects pages of older files without the stamp, which
+    fall back to execute-time grouping by manifest widths."""
+    key: Optional[Tuple[int, int]]
+    slots: List[PageSlot]
+
+
+@dataclasses.dataclass
 class RowGroupPlan:
     rg_index: int
     groups: List[DecodeGroup]
     grouped_columns: List[str]    # decoded via the batched group path
     fallback_columns: List[str]   # decoded via the per-chunk reference path
+    # decompress sub-plan: grouped columns whose pages inflate on the host
+    # through the chunk memo vs. raw-view columns vs. device-cascade pages
+    # (the latter pre-grouped by (vw, cw) — see CascadeGroup)
+    memo_columns: List[str] = dataclasses.field(default_factory=list)
+    raw_columns: List[str] = dataclasses.field(default_factory=list)
+    cascade_groups: List[CascadeGroup] = dataclasses.field(
+        default_factory=list)
 
     @property
     def n_groups(self) -> int:
@@ -239,6 +258,32 @@ def _host_page_keys(chunk: ChunkMeta, field: Field) -> Optional[List[tuple]]:
 
 
 # ---------------------------------------------------------------------------
+# staged execution context
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ExecContext:
+    """Shared state of one row group's staged decode (per-chunk dispatch).
+
+    Built by ``DecodePlanner.begin_execute``; mutated by the decompress /
+    decode work items; consumed by ``finish_execute``.  Tasks of one
+    context may run concurrently on the ScanService's decode pool — each
+    writes disjoint keys, see the concurrency contract in DecodePlanner.
+    """
+    rg_index: int
+    plan: RowGroupPlan
+    rg: object                       # RowGroupMeta
+    raws: Dict[str, bytes]
+    use_kernels: bool
+    per_col_parts: Dict[str, Dict]
+    payloads: Dict = dataclasses.field(default_factory=dict)
+    demoted: List[str] = dataclasses.field(default_factory=list)
+    out: Dict[str, "ops.DecodeResult"] = dataclasses.field(
+        default_factory=dict)
+    leases: List[np.ndarray] = dataclasses.field(default_factory=list)
+
+
+# ---------------------------------------------------------------------------
 # planner
 # ---------------------------------------------------------------------------
 
@@ -303,10 +348,37 @@ class DecodePlanner:
             for g in groups.values():
                 final.extend(self._split_oversize_dict_group(g, rg))
             plan = RowGroupPlan(rg_index, final, grouped, fallback)
+            self._plan_decompress_stage(plan, rg)
             self._plans[rg_index] = plan
             self.plans_built += 1
             self.plan_seconds += time.perf_counter() - t0
             return plan
+
+    def _plan_decompress_stage(self, plan: RowGroupPlan, rg) -> None:
+        """Classify grouped columns for the decompress stage and group
+        device-cascade pages by their footer-stamped (vw, cw) class, so
+        execute never re-reads page headers to discover the grouping."""
+        cas: "OrderedDict[Optional[Tuple[int, int]], CascadeGroup]" = \
+            OrderedDict()
+        for name in plan.grouped_columns:
+            chunk = rg.column(name)
+            codec = Codec(chunk.codec)
+            if codec == Codec.GZIP or (codec == Codec.CASCADE
+                                       and self.backend != "pallas"):
+                plan.memo_columns.append(name)
+                continue
+            plan.raw_columns.append(name)
+            if codec == Codec.CASCADE:      # pallas: device decompress
+                for pi, pm in enumerate(chunk.pages):
+                    key = None
+                    if "cascade_vw" in pm.extra:
+                        key = (int(pm.extra["cascade_vw"]),
+                               int(pm.extra["cascade_cw"]))
+                    g = cas.get(key)
+                    if g is None:
+                        g = cas[key] = CascadeGroup(key=key, slots=[])
+                    g.slots.append(PageSlot(name, pi, pm.n_values))
+        plan.cascade_groups = list(cas.values())
 
     def _split_oversize_dict_group(self, group: DecodeGroup, rg
                                    ) -> List[DecodeGroup]:
@@ -330,54 +402,171 @@ class DecodePlanner:
                 for name, slots in by_col.items()]
 
     # -- execution ---------------------------------------------------------
+    #
+    # Execution is *staged* so the ScanService (core/scheduler.py) can
+    # dispatch every DecodePlan group of a row group as an independently
+    # schedulable work item (per-chunk dispatch): ``begin_execute`` builds
+    # the shared context, ``decompress_tasks`` returns the phase-1 items
+    # (host inflate per memoizable column, raw views, one device launch per
+    # cascade (vw, cw) class), ``decode_tasks`` — valid once phase 1 has
+    # drained — returns the phase-2 items (one per DecodeGroup plus one per
+    # fallback column), and ``finish_execute`` is the join barrier that
+    # assembles columns, flushes the device, and returns pooled arenas.
+    # ``execute`` runs the same stages serially, so the scheduled path is
+    # bit-identical to the inline path by construction
+    # (tests/test_scheduler.py pins it against the reference decoder too).
+    #
+    # Concurrency contract for tasks of ONE context: distinct tasks write
+    # distinct ``payloads`` / ``per_col_parts`` keys (single dict stores,
+    # atomic under the GIL); appends to ``leases`` and ``out`` go through
+    # the same atomic operations; the planner-level caches (arena pool,
+    # dictionary cache, decompress memo) are themselves thread-safe.
 
     def execute(self, rg_index: int, raws: Dict[str, bytes]
                 ) -> Dict[str, ops.DecodeResult]:
+        ctx = self.begin_execute(rg_index, raws)
+        for task in self.decompress_tasks(ctx):
+            task()
+        for task in self.decode_tasks(ctx):
+            task()
+        return self.finish_execute(ctx)
+
+    def begin_execute(self, rg_index: int, raws: Dict[str, bytes]
+                      ) -> "ExecContext":
         plan = self.plan_rg(rg_index)
-        rg = self.meta.row_groups[rg_index]
-        use_kernels = self.backend == "pallas"
-        out: Dict[str, ops.DecodeResult] = {}
-        demoted: List[str] = []
-        leases: List[np.ndarray] = []   # pooled arena buffers in use
+        return ExecContext(
+            rg_index=rg_index, plan=plan,
+            rg=self.meta.row_groups[rg_index], raws=raws,
+            use_kernels=(self.backend == "pallas"),
+            per_col_parts={name: {} for name in plan.grouped_columns})
 
-        # decompressed page payloads for every grouped column
-        payloads = self._decompress_stage(plan, rg, raws)
+    def decompress_tasks(self, ctx: "ExecContext") -> List[Callable[[], None]]:
+        """Phase-1 work items: decompressed page payloads for every grouped
+        column.  Host-decompressed chunks (gzip on either backend, cascade
+        on the host backend) go through the chunk-level decompress memo —
+        a scan that revisits the chunk reuses the inflated payloads instead
+        of re-running one zlib call per page.  Device-cascade pages launch
+        one kernel per plan-time (vw, cw) group."""
+        tasks: List[Callable[[], None]] = []
+        for name in ctx.plan.memo_columns:
+            tasks.append(functools.partial(self._inflate_column_task,
+                                           ctx, name))
+        if ctx.plan.raw_columns:
+            tasks.append(functools.partial(self._raw_views_task, ctx))
+        for group in ctx.plan.cascade_groups:
+            tasks.append(functools.partial(self._cascade_group_task,
+                                           ctx, group))
+        return tasks
 
-        per_col_parts: Dict[str, Dict[int, object]] = {
-            name: {} for name in plan.grouped_columns}
-        exec_group = (self._execute_group_pallas if use_kernels
-                      else self._execute_group_host)
+    def _inflate_column_task(self, ctx: "ExecContext", name: str) -> None:
+        chunk = ctx.rg.column(name)
+        memo = chunk_decompress_memo()
+        memo_key = self._memo_key(chunk, name)
+        entry = memo.get(memo_key)
+        if entry is None:
+            entry = memo.put(memo_key,
+                             self._inflate_chunk_entry(chunk, ctx.raws[name]))
+        for k, v in entry.items():
+            ctx.payloads[(name, k)] = v
+
+    def _raw_views_task(self, ctx: "ExecContext") -> None:
+        """Raw-view tuples for uncompressed pages (enables the single-copy
+        arena fill) + host dict-page decompress for every non-memo column.
+        Cheap — one item covers all such columns."""
+        for name in ctx.plan.raw_columns:
+            chunk = ctx.rg.column(name)
+            raw = ctx.raws[name]
+            off0, _ = chunk.byte_range
+            codec = Codec(chunk.codec)
+            if chunk.dict_page is not None:
+                dp = chunk.dict_page
+                ctx.payloads[(name, "dict")] = decompress(
+                    raw[dp.offset - off0:dp.offset - off0 + dp.stored_size],
+                    codec, dp.uncompressed_size)
+            if codec == Codec.NONE:
+                for pi, pm in enumerate(chunk.pages):
+                    ctx.payloads[(name, pi)] = (raw, pm.offset - off0,
+                                                pm.stored_size)
+
+    def _cascade_group_task(self, ctx: "ExecContext",
+                            group: CascadeGroup) -> None:
+        """One device decompress launch for one (vw, cw) class (or the
+        execute-time-grouped leftovers of width-unstamped files)."""
+        pages = []
+        for s in group.slots:
+            chunk = ctx.rg.column(s.column)
+            pm = chunk.pages[s.page_index]
+            off0, _ = chunk.byte_range
+            lo = pm.offset - off0
+            pages.append((pm, ctx.raws[s.column][lo:lo + pm.stored_size]))
+        if group.key is not None:
+            datas = ops.cascade_decompress_pages_grouped(pages)
+            for s, data in zip(group.slots, datas):
+                ctx.payloads[(s.column, s.page_index)] = data
+        else:
+            dec = ops.cascade_decompress_device(pages)
+            for s, (_, data) in zip(group.slots, dec):
+                ctx.payloads[(s.column, s.page_index)] = data
+
+    def decode_tasks(self, ctx: "ExecContext") -> List[Callable[[], None]]:
+        """Phase-2 work items (valid once every decompress task drained):
+        one per DecodeGroup plus one per fallback/demoted column.  The
+        wide-delta demotion scan runs here, serially, so every group task
+        sees the final demoted set (mirrors the chunk-granular reference
+        fallback)."""
+        plan = ctx.plan
+        if ctx.use_kernels:
+            for group in plan.groups:
+                if group.encoding != Encoding.DELTA_BINARY_PACKED:
+                    continue
+                slots = [s for s in group.slots
+                         if s.column not in ctx.demoted]
+                _, newly = self._demote_wide_delta(ctx.rg, slots,
+                                                   ctx.payloads)
+                ctx.demoted.extend(newly)
+        tasks: List[Callable[[], None]] = []
         for group in plan.groups:
-            slots = [s for s in group.slots if s.column not in demoted]
-            if use_kernels and group.encoding == Encoding.DELTA_BINARY_PACKED:
-                slots, newly = self._demote_wide_delta(rg, slots, payloads)
-                demoted.extend(newly)
-            if not slots:
-                continue
-            exec_group(group, slots, rg, payloads, per_col_parts, leases)
+            tasks.append(functools.partial(self._group_task, ctx, group))
+        for name in list(plan.fallback_columns) + list(ctx.demoted):
+            tasks.append(functools.partial(self._fallback_task, ctx, name))
+        return tasks
 
-        for name in plan.grouped_columns:
-            if name in demoted:
+    def _group_task(self, ctx: "ExecContext", group: DecodeGroup) -> None:
+        slots = [s for s in group.slots if s.column not in ctx.demoted]
+        if not slots:
+            return
+        exec_group = (self._execute_group_pallas if ctx.use_kernels
+                      else self._execute_group_host)
+        exec_group(group, slots, ctx.rg, ctx.payloads, ctx.per_col_parts,
+                   ctx.leases)
+
+    def _fallback_task(self, ctx: "ExecContext", name: str) -> None:
+        chunk = ctx.rg.column(name)
+        field = self.meta.schema.field(name)
+        ctx.out[name] = ops.decode_chunk(
+            chunk, field, ctx.raws[name], use_kernels=ctx.use_kernels,
+            payloads=self._fallback_payloads(chunk, name, ctx.raws))
+
+    def finish_execute(self, ctx: "ExecContext"
+                       ) -> Dict[str, ops.DecodeResult]:
+        """Join barrier: scatter group outputs back into per-column results,
+        flush the device, return pooled arenas."""
+        for name in ctx.plan.grouped_columns:
+            if name in ctx.demoted:
                 continue
-            chunk = rg.column(name)
+            chunk = ctx.rg.column(name)
             field = self.meta.schema.field(name)
-            out[name] = self._assemble_column(chunk, field,
-                                              per_col_parts[name], payloads)
-        for name in list(plan.fallback_columns) + demoted:
-            chunk = rg.column(name)
-            field = self.meta.schema.field(name)
-            out[name] = ops.decode_chunk(
-                chunk, field, raws[name], use_kernels=use_kernels,
-                payloads=self._fallback_payloads(chunk, name, raws))
-        if leases:
+            ctx.out[name] = self._assemble_column(
+                chunk, field, ctx.per_col_parts[name], ctx.payloads)
+        if ctx.leases:
             # flush before returning arenas: a pooled buffer may be aliased
             # by in-flight device computation until results materialize
-            for res in out.values():
+            for res in ctx.out.values():
                 if res.on_device:
                     res.array.block_until_ready()
-            for buf in leases:
+            for buf in ctx.leases:
                 self._arena_pool.give(buf)
-        return {name: out[name] for name in self.columns}
+        return {name: ctx.out[name] for name in self.columns}
 
     # -- stages ------------------------------------------------------------
 
@@ -425,59 +614,6 @@ class DecodePlanner:
             return hit
         return memo.put(memo_key,
                         self._inflate_chunk_entry(chunk, raws[name]))
-
-    def _decompress_stage(self, plan: RowGroupPlan, rg,
-                          raws: Dict[str, bytes]
-                          ) -> Dict[Tuple[str, int], bytes]:
-        """(column, page_index) → decoded payload bytes (or raw-view tuple
-        ``(raw, offset, size)`` for uncompressed pages, enabling the
-        single-copy arena fill).
-
-        Host-decompressed chunks (gzip on either backend, cascade on the
-        host backend) go through the chunk-level decompress memo: a scan
-        that revisits the chunk — repeated queries, a second pass — reuses
-        the inflated payloads instead of re-running one zlib call per page.
-        """
-        payloads: Dict[Tuple[str, int], object] = {}
-        cascade_pages: List[Tuple[str, int, bytes]] = []
-        memo = chunk_decompress_memo()
-        for name in plan.grouped_columns:
-            chunk = rg.column(name)
-            raw = raws[name]
-            off0, _ = chunk.byte_range
-            codec = Codec(chunk.codec)
-            memo_key = self._memo_key(chunk, name)
-            if memo_key is not None:
-                # memo entries are keyed by page index ("dict" for the
-                # dictionary page) and shared with the fallback path
-                entry = memo.get(memo_key)
-                if entry is None:
-                    entry = memo.put(
-                        memo_key, self._inflate_chunk_entry(chunk, raw))
-                for k, v in entry.items():
-                    payloads[(name, k)] = v
-                continue
-            # not memoizable: raw views (NONE) / device-side cascade
-            if chunk.dict_page is not None:
-                dp = chunk.dict_page
-                payloads[(name, "dict")] = decompress(
-                    raw[dp.offset - off0:dp.offset - off0 + dp.stored_size],
-                    codec, dp.uncompressed_size)
-            for pi, pm in enumerate(chunk.pages):
-                lo = pm.offset - off0
-                if codec == Codec.NONE:
-                    payloads[(name, pi)] = (raw, lo, pm.stored_size)
-                else:
-                    cascade_pages.append((name, pi,
-                                          raw[lo:lo + pm.stored_size]))
-        if cascade_pages:
-            metas = [rg.column(n).pages[pi] for n, pi, _ in cascade_pages]
-            dec = ops.cascade_decompress_device(
-                [(pm, data) for pm, (_, _, data) in zip(
-                    metas, cascade_pages)])
-            for (name, pi, _), (_, data) in zip(cascade_pages, dec):
-                payloads[(name, pi)] = data
-        return payloads
 
     def _demote_wide_delta(self, rg, slots: List[PageSlot], payloads
                            ) -> Tuple[List[PageSlot], List[str]]:

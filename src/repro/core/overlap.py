@@ -1,23 +1,33 @@
-"""Staged pipeline scan executor (paper §4): fetch ∥ decompress/decode ∥ consume.
+"""Scan executors (paper §4): blocking, inline-overlapped, and the
+ScanService client.
 
 The blocking reader fetches *all* I/O, then decodes, then runs the query —
-the accelerator idles through the I/O phase.  The pipelined reader splits a
-scan into three stages at row-group granularity (DESIGN.md §2.5):
+the accelerator idles through the I/O phase.  The overlapped reader splits
+a scan into three stages (DESIGN.md §2.5/§2.6):
 
-  fetch    one I/O thread prefetches RG byte ranges (coalesced requests);
-  decode   a pool of ``decode_workers`` threads (default: one fewer than
-           the core count, capped at 2 — see default_decode_workers) runs
-           decompress + decode (``Scanner.decode_rg``) *off the consume
-           thread*, so host decode work no longer serializes kernel
-           execution;
+  fetch    an I/O thread prefetches RG byte ranges (coalesced requests);
+  decode   decode work items run *off the consume thread*;
   consume  the caller's thread executes query kernels strictly in plan
            order while later row groups decode behind it.
 
-Backpressure: at most ``depth`` row groups are in flight (fetched or decoded
-but not yet consumed) — the fetch thread blocks on an in-flight semaphore
-that the consume stage releases, which bounds memory (the paper's OOM
-point).  ``decode_workers=0`` degenerates to the PR-1 executor: decode runs
-inline on the consume thread.
+``run_overlapped`` is a thin client of the process-wide **ScanService**
+(core/scheduler.py): one shared fetch thread and one shared decode pool
+serve every concurrent scan, dispatching *per-chunk* work items (each
+DecodePlan group / fallback column of a row group is independently
+schedulable, with a join barrier before consume).  ``decode_workers``:
+
+  None     the default — shared pool, adaptive sizing from observed
+           per-stage wall ratios (REPRO_DECODE_WORKERS overrides);
+  N >= 1   shared pool with the pool width floored at N while this scan
+           is active (reported and modeled as N servers);
+  0        the private PR-1 executor: one fetch thread, decode inline on
+           the consume thread (file-layout benchmarks pin this so executor
+           parallelism cannot contaminate layout comparisons).
+
+Backpressure: at most ``depth`` row groups are in flight (fetched or
+decoded but not yet consumed) per scan — fetch is gated by per-scan
+credits that the consume stage releases, which bounds memory (the paper's
+OOM point).
 
 Two time accountings are produced:
   measured_wall  actual wall time of this process (real thread overlap)
@@ -25,7 +35,9 @@ Two time accountings are produced:
                  when storage time is simulated (sim backend), since a
                  simulated fetch returns instantly on the host clock.  The
                  overlapped model schedules decode on ``decode_workers``
-                 parallel servers feeding an in-order consume stage; with
+                 parallel servers feeding an in-order consume stage — at
+                 *chunk* granularity when per-chunk item times were
+                 recorded (``ScanMetrics.decode_chunks_per_rg``); with
                  ``decode_workers=0`` decode shares the consume thread and
                  the schedule reduces to the PR-1 two-stage model.
 
@@ -49,17 +61,15 @@ from repro.kernels.common import kernel_launch_count
 Consume = Callable[[object, int, Dict], object]
 
 
-def default_decode_workers() -> int:
-    """Decode-pool width: leave one core for the consume stage.  On the
-    2-core CI/container class one worker is already the full win (decode
-    off the consume thread); wider pools only pay with spare cores.
-    Override with REPRO_DECODE_WORKERS (0 → inline decode).  Resolved at
-    call time — ``decode_workers=None`` in run_overlapped/q6/q12 — so
+def default_decode_workers() -> Optional[int]:
+    """Resolve ``decode_workers=None``: the REPRO_DECODE_WORKERS override
+    when set (0 → inline decode), else None — the shared ScanService pool
+    with adaptive sizing (core/scheduler.py).  Resolved at call time so
     setting the env var after import still takes effect."""
     env = os.environ.get("REPRO_DECODE_WORKERS")
     if env is not None:
         return max(0, int(env))
-    return max(1, min(2, (os.cpu_count() or 2) - 1))
+    return None
 
 
 class _MetricsProbe:
@@ -100,14 +110,30 @@ class RunReport:
         overlapped, W = 0   two stages: storage ∥ (decode + consume) serial
                             on the consume thread (the PR-1 executor)
         overlapped, W ≥ 1   three stages: storage → W parallel decode
-                            servers → in-order consume; RG i's decode starts
-                            at max(io_done(i), earliest-free server) and its
-                            consume at max(decode_done(i), consume_done(i-1))
+                            servers → in-order consume.  When per-chunk
+                            item times were recorded (the ScanService's
+                            per-chunk dispatch,
+                            ``metrics.decode_chunks_per_rg``), RG i's
+                            items are scheduled individually on the W
+                            servers honoring the executor's DAG: the
+                            serialized "open" runs first, the phase-1
+                            (decompress) items fan out, the phase
+                            transition runs after they ALL drain (the
+                            barrier, ``decode_p2_start_per_rg``), the
+                            phase-2 (decode) items fan out, and the
+                            finalize join runs last — so a wide row
+                            group's chunks decode in parallel but the
+                            model never beats the real DAG.  Without
+                            chunk times the RG is one indivisible decode
+                            of length ``decode_per_rg[i]``.  RG i's decode starts
+                            at max(io_done(i), earliest-free server) and
+                            its consume at max(decode_done(i),
+                            consume_done(i-1)).
 
         Overlapped schedules honor the executor's ``depth`` backpressure:
         RG k's fetch cannot start before RG k-depth is consumed (the
-        in-flight semaphore), so the model never reports a schedule the
-        real executor could not achieve.
+        in-flight credit), so the model never reports a schedule the real
+        executor could not achieve.
         """
         dec = self.metrics.decode_per_rg
         cons = self.consume_per_rg
@@ -125,14 +151,40 @@ class RunReport:
                 compute_done = max(io_done, compute_done) + d + c
                 done_hist.append(compute_done)
             return compute_done
+        chunks = self.metrics.decode_chunks_per_rg
         free = [0.0] * self.decode_workers
         consume_done = 0.0
+
+        def run_on_server(ready: float, t: float) -> float:
+            j = min(range(len(free)), key=free.__getitem__)
+            free[j] = max(ready, free[j]) + t
+            return free[j]
+
+        splits = self.metrics.decode_p2_start_per_rg
         for k, (io, d, c) in enumerate(zip(ios, dec, cons)):
             gate = done_hist[k - depth] if k >= depth else 0.0
             io_done = max(io_done, gate) + io
-            j = min(range(len(free)), key=free.__getitem__)
-            decode_done = max(io_done, free[j]) + d
-            free[j] = decode_done
+            parts = (chunks[k] if k < len(chunks) and chunks[k] else [d])
+            s = splits[k] if k < len(splits) else 0
+            if len(parts) <= 2 or not 2 <= s <= len(parts) - 1:
+                # open/finalize alone, an indivisible decode, or no
+                # recorded barrier: serialize — never beat the real DAG
+                decode_done = io_done
+                for t in parts:
+                    decode_done = run_on_server(decode_done, t)
+            else:
+                # layout: [open][phase-1 …][transition][phase-2 …][fin];
+                # each wave fans out across the W servers, the
+                # transition and finalize join behind their phase
+                opened = run_on_server(io_done, parts[0])
+                p1_join = opened
+                for t in parts[1:s - 1]:
+                    p1_join = max(p1_join, run_on_server(opened, t))
+                trans = run_on_server(p1_join, parts[s - 1])
+                p2_join = trans
+                for t in parts[s:-1]:
+                    p2_join = max(p2_join, run_on_server(trans, t))
+                decode_done = run_on_server(p2_join, parts[-1])
             consume_done = max(consume_done, decode_done) + c
             done_hist.append(consume_done)
         return consume_done
@@ -209,44 +261,95 @@ def run_blocking(scanner: Scanner, consume: Optional[Consume] = None,
                           stage_walls=walls)
 
 
-class _PipelineState:
-    """Cross-thread state for one pipelined run: completed decodes keyed by
-    plan position (consume reorders), first-error capture, and the abort
-    flag every stage polls so failures drain instead of deadlocking."""
+class _FetchState:
+    """Cross-thread state of the inline (W=0) executor's fetch thread:
+    first-error capture and the abort flag both sides poll so failures
+    drain instead of deadlocking."""
 
     def __init__(self):
-        self.cv = threading.Condition()
-        self.done: Dict[int, tuple] = {}
         self.errors: List[BaseException] = []
         self.abort = threading.Event()
-        self.decode_t0: Optional[float] = None
-        self.decode_t1: float = 0.0
 
     def fail(self, exc: BaseException) -> None:
-        with self.cv:
-            self.errors.append(exc)
-            self.abort.set()
-            self.cv.notify_all()
+        self.errors.append(exc)
+        self.abort.set()
 
 
 def run_overlapped(scanner: Scanner, consume: Optional[Consume] = None,
                    row_groups: Optional[Sequence[int]] = None,
                    predicate_stats=None, depth: int = 2,
-                   decode_workers: Optional[int] = None):
-    """Staged pipeline: I/O thread ∥ decode pool ∥ in-order consume.
+                   decode_workers: Optional[int] = None, service=None):
+    """Overlapped scan: fetch ∥ decode ∥ in-order consume.
 
     ``depth`` bounds row groups in flight (fetched or decoded, not yet
-    consumed).  ``decode_workers=0`` decodes inline on the consume thread —
-    the PR-1 double-buffered executor; None → default_decode_workers().
+    consumed).  ``decode_workers=0`` decodes inline on the consume thread
+    (the PR-1 double-buffered executor, private fetch thread); any other
+    value routes through the shared ScanService — ``None`` (the default)
+    with adaptive pool sizing, ``N >= 1`` flooring the pool at N while
+    this scan runs.  ``service`` overrides the process-wide singleton
+    (tests / dedicated pools).
     """
+    if decode_workers is None:
+        decode_workers = default_decode_workers()
+    if decode_workers is not None and int(decode_workers) <= 0:
+        return _run_overlapped_inline(scanner, consume, row_groups,
+                                      predicate_stats, depth)
+    return _run_overlapped_service(scanner, consume, row_groups,
+                                   predicate_stats, depth,
+                                   decode_workers, service)
+
+
+def _run_overlapped_service(scanner: Scanner, consume: Optional[Consume],
+                            row_groups, predicate_stats, depth: int,
+                            decode_workers: Optional[int], service):
+    """Shared-pool path: submit to the ScanService, consume in order."""
+    from repro.core.scheduler import scan_service
+
+    t0 = time.perf_counter()
+    m = ScanMetrics(backend=getattr(scanner.storage, "kind", "real"))
+    probe = _MetricsProbe(scanner)
+    svc = service if service is not None else scan_service()
+    hint = int(decode_workers) if decode_workers else None
+    handle = svc.submit(scanner, row_groups=row_groups,
+                        predicate_stats=predicate_stats, depth=depth,
+                        workers_hint=hint,
+                        label=getattr(scanner, "path", "scan"))
+    acc = None
+    consume_times: List[float] = []
+    try:
+        for i, cols, io_dt, dec_dt, chunk_times, p2_start in handle:
+            _account_rg(scanner, m, i, cols, io_dt, dec_dt)
+            m.decode_chunks_per_rg.append(chunk_times)
+            m.decode_p2_start_per_rg.append(p2_start)
+            t1 = time.perf_counter()
+            if consume is not None:
+                acc = consume(acc, i, cols)
+            consume_times.append(time.perf_counter() - t1)
+    except BaseException:
+        handle.cancel()             # no-op if the scan already finished
+        raise
+    probe.finish(m)
+    workers = handle.workers
+    walls = handle.stage_walls()
+    walls["consume"] = sum(consume_times)
+    m.fetch_wall_seconds = walls["fetch"]
+    m.decode_wall_seconds = walls["decode"]
+    m.consume_seconds = walls["consume"]
+    return acc, RunReport("overlapped", time.perf_counter() - t0, m,
+                          consume_times, decode_workers=workers,
+                          depth=max(1, depth), stage_walls=walls)
+
+
+def _run_overlapped_inline(scanner: Scanner, consume: Optional[Consume],
+                           row_groups, predicate_stats, depth: int):
+    """The PR-1 executor: private fetch thread ∥ inline decode + consume.
+    Kept behind ``decode_workers=0`` so file-layout comparisons can pin an
+    executor without pool parallelism."""
     t0 = time.perf_counter()
     plan = scanner.plan(predicate_stats, row_groups)
     m = ScanMetrics(backend=getattr(scanner.storage, "kind", "real"))
     probe = _MetricsProbe(scanner)
-    if decode_workers is None:
-        decode_workers = default_decode_workers()
-    workers = max(0, int(decode_workers))
-    state = _PipelineState()
+    state = _FetchState()
     inflight = threading.Semaphore(max(1, depth))
     fetched: "queue.Queue" = queue.Queue()
     fetch_wall = [0.0]
@@ -254,69 +357,35 @@ def run_overlapped(scanner: Scanner, consume: Optional[Consume] = None,
     def fetch_worker():
         t_start = time.perf_counter()
         try:
-            for seq, i in enumerate(plan):
+            for i in plan:
                 while not state.abort.is_set():
                     if inflight.acquire(timeout=0.05):
                         break
                 if state.abort.is_set():
                     break
                 raws, io_dt = scanner.fetch_rg(i)
-                fetched.put((seq, i, raws, io_dt))
+                fetched.put((i, raws, io_dt))
         except BaseException as e:  # surfaced on the consume thread
             state.fail(e)
         finally:
             fetch_wall[0] = time.perf_counter() - t_start
-            for _ in range(max(1, workers)):
-                fetched.put(None)
+            fetched.put(None)
 
-    def decode_worker():
-        while True:
-            item = fetched.get()
-            if item is None:
-                break
-            if state.abort.is_set():
-                continue            # drain without decoding
-            seq, i, raws, io_dt = item
-            try:
-                t_d = time.perf_counter()
-                cols, dec_dt = scanner.decode_rg(i, raws)
-                t_e = time.perf_counter()
-            except BaseException as e:
-                state.fail(e)
-                continue
-            with state.cv:
-                if state.decode_t0 is None or t_d < state.decode_t0:
-                    state.decode_t0 = t_d
-                state.decode_t1 = max(state.decode_t1, t_e)
-                state.done[seq] = (i, cols, io_dt, dec_dt)
-                state.cv.notify_all()
-
-    threads = [threading.Thread(target=fetch_worker, daemon=True)]
-    threads += [threading.Thread(target=decode_worker, daemon=True)
-                for _ in range(workers)]
-    for t in threads:
-        t.start()
+    thread = threading.Thread(target=fetch_worker, daemon=True)
+    thread.start()
 
     acc = None
     consume_times: List[float] = []
-    decode_wall_inline = 0.0
+    decode_wall = 0.0
     try:
-        for seq in range(len(plan)):
-            if workers:
-                with state.cv:
-                    while seq not in state.done and not state.abort.is_set():
-                        state.cv.wait(timeout=0.05)
-                    if seq not in state.done:
-                        break       # aborted upstream
-                    i, cols, io_dt, dec_dt = state.done.pop(seq)
-            else:
-                item = fetched.get()
-                if item is None:
-                    break           # fetch aborted
-                _, i, raws, io_dt = item
-                t_d = time.perf_counter()
-                cols, dec_dt = scanner.decode_rg(i, raws)
-                decode_wall_inline += time.perf_counter() - t_d
+        for _ in range(len(plan)):
+            item = fetched.get()
+            if item is None:
+                break               # fetch aborted
+            i, raws, io_dt = item
+            t_d = time.perf_counter()
+            cols, dec_dt = scanner.decode_rg(i, raws)
+            decode_wall += time.perf_counter() - t_d
             _account_rg(scanner, m, i, cols, io_dt, dec_dt)
             t1 = time.perf_counter()
             if consume is not None:
@@ -327,22 +396,15 @@ def run_overlapped(scanner: Scanner, consume: Optional[Consume] = None,
         state.abort.set()
         raise
     finally:
-        if state.errors:
-            state.abort.set()
-        for t in threads:
-            t.join(timeout=5.0)
+        thread.join(timeout=5.0)
     if state.errors:
         raise state.errors[0]
     probe.finish(m)
-    if workers and state.decode_t0 is not None:
-        decode_wall = state.decode_t1 - state.decode_t0
-    else:
-        decode_wall = decode_wall_inline
     m.fetch_wall_seconds = fetch_wall[0]
     m.decode_wall_seconds = decode_wall
     m.consume_seconds = sum(consume_times)
     walls = {"fetch": fetch_wall[0], "decode": decode_wall,
              "consume": sum(consume_times)}
     return acc, RunReport("overlapped", time.perf_counter() - t0, m,
-                          consume_times, decode_workers=workers,
+                          consume_times, decode_workers=0,
                           depth=max(1, depth), stage_walls=walls)

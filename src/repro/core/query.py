@@ -82,19 +82,21 @@ def _q6_consume(use_kernel: bool):
 
 def q6(scanner: Scanner, overlapped: bool = True, use_kernel: bool = False,
        prune: bool = True, prepare_plan: bool = False, depth: int = 2,
-       decode_workers: Optional[int] = None
+       decode_workers: Optional[int] = None, service=None
        ) -> Tuple[float, RunReport]:
     """Run Q6 over the scanner's stream.  ``prepare_plan`` pre-builds the
     row-group decode plans before timing starts (the serving-loop case —
     plans are cached per file footer + column selection, so repeated
     queries always hit).  ``depth``/``decode_workers`` shape the pipelined
-    executor (overlap.py); both are ignored for blocking runs."""
+    executor (overlap.py); ``service`` selects a specific ScanService
+    instead of the shared one; all three are ignored for blocking runs."""
     if prepare_plan:
         scanner.prepare_plans(
             predicate_stats=q6_rg_stats_predicate if prune else None)
     if overlapped:
         runner = functools.partial(run_overlapped, depth=depth,
-                                   decode_workers=decode_workers)
+                                   decode_workers=decode_workers,
+                                   service=service)
     else:
         runner = run_blocking
     acc, report = runner(scanner, _q6_consume(use_kernel),
@@ -143,8 +145,8 @@ def _q12_probe(skeys, sprio, okey, mode, ship, commit, receipt):
 
 def q12(lineitem_scanner: Scanner, orders_scanner: Scanner,
         overlapped: bool = True, prepare_plan: bool = False,
-        depth: int = 2, decode_workers: Optional[int] = None
-        ) -> Tuple[Dict[str, int], RunReport, RunReport]:
+        depth: int = 2, decode_workers: Optional[int] = None,
+        service=None) -> Tuple[Dict[str, int], RunReport, RunReport]:
     if prepare_plan:
         lineitem_scanner.prepare_plans()
         orders_scanner.prepare_plans()
@@ -157,7 +159,8 @@ def q12(lineitem_scanner: Scanner, orders_scanner: Scanner,
 
     if overlapped:
         runner = functools.partial(run_overlapped, depth=depth,
-                                   decode_workers=decode_workers)
+                                   decode_workers=decode_workers,
+                                   service=service)
     else:
         runner = run_blocking
     (keys, prio), build_report = runner(orders_scanner, build_consume)

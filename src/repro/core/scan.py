@@ -24,11 +24,13 @@ reads, which the N-lane model rewards per Insight 2.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.compression import inflate_backend
 from repro.core.decode_plan import planner_for
 from repro.core.metadata import ChunkMeta
 from repro.core.reader import TabFileReader, read_footer
@@ -58,6 +60,21 @@ class ScanMetrics:
     fetch_wall_seconds: float = 0.0
     decode_wall_seconds: float = 0.0
     consume_seconds: float = 0.0
+    # per-chunk decode item times per row group (ScanService dispatch):
+    # decode_chunks_per_rg[k] lists RG k's independently scheduled item
+    # walls in completion order — open, phase-1 (decompress) items, the
+    # phase transition, phase-2 (decode) items, finalize; empty on
+    # monolithic decode.  sum(decode_chunks_per_rg[k]) ≈ decode_per_rg[k].
+    # decode_p2_start_per_rg[k] indexes RG k's first phase-2 item — the
+    # barrier the modeled schedule honors (phase 2 starts only after
+    # every phase-1 item drained).
+    decode_chunks_per_rg: List[List[float]] = dataclasses.field(
+        default_factory=list)
+    decode_p2_start_per_rg: List[int] = dataclasses.field(
+        default_factory=list)
+    # informational: the gzip-inflate backend active for this process
+    # (isal / zlib-ng / zlib — core/compression.py)
+    inflate_backend: str = inflate_backend()
 
     @property
     def blocking_seconds(self) -> float:
@@ -85,6 +102,77 @@ class ScanMetrics:
     @property
     def compression_ratio(self) -> float:
         return self.logical_bytes / max(1, self.stored_bytes)
+
+
+class DecodeJob:
+    """Protocol for a schedulable row-group decode (see Scanner.decode_job).
+
+    Run every callable from ``phase1_tasks()`` (concurrently is fine), then
+    — only after phase 1 fully drains — every callable from
+    ``phase2_tasks()``, then ``finalize()`` (the join barrier), which
+    returns the decoded columns dict.  Serial callers may simply iterate;
+    the ScanService fans the items out across its shared decode pool so one
+    slow chunk no longer holds its whole row group.
+    """
+
+    def phase1_tasks(self) -> List:
+        return []
+
+    def phase2_tasks(self) -> List:
+        return []
+
+    def finalize(self) -> Dict[str, ops.DecodeResult]:
+        raise NotImplementedError
+
+
+class _PlannedDecodeJob(DecodeJob):
+    """Staged DecodePlanner execution (the default path)."""
+
+    def __init__(self, scanner: "Scanner", rg_index: int, raws):
+        self.planner = scanner.planner
+        self.ctx = self.planner.begin_execute(rg_index, raws)
+
+    def phase1_tasks(self):
+        return self.planner.decompress_tasks(self.ctx)
+
+    def phase2_tasks(self):
+        return self.planner.decode_tasks(self.ctx)
+
+    def finalize(self):
+        out = self.planner.finish_execute(self.ctx)
+        for res in out.values():
+            if res.on_device:
+                res.array.block_until_ready()
+        return out
+
+
+class _PerChunkDecodeJob(DecodeJob):
+    """use_plan=False reference path: one item per column chunk."""
+
+    def __init__(self, scanner: "Scanner", rg_index: int, raws):
+        self.scanner = scanner
+        self.rg_index = rg_index
+        self.raws = raws
+        self.out: Dict[str, ops.DecodeResult] = {}
+
+    def _decode_column(self, name: str) -> None:
+        sc = self.scanner
+        rg = sc.meta.row_groups[self.rg_index]
+        chunk = rg.column(name)
+        field = sc.meta.schema.field(name)
+        self.out[name] = ops.decode_chunk(
+            chunk, field, self.raws[name],
+            use_kernels=(sc.decode_backend == "pallas"))
+
+    def phase2_tasks(self):
+        return [functools.partial(self._decode_column, name)
+                for name in self.scanner.columns]
+
+    def finalize(self):
+        for res in self.out.values():
+            if res.on_device:
+                res.array.block_until_ready()
+        return {name: self.out[name] for name in self.scanner.columns}
 
 
 class Scanner:
@@ -139,6 +227,22 @@ class Scanner:
         datas, dt = fetch_coalesced(self.storage, [r for _, _, r in reqs],
                                     self.coalesce_gap)
         return {name: d for (name, _, _), d in zip(reqs, datas)}, dt
+
+    def decode_job(self, rg_index: int, raws: Dict[str, bytes]
+                   ) -> "DecodeJob":
+        """Schedulable decode of one row group (ScanService per-chunk
+        dispatch, core/scheduler.py): phase-1 items (decompress), phase-2
+        items (one per DecodePlan group / fallback column), then a join
+        ``finalize``.  Bit-identical to ``decode_rg`` — both drive the same
+        staged planner execution.  An *instance-patched* ``decode_rg``
+        (tests, instrumentation) stays authoritative: the job degrades to
+        one opaque item that calls it."""
+        if "decode_rg" in self.__dict__:
+            from repro.core.scheduler import OpaqueDecodeJob
+            return OpaqueDecodeJob(self, rg_index, raws)
+        if self.planner is not None:
+            return _PlannedDecodeJob(self, rg_index, raws)
+        return _PerChunkDecodeJob(self, rg_index, raws)
 
     def decode_rg(self, rg_index: int, raws: Dict[str, bytes]
                   ) -> Tuple[Dict[str, ops.DecodeResult], float]:

@@ -1,0 +1,699 @@
+"""ScanService: shared-pool multi-scan scheduler (DESIGN.md §2.6).
+
+The serving loop runs *many small scans* concurrently, but the PR-2
+executor gave every ``run_overlapped`` call a private fetch thread and a
+private decode pool — concurrent scans fought over cores, and decode
+dispatched at whole-row-group granularity, so one slow column chunk
+stalled its row group.  This module schedules the fetch → decompress →
+decode path as one shared resource across scans (the Presto-on-GPU /
+Data-Path-Fusion result):
+
+  fetch    ONE shared thread issues each scan's coalesced per-RG reads,
+           round-robin across active scans, gated by each scan's ``depth``
+           credits (the per-scan in-flight bound / OOM backpressure).
+           Serializing fetches is deliberate — the paper's storage model
+           treats the NVMe array as one shared channel whose bandwidth
+           coalesced large reads already saturate — but it does trade
+           away concurrent-fetch overlap on high-latency *real* backends
+           (network FS); a small fetch pool there is a ROADMAP item;
+  decode   ONE shared worker pool runs *per-chunk* work items — each
+           DecodePlan group, fallback column, or decompress item of a row
+           group is independently schedulable (``Scanner.decode_job``),
+           with a join barrier before consume, so one slow gzip chunk no
+           longer holds the whole row group, and items from different
+           scans interleave fairly (round-robin dispatch);
+  consume  each scan's caller thread takes its row groups strictly in
+           plan order from a per-scan in-order queue (``ScanHandle``).
+
+**Fairness.**  Both the fetch thread and the decode workers service scans
+in round-robin order, so N concurrent scans each make progress instead of
+the first-submitted scan monopolizing the pool.
+
+**Error isolation / cancellation.**  A failing work item (or fetch) marks
+only its own scan: queued items of that scan are dropped, its handle
+re-raises the first error, and every other scan is untouched.
+``ScanHandle.cancel()`` does the same without an error.  The pool never
+dies with a scan.
+
+**Adaptive worker sizing.**  The pool resizes from observed per-stage
+wall ratios over a sliding window of delivered row groups: decode-bound
+streams (decode ≫ max(fetch, consume)) grow the pool toward
+``cpu_count - 1``; fetch/consume-bound streams shrink it toward one
+worker (idle decode threads only add GIL contention).  An explicit
+``workers_hint`` (``run_overlapped(decode_workers=N)``) pins the floor at
+N while that scan is active.
+
+``run_overlapped`` (core/overlap.py) is a thin client of this service for
+``decode_workers >= 1``; the private inline path survives behind
+``decode_workers=0``.  The process-wide singleton is ``scan_service()``.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+import time
+from collections import deque
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+
+class ScanCancelled(RuntimeError):
+    """Raised by a ScanHandle whose scan was cancelled mid-stream."""
+
+
+def default_max_workers() -> int:
+    """Adaptive-pool ceiling: leave one core for consume/fetch.  Override
+    with REPRO_SCAN_MAX_WORKERS."""
+    env = os.environ.get("REPRO_SCAN_MAX_WORKERS")
+    if env is not None:
+        return max(1, int(env))
+    return max(1, (os.cpu_count() or 2) - 1)
+
+
+class OpaqueDecodeJob:
+    """One-item decode job wrapping a ``decode_rg`` callable: the adapter
+    for scanners without ``decode_job`` (test stubs) and for scanners
+    whose ``decode_rg`` was instance-patched (tests/instrumentation),
+    where the patched callable must keep owning the whole decode.  The
+    single implementation of this shape — ``Scanner.decode_job`` reuses
+    it (core/scan.py)."""
+
+    def __init__(self, scanner, rg_index, raws):
+        self.scanner = scanner
+        self.rg_index = rg_index
+        self.raws = raws
+        self.cols = None
+
+    def phase1_tasks(self):
+        return []
+
+    def phase2_tasks(self):
+        return [self._decode]
+
+    def _decode(self):
+        self.cols, _ = self.scanner.decode_rg(self.rg_index, self.raws)
+
+    def finalize(self):
+        assert self.cols is not None
+        return self.cols
+
+
+class _RgJob:
+    """One fetched row group moving through the per-chunk decode DAG:
+    open → phase-1 items (decompress) → phase-2 items (groups/fallbacks)
+    → finalize (join) → each subscriber scan's in-order done queue.
+
+    **Cooperative scans**: identical concurrent scans (same file contents,
+    column selection, decode backend, storage shape) *subscribe* to an
+    already-in-flight job for a row group instead of fetching and decoding
+    it again — the serving-loop case where N clients query the same hot
+    file.  ``subscribers`` lists the (scan, seq) pairs awaiting this job's
+    columns; the decoded results are delivered to all of them (read-only
+    DecodeResults are safe to share)."""
+
+    __slots__ = ("rg_index", "raws", "io_dt", "job", "pending",
+                 "phase", "chunk_times", "p2_start", "key", "subscribers")
+
+    def __init__(self, seq_scan, seq: int, rg_index: int, raws,
+                 io_dt: float, key):
+        self.rg_index = rg_index
+        self.raws = raws
+        self.io_dt = io_dt
+        self.job = None           # built by the "open" item
+        self.pending = 0          # outstanding items of the current phase
+        self.phase = 0            # 0=open, 1, 2
+        self.chunk_times: List[float] = []
+        self.p2_start = 0         # chunk_times index of the first phase-2
+                                  # item (the phase barrier, for the model)
+        self.key = key            # sharing identity, None → not shareable
+        self.subscribers: List[tuple] = [(seq_scan, seq)]
+
+    def live_scan(self):
+        """First subscriber scan still interested in this job, or None."""
+        for scan, _ in self.subscribers:
+            if not scan.dead:
+                return scan
+        return None
+
+
+def _share_key(scanner) -> Optional[tuple]:
+    """Identity under which two scans may share fetch+decode work: file
+    *contents* (the planner cache token carries path + size + mtime),
+    column selection, decode backend, and the storage model (its kind and
+    timing parameters — a sim-backend scan must not inherit a real
+    backend's io_dt or vice versa).  None → never share (no planner, or an
+    instance-patched fetch/decode that sharing would bypass)."""
+    planner = getattr(scanner, "planner", None)
+    if planner is None:
+        return None
+    if ("decode_rg" in getattr(scanner, "__dict__", {})
+            or "fetch_rg" in getattr(scanner, "__dict__", {})):
+        return None
+    storage = getattr(scanner, "storage", None)
+    return (planner.cache_token,
+            tuple(scanner.columns),
+            scanner.decode_backend,
+            getattr(storage, "kind", "real"),
+            getattr(storage, "n_lanes", None),
+            getattr(storage, "lane_bandwidth", None),
+            getattr(storage, "latency", None),
+            getattr(scanner, "coalesce_gap", None))
+
+
+class _ScanState:
+    """Service-side state of one submitted scan."""
+
+    def __init__(self, service: "ScanService", scanner, plan: List[int],
+                 depth: int, workers_hint: Optional[int], label: str):
+        self.scanner = scanner
+        self.plan = plan
+        self.depth = max(1, depth)
+        self.workers_hint = workers_hint
+        self.label = label
+        self.share_key = _share_key(scanner)
+        self.shared_rgs = 0            # RGs satisfied by cooperative jobs
+        self.workers_seen = 1          # max pool width while this scan ran
+        self.credits = self.depth      # fetch permits (in-flight RG bound)
+        self.next_fetch = 0            # next plan position to fetch
+        self.ready: deque = deque()    # work items ready for the pool
+        self.done: Dict[int, tuple] = {}
+        self.error: Optional[BaseException] = None
+        self.cancelled = False
+        self.finished = False
+        # stage wall spans (first start → last end) for RunReport
+        self.fetch_span = [float("inf"), 0.0]
+        self.decode_span = [float("inf"), 0.0]
+        self.done_cv = threading.Condition(service._lock)
+
+    @property
+    def dead(self) -> bool:
+        return self.error is not None or self.cancelled or self.finished
+
+    def span(self, which: str) -> float:
+        lo, hi = self.fetch_span if which == "fetch" else self.decode_span
+        return max(0.0, hi - lo) if hi else 0.0
+
+
+class ScanHandle:
+    """Client side of one scan: iterate to receive
+    ``(rg_index, cols, io_dt, dec_dt, chunk_times, p2_start)`` strictly in
+    plan order (``chunk_times`` lists the RG's decode item walls in
+    completion order — open, phase-1 items, transition, phase-2 items,
+    finalize — and ``p2_start`` indexes the first phase-2 item, the
+    barrier the modeled schedule must honor).  Advancing the iterator *acks* the previous row group —
+    releasing its in-flight credit and reporting its consume time to the
+    adaptive sizer — so call ``next`` only after consuming.  ``cancel()``
+    stops the scan without poisoning the pool."""
+
+    def __init__(self, service: "ScanService", scan: _ScanState):
+        self._svc = service
+        self._scan = scan
+        self._next_seq = 0
+        self._t_delivered: Optional[float] = None
+        self._last_item: Optional[tuple] = None
+
+    def __iter__(self) -> "ScanHandle":
+        return self
+
+    def __next__(self) -> tuple:
+        svc, scan = self._svc, self._scan
+        with svc._lock:
+            if self._t_delivered is not None:
+                svc._ack_locked(scan, self._last_item,
+                                time.perf_counter() - self._t_delivered)
+                self._t_delivered = None
+            if self._next_seq >= len(scan.plan) and scan.error is None:
+                svc._finish_scan_locked(scan)
+                raise StopIteration
+            while (self._next_seq not in scan.done and not scan.dead):
+                scan.done_cv.wait(timeout=0.1)
+            if scan.error is not None or scan.cancelled:
+                err, cancelled = scan.error, scan.cancelled
+                svc._finish_scan_locked(scan)
+                if err is not None:
+                    raise err
+                if cancelled:
+                    raise ScanCancelled(f"scan {scan.label} cancelled")
+            item = scan.done.pop(self._next_seq)
+        self._next_seq += 1
+        self._t_delivered = time.perf_counter()
+        self._last_item = item
+        return item
+
+    def cancel(self) -> None:
+        with self._svc._lock:
+            if not self._scan.finished:
+                self._scan.cancelled = True
+                self._svc._finish_scan_locked(self._scan)
+
+    # A handle abandoned before exhaustion would otherwise leak its scan
+    # registration (round-robin slot, pinned decoded RGs, fetch credits)
+    # in the process-wide service for the life of the process — close on
+    # scope exit and as a GC safety net.
+    close = cancel
+
+    def __enter__(self) -> "ScanHandle":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __del__(self):
+        try:
+            if not self._scan.finished:
+                self.close()
+        except Exception:
+            pass
+
+    @property
+    def workers(self) -> int:
+        """Pool width to report/model for this scan: the explicit hint when
+        given, else the widest pool observed *while the scan ran* (the
+        pool may resize after the scan finishes)."""
+        if self._scan.workers_hint:
+            return self._scan.workers_hint
+        return max(1, self._scan.workers_seen)
+
+    def stage_walls(self) -> Dict[str, float]:
+        return {"fetch": self._scan.span("fetch"),
+                "decode": self._scan.span("decode")}
+
+    @property
+    def shared_rgs(self) -> int:
+        """Row groups this scan received from another scan's in-flight
+        job (cooperative scans) instead of fetching + decoding itself."""
+        return self._scan.shared_rgs
+
+
+class ScanService:
+    """One shared fetch thread + one shared decode pool for all scans."""
+
+    def __init__(self, workers: Optional[int] = None, adaptive: bool = True,
+                 max_workers: Optional[int] = None, resize_every: int = 8):
+        self._lock = threading.RLock()
+        self._work_cv = threading.Condition(self._lock)
+        self._fetch_cv = threading.Condition(self._lock)
+        self._scans: List[_ScanState] = []
+        self._rr = 0               # decode round-robin cursor
+        self._fetch_rr = 0         # fetch round-robin cursor
+        self._inflight: Dict[tuple, _RgJob] = {}   # cooperative-scan jobs
+        self.shared_rgs = 0        # total RGs served by subscription
+        self.adaptive = adaptive
+        self.max_workers = max_workers or default_max_workers()
+        # _policy is what the adaptive sizer asks for; the effective target
+        # additionally honors active scans' explicit workers hints
+        self._policy = max(1, workers) if workers else 1
+        self._target = self._policy
+        self._n_workers = 0
+        self._shrink = 0           # workers asked to retire
+        self._shutdown = False
+        self._fetch_thread: Optional[threading.Thread] = None
+        self._threads: List[threading.Thread] = []
+        # adaptive window accumulators (delivered-RG stage times)
+        self._win = {"io": 0.0, "dec": 0.0, "cons": 0.0, "rgs": 0}
+        self.resize_every = max(1, resize_every)
+        self.resize_events: List[int] = []   # pool sizes after each resize
+
+    # -- public API ---------------------------------------------------------
+
+    def submit(self, scanner, row_groups: Optional[Sequence[int]] = None,
+               predicate_stats=None, depth: int = 2,
+               workers_hint: Optional[int] = None,
+               label: str = "scan") -> ScanHandle:
+        """Register one scan; returns its in-order consume handle."""
+        plan = list(scanner.plan(predicate_stats, row_groups))
+        scan = _ScanState(self, scanner, plan, depth, workers_hint, label)
+        with self._lock:
+            if self._shutdown:
+                raise RuntimeError("ScanService is shut down")
+            self._scans.append(scan)
+            self._ensure_threads_locked()
+            self._retarget_locked()
+            scan.workers_seen = max(1, self.pool_size)
+            self._fetch_cv.notify_all()
+        return ScanHandle(self, scan)
+
+    @property
+    def pool_size(self) -> int:
+        return self._n_workers - self._shrink
+
+    @property
+    def active_scans(self) -> int:
+        with self._lock:
+            return len(self._scans)
+
+    def shutdown(self) -> None:
+        with self._lock:
+            self._shutdown = True
+            # cancel every active scan: workers/fetch are about to exit, so
+            # an un-cancelled consumer would wait on done_cv forever
+            for scan in list(self._scans):
+                scan.cancelled = True
+                scan.done_cv.notify_all()
+            self._work_cv.notify_all()
+            self._fetch_cv.notify_all()
+        for t in [self._fetch_thread] + self._threads:
+            if t is not None:
+                t.join(timeout=5.0)
+
+    # -- thread management --------------------------------------------------
+
+    def _ensure_threads_locked(self) -> None:
+        if self._fetch_thread is None:
+            self._fetch_thread = threading.Thread(
+                target=self._fetch_loop, daemon=True,
+                name="scan-service-fetch")
+            self._fetch_thread.start()
+        self._spawn_to_target_locked()
+
+    def _spawn_to_target_locked(self) -> None:
+        while self._n_workers - self._shrink < self._target:
+            if self._shrink > 0:     # un-retire instead of spawning
+                self._shrink -= 1
+                continue
+            t = threading.Thread(target=self._worker_loop, daemon=True,
+                                 name=f"scan-service-{len(self._threads)}")
+            self._n_workers += 1
+            self._threads.append(t)
+            t.start()
+
+    def _retarget_locked(self) -> None:
+        """Recompute the effective pool target: the adaptive policy value
+        (capped at max_workers), floored by any active scan's explicit
+        workers hint, never below one."""
+        hints = [s.workers_hint for s in self._scans if s.workers_hint]
+        self._target = max(min(self._policy, self.max_workers),
+                           *(hints or [1]), 1)
+        if self._target > self._n_workers - self._shrink:
+            self._spawn_to_target_locked()
+        elif self._target < self._n_workers - self._shrink:
+            self._shrink = self._n_workers - self._target
+            self._work_cv.notify_all()
+
+    def _resize_window_locked(self) -> None:
+        w = self._win
+        if w["rgs"] < self.resize_every:
+            return
+        if self.adaptive:
+            # observed per-stage wall ratio over the window: how many decode
+            # servers the stream can keep busy against its slower of
+            # fetch/consume.  decode-bound → grow toward cpu_count-1;
+            # fetch/consume-bound → shrink toward 1.
+            bound = max(w["io"], w["cons"], 1e-9)
+            self._policy = max(1, int(round(w["dec"] / bound)))
+        self._win = {"io": 0.0, "dec": 0.0, "cons": 0.0, "rgs": 0}
+        self._retarget_locked()
+        self.resize_events.append(self._target)
+
+    # -- fetch stage --------------------------------------------------------
+
+    def _next_fetch_locked(self) -> Optional[Tuple[_ScanState, int, bool]]:
+        """Next (scan, seq, subscribed) to fetch, round-robin across scans
+        with fetch credit.  When an identical job for that row group is
+        already in flight (cooperative scans), the scan subscribes to it
+        instead — no fetch, no decode, the credit stays held until the
+        delivered RG is acked like any other."""
+        n = len(self._scans)
+        for k in range(n):
+            scan = self._scans[(self._fetch_rr + k) % n]
+            if (scan.dead or scan.credits <= 0
+                    or scan.next_fetch >= len(scan.plan)):
+                continue
+            self._fetch_rr = (self._fetch_rr + k + 1) % max(1, n)
+            scan.credits -= 1
+            seq = scan.next_fetch
+            scan.next_fetch += 1
+            if scan.share_key is not None:
+                job = self._inflight.get((scan.share_key, scan.plan[seq]))
+                if job is not None:
+                    job.subscribers.append((scan, seq))
+                    scan.shared_rgs += 1
+                    self.shared_rgs += 1
+                    return scan, seq, True
+            return scan, seq, False
+        return None
+
+    def _fetch_loop(self) -> None:
+        while True:
+            with self._lock:
+                if self._shutdown:
+                    return
+                got = self._next_fetch_locked()
+                if got is None:
+                    self._fetch_cv.wait(timeout=0.1)
+                    continue
+            scan, seq, subscribed = got
+            if subscribed:
+                continue
+            t0 = time.perf_counter()
+            try:
+                raws, io_dt = scan.scanner.fetch_rg(scan.plan[seq])
+            except BaseException as e:
+                self._fail_scan(scan, e)
+                continue
+            t1 = time.perf_counter()
+            with self._lock:
+                scan.fetch_span[0] = min(scan.fetch_span[0], t0)
+                scan.fetch_span[1] = max(scan.fetch_span[1], t1)
+                # the adaptive window compares *host* stage walls, so it
+                # accumulates the measured fetch time here — io_dt may be
+                # simulated (sim backend) and would dwarf the real cost
+                self._win["io"] += t1 - t0
+                if scan.dead:
+                    continue
+                key = (None if scan.share_key is None
+                       else (scan.share_key, scan.plan[seq]))
+                rgjob = _RgJob(scan, seq, scan.plan[seq], raws, io_dt, key)
+                if key is not None:
+                    self._inflight[key] = rgjob
+                scan.ready.append(("open", rgjob, None))
+                self._work_cv.notify()
+
+    # -- decode stage -------------------------------------------------------
+
+    def _next_item_locked(self, prefer: Optional[_ScanState]
+                          ) -> Optional[Tuple[_ScanState, tuple]]:
+        """Next work item, fair round-robin across scans at *row-group*
+        granularity: a worker that just ran an item of ``prefer`` keeps
+        draining that scan (its in-flight RG finishes and delivers before
+        the pool switches away — decode locality, and consumers
+        desynchronize instead of bursting), and the round-robin cursor
+        advances only at job boundaries."""
+        if (prefer is not None and not prefer.dead and prefer.ready
+                and prefer in self._scans):
+            return prefer, prefer.ready.popleft()
+        n = len(self._scans)
+        for k in range(n):
+            scan = self._scans[(self._rr + k) % n]
+            while scan.ready:
+                item = scan.ready.popleft()
+                if item[1].live_scan() is None:
+                    continue         # no subscriber left — drop the item
+                self._rr = (self._rr + k + 1) % max(1, n)
+                return scan, item
+        return None
+
+    def _worker_loop(self) -> None:
+        prefer: Optional[_ScanState] = None
+        while True:
+            with self._lock:
+                got = None
+                while got is None:
+                    if self._shutdown:
+                        return
+                    if self._shrink > 0:
+                        self._shrink -= 1
+                        self._n_workers -= 1
+                        return
+                    got = self._next_item_locked(prefer)
+                    if got is None:
+                        prefer = None
+                        self._work_cv.wait(timeout=0.2)
+            scan, item = got
+            try:
+                delivered = self._run_item(scan, item)
+                prefer = None if delivered else scan
+            except BaseException as e:  # noqa: BLE001 — isolated per scan
+                prefer = None
+                # a failing item poisons exactly the scans sharing its job
+                # (usually one); the pool and every other scan live on
+                for sub, _ in item[1].subscribers:
+                    self._fail_scan(sub, e)
+
+    def _run_item(self, scan: _ScanState, item: tuple) -> bool:
+        """Execute one work item; returns True when it completed (and
+        delivered) its whole row-group job."""
+        kind, rgjob, fn = item
+        t0 = time.perf_counter()
+        if kind == "open":
+            rgjob.job = self._job_for(scan.scanner, rgjob.rg_index,
+                                      rgjob.raws)
+            tasks = list(rgjob.job.phase1_tasks())
+            rgjob.phase = 1
+            self._note_item(scan, rgjob, t0)
+            return self._enqueue_phase(scan, rgjob, tasks)
+        if kind == "task":
+            fn()
+            self._note_item(scan, rgjob, t0)
+            with self._lock:
+                rgjob.pending -= 1
+                if rgjob.pending > 0:
+                    return False
+            return self._advance(scan, rgjob)
+        raise AssertionError(kind)
+
+    def _enqueue_phase(self, scan: _ScanState, rgjob: _RgJob,
+                       tasks: List[Callable[[], None]]) -> bool:
+        """Queue one phase's items, or fall through to the next phase /
+        finalize when the phase is empty.  Continuation items go to the
+        *front* of the scan's queue, ahead of later row groups' "open"
+        items — an in-flight RG always finishes before the next one
+        starts, so in-order delivery is never starved by fetch-ahead."""
+        if not tasks:
+            return self._advance(scan, rgjob)
+        with self._lock:
+            rgjob.pending = len(tasks)
+            target = rgjob.live_scan()   # a subscriber may have died
+            if target is None:
+                return False
+            for fn in reversed(tasks):
+                target.ready.appendleft(("task", rgjob, fn))
+            self._work_cv.notify_all()
+        return False
+
+    def _advance(self, scan: _ScanState, rgjob: _RgJob) -> bool:
+        """Phase transition on the worker that drained the previous phase:
+        1 → build+queue phase-2 items; 2 → finalize (join) and deliver."""
+        if rgjob.phase == 1:
+            t0 = time.perf_counter()
+            tasks = list(rgjob.job.phase2_tasks())
+            rgjob.phase = 2
+            self._note_item(scan, rgjob, t0)
+            rgjob.p2_start = len(rgjob.chunk_times)
+            return self._enqueue_phase(scan, rgjob, tasks)
+        t0 = time.perf_counter()
+        cols = rgjob.job.finalize()
+        self._note_item(scan, rgjob, t0)
+        dec_dt = sum(rgjob.chunk_times)
+        with self._lock:
+            # decode side of the adaptive window accrues ONCE per job here
+            # — a cooperative job has many subscribers but ran one decode
+            self._win["dec"] += dec_dt
+            if rgjob.key is not None:
+                self._inflight.pop(rgjob.key, None)
+            for sub, seq in rgjob.subscribers:
+                if sub.dead:
+                    continue
+                sub.done[seq] = (rgjob.rg_index, cols, rgjob.io_dt,
+                                 dec_dt, list(rgjob.chunk_times),
+                                 rgjob.p2_start)
+                sub.done_cv.notify_all()
+        return True
+
+    def _note_item(self, scan: _ScanState, rgjob: _RgJob,
+                   t0: float) -> None:
+        t1 = time.perf_counter()
+        with self._lock:
+            rgjob.chunk_times.append(t1 - t0)
+            for sub, _ in rgjob.subscribers:
+                sub.decode_span[0] = min(sub.decode_span[0], t0)
+                sub.decode_span[1] = max(sub.decode_span[1], t1)
+
+    @staticmethod
+    def _job_for(scanner, rg_index: int, raws):
+        mk = getattr(scanner, "decode_job", None)
+        if mk is not None:
+            return mk(rg_index, raws)
+        return OpaqueDecodeJob(scanner, rg_index, raws)
+
+    # -- completion / failure ----------------------------------------------
+
+    def _ack_locked(self, scan: _ScanState, item: Optional[tuple],
+                    consume_dt: float) -> None:
+        scan.credits += 1
+        scan.workers_seen = max(scan.workers_seen, self.pool_size)
+        if item is not None:
+            # consume is per-consumer; fetch accrued at fetch time and
+            # decode at delivery time (once per job — cooperative jobs
+            # have many subscribers but ran one decode), all measured
+            # host walls, never simulated io_dt
+            self._win["cons"] += consume_dt
+            self._win["rgs"] += 1
+            self._resize_window_locked()
+        self._fetch_cv.notify_all()
+
+    def _migrate_items_locked(self, scan: _ScanState) -> None:
+        """Re-home queued items whose jobs other scans still subscribe to
+        (cooperative scans) before this scan's queue is torn down."""
+        moved = False
+        n = len(scan.ready)
+        for _ in range(n):
+            item = scan.ready.popleft()
+            target = item[1].live_scan()
+            if target is not None and target is not scan:
+                target.ready.append(item)
+                moved = True
+        if moved:
+            self._work_cv.notify_all()
+
+    def _purge_inflight_locked(self) -> None:
+        """Drop in-flight shared jobs nobody subscribes to anymore, so a
+        future scan cannot join a job whose items were discarded."""
+        for key in [k for k, j in self._inflight.items()
+                    if j.live_scan() is None]:
+            self._inflight.pop(key)
+
+    def _fail_scan(self, scan: _ScanState, exc: BaseException) -> None:
+        with self._lock:
+            if scan.error is None and not scan.finished:
+                scan.error = exc
+            self._migrate_items_locked(scan)
+            scan.ready.clear()
+            self._purge_inflight_locked()
+            scan.done_cv.notify_all()
+            self._fetch_cv.notify_all()
+
+    def _finish_scan_locked(self, scan: _ScanState) -> None:
+        if scan.finished:
+            return
+        scan.finished = True
+        self._migrate_items_locked(scan)
+        scan.ready.clear()
+        scan.done.clear()
+        self._purge_inflight_locked()
+        if scan in self._scans:
+            self._scans.remove(scan)
+        self._rr = 0 if not self._scans else self._rr % len(self._scans)
+        self._fetch_rr = 0 if not self._scans else \
+            self._fetch_rr % len(self._scans)
+        self._retarget_locked()
+        scan.done_cv.notify_all()
+        self._fetch_cv.notify_all()
+
+
+# ---------------------------------------------------------------------------
+# process-wide singleton
+# ---------------------------------------------------------------------------
+
+_SERVICE: Optional[ScanService] = None
+_SERVICE_LOCK = threading.Lock()
+
+
+def scan_service() -> ScanService:
+    """The process-wide ScanService every run_overlapped/q6/q12 call
+    shares (created on first use)."""
+    global _SERVICE
+    with _SERVICE_LOCK:
+        if _SERVICE is None:
+            _SERVICE = ScanService()
+        return _SERVICE
+
+
+def shutdown_scan_service() -> None:
+    """Tear down the singleton (tests); the next scan_service() call
+    builds a fresh one."""
+    global _SERVICE
+    with _SERVICE_LOCK:
+        if _SERVICE is not None:
+            _SERVICE.shutdown()
+            _SERVICE = None

@@ -37,6 +37,8 @@ import threading
 import time
 from typing import List, Sequence, Tuple
 
+from repro.core.compression import inflate_backend
+
 DEFAULT_COALESCE_GAP = 64 * 1024
 
 
@@ -47,6 +49,9 @@ class FetchStats:
     seconds: float = 0.0     # simulated (sim backend) or measured (real)
     batches: int = 0         # fetch_batch calls (one per row group in scans)
     last_batch_requests: int = 0
+    # informational: which gzip-inflate backend decompresses the fetched
+    # chunks downstream (isal / zlib-ng / zlib — core/compression.py)
+    inflate_backend: str = inflate_backend()
 
     def add(self, other: "FetchStats") -> None:
         self.requests += other.requests

@@ -13,7 +13,7 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.compression import maybe_compress_chunk
+from repro.core.compression import Codec, maybe_compress_chunk
 from repro.core.config import FileConfig
 from repro.core.encodings import ChunkEncoding, select_chunk_encoding
 from repro.core.metadata import (MAGIC, ChunkMeta, FileMeta, PageMeta,
@@ -95,12 +95,23 @@ class TabFileWriter:
             page_metas: List[PageMeta] = []
             for enc_page, stored_payload in zip(uncomp_pages, stored):
                 self._f.write(stored_payload)
+                extra = enc_page.extra
+                if codec == Codec.CASCADE:
+                    # stamp the cascade frame's packed-run widths into the
+                    # footer so the DecodePlanner can group the device
+                    # decompress stage's (vw, cw) classes at *plan* time
+                    # (core/decode_plan.py) instead of re-reading every
+                    # page header at execute time
+                    vw, cw = np.frombuffer(stored_payload, dtype=np.int32,
+                                           count=4)[2:4]
+                    extra = dict(extra, cascade_vw=int(vw),
+                                 cascade_cw=int(cw))
                 page_metas.append(PageMeta(
                     offset=self._offset,
                     stored_size=len(stored_payload),
                     uncompressed_size=enc_page.nbytes,
                     n_values=enc_page.n_values,
-                    extra=enc_page.extra))
+                    extra=extra))
                 self._offset += len(stored_payload)
             dict_meta = None
             if ce.dict_page is not None:

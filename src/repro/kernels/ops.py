@@ -256,33 +256,48 @@ _DEVICE_DECODERS = {
 # cascade decompression on device
 # ---------------------------------------------------------------------------
 
+def cascade_decompress_pages_grouped(raw_pages: List[Tuple[PageMeta, bytes]]
+                                     ) -> List[bytes]:
+    """One device launch decompressing pages that share a (value_width,
+    count_width) class — the caller grouped them (either the DecodePlan's
+    plan-time (vw, cw) groups or cascade_decompress_device's execute-time
+    grouping).  Returns the decompressed payload per page, input order."""
+    mans = [cascade_manifest(p) for _, p in raw_pages]
+    vw = mans[0]["value_width"]
+    cw = mans[0]["count_width"]
+    n_runs = max(max(m["n_runs"] for m in mans), 1)
+    n_words = max(m["n_words"] for m in mans)
+    n_out = -(-n_words // 1024) * 1024
+    from repro.core import bitpack
+    vwords = _stack_pad([m["value_words"] for m in mans],
+                        bitpack.packed_words(n_runs, vw), np.uint32)
+    cwords = _stack_pad([m["count_words"] for m in mans],
+                        bitpack.packed_words(n_runs, cw), np.uint32)
+    dec = cascade_decode_pages(jnp.asarray(vwords), jnp.asarray(cwords),
+                               value_width=vw, count_width=cw,
+                               n_runs=n_runs, n_out=n_out)
+    return [np.asarray(row[:m["n_words"]]).tobytes()[:pm.uncompressed_size]
+            for row, m, (pm, _) in zip(dec, mans, raw_pages)]
+
+
 def cascade_decompress_device(raw_pages: List[Tuple[PageMeta, bytes]]
                               ) -> List[Tuple[PageMeta, bytes]]:
     """Decompress CASCADE page payloads on-device; returns bytes again so the
     per-encoding decoders above can run unchanged (in a fused deployment the
-    words would stay resident in HBM)."""
+    words would stay resident in HBM).  Pages are grouped by their manifest
+    (vw, cw) pair — one launch per class; the DecodePlan path skips this
+    re-grouping by precomputing the classes at plan time."""
     mans = [cascade_manifest(p) for _, p in raw_pages]
-    out: dict = {}
     groups: dict = {}
     for i, m in enumerate(mans):
         groups.setdefault((m["value_width"], m["count_width"]), []).append(i)
-    for (vw, cw), idxs in groups.items():
-        n_runs = max(max(mans[i]["n_runs"] for i in idxs), 1)
-        n_words = max(mans[i]["n_words"] for i in idxs)
-        n_out = -(-n_words // 1024) * 1024
-        from repro.core import bitpack
-        vwords = _stack_pad([mans[i]["value_words"] for i in idxs],
-                            bitpack.packed_words(n_runs, vw), np.uint32)
-        cwords = _stack_pad([mans[i]["count_words"] for i in idxs],
-                            bitpack.packed_words(n_runs, cw), np.uint32)
-        dec = cascade_decode_pages(jnp.asarray(vwords), jnp.asarray(cwords),
-                                   value_width=vw, count_width=cw,
-                                   n_runs=n_runs, n_out=n_out)
-        for row, i in zip(dec, idxs):
-            words = np.asarray(row[:mans[i]["n_words"]])
-            out[i] = words.tobytes()
-    return [(pm, out[i][:pm.uncompressed_size])
-            for i, (pm, _) in enumerate(raw_pages)]
+    out: dict = {}
+    for idxs in groups.values():
+        datas = cascade_decompress_pages_grouped(
+            [raw_pages[i] for i in idxs])
+        for i, data in zip(idxs, datas):
+            out[i] = data
+    return [(pm, out[i]) for i, (pm, _) in enumerate(raw_pages)]
 
 
 # ---------------------------------------------------------------------------

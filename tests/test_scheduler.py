@@ -1,0 +1,458 @@
+"""ScanService (core/scheduler.py): fairness, cancellation, error
+isolation, adaptive-resize convergence on synthetic timings, cooperative
+scan sharing, and the per-chunk-dispatch bit-identity regression."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (CompressionSpec, EncodingPolicy, FileConfig,
+                        StringColumn, Table, write_table)
+from repro.core.overlap import run_blocking, run_overlapped
+from repro.core.query import Q6_COLUMNS, q6, q6_reference
+from repro.core.scan import Scanner, open_scanner
+from repro.core.scheduler import (ScanCancelled, ScanService, scan_service,
+                                  shutdown_scan_service)
+from repro.data import tpch
+
+
+class StubScanner:
+    """Synthetic-timing scanner: sleeps stand in for fetch/decode work
+    (sleeps release the GIL, so pool parallelism is real)."""
+
+    def __init__(self, n_rgs: int, fetch_s: float = 0.0005,
+                 decode_s: float = 0.005, fail_at=None):
+        self.n_rgs = n_rgs
+        self.fetch_s = fetch_s
+        self.decode_s = decode_s
+        self.fail_at = fail_at
+        self.decoded = []
+
+    def plan(self, predicate_stats=None, row_groups=None):
+        return list(range(self.n_rgs))
+
+    def fetch_rg(self, i):
+        time.sleep(self.fetch_s)
+        return {"col": bytes(4)}, self.fetch_s
+
+    def decode_rg(self, i, raws):
+        if self.fail_at is not None and i >= self.fail_at:
+            raise RuntimeError(f"decode failed at rg {i}")
+        time.sleep(self.decode_s)
+        self.decoded.append(i)
+        return {"col": i}, self.decode_s
+
+
+@pytest.fixture
+def svc():
+    service = ScanService(workers=1, adaptive=False)
+    yield service
+    service.shutdown()
+
+
+# -- basic delivery ----------------------------------------------------------
+
+def test_in_order_delivery(svc):
+    handle = svc.submit(StubScanner(6), depth=3)
+    seen = [item[0] for item in handle]
+    assert seen == list(range(6))
+    assert svc.active_scans == 0       # scan unregistered on exhaustion
+
+
+def test_depth_backpressure_bounds_fetch_ahead(svc):
+    sc = StubScanner(8, decode_s=0.01)
+    handle = svc.submit(sc, depth=2)
+    first = next(handle)
+    time.sleep(0.08)                   # plenty of time to overrun depth
+    # ≤ depth RGs may be decoded beyond the one delivered-but-unacked
+    assert len(sc.decoded) <= 1 + 2
+    handle.cancel()
+
+
+# -- fairness ----------------------------------------------------------------
+
+def test_round_robin_fairness_across_scans(svc):
+    """A long scan must not monopolize the pool: a short scan submitted
+    alongside finishes well before the long one ends."""
+    long_sc = StubScanner(20, decode_s=0.01)
+    short_sc = StubScanner(3, decode_s=0.01)
+    h_long = svc.submit(long_sc, depth=4)
+    h_short = svc.submit(short_sc, depth=4)
+    t0 = time.perf_counter()
+    done = {}
+
+    def drain(name, h):
+        for _ in h:
+            pass
+        done[name] = time.perf_counter() - t0
+
+    t1 = threading.Thread(target=drain, args=("long", h_long))
+    t2 = threading.Thread(target=drain, args=("short", h_short))
+    t1.start(), t2.start()
+    t1.join(), t2.join()
+    # fair share: the short scan (3 RGs) finishes in well under half the
+    # long scan's wall, not after it
+    assert done["short"] < done["long"] * 0.7
+
+
+# -- error isolation / cancellation -----------------------------------------
+
+def test_error_isolated_to_failing_scan(svc):
+    bad = StubScanner(6, fail_at=2)
+    good = StubScanner(6)
+    h_bad = svc.submit(bad, depth=2)
+    h_good = svc.submit(good, depth=2)
+    result = {}
+
+    def drain_bad():
+        try:
+            for _ in h_bad:
+                pass
+        except RuntimeError as e:
+            result["err"] = e
+
+    t = threading.Thread(target=drain_bad)
+    t.start()
+    seen = [item[0] for item in h_good]
+    t.join()
+    assert seen == list(range(6))       # untouched by the sibling failure
+    assert "decode failed" in str(result["err"])
+    assert svc.active_scans == 0
+    # the pool survived: a fresh scan still completes
+    assert [i for i, *_ in svc.submit(StubScanner(2))] == [0, 1]
+
+
+def test_fetch_error_propagates_to_owner_only(svc):
+    class BadFetch(StubScanner):
+        def fetch_rg(self, i):
+            raise OSError("fetch exploded")
+
+    h_bad = svc.submit(BadFetch(3))
+    h_good = svc.submit(StubScanner(3))
+    with pytest.raises(OSError, match="fetch exploded"):
+        for _ in h_bad:
+            pass
+    assert [i for i, *_ in h_good] == [0, 1, 2]
+
+
+def test_shutdown_unblocks_active_consumer():
+    """shutdown() must cancel in-flight scans — a consumer blocked on its
+    next row group would otherwise spin on done_cv forever."""
+    svc = ScanService(workers=1, adaptive=False)
+    handle = svc.submit(StubScanner(50, decode_s=0.02), depth=2)
+    next(handle)
+    got = {}
+
+    def drain():
+        try:
+            for _ in handle:
+                pass
+        except ScanCancelled as e:
+            got["exc"] = e
+
+    t = threading.Thread(target=drain)
+    t.start()
+    time.sleep(0.05)
+    svc.shutdown()
+    t.join(timeout=5.0)
+    assert not t.is_alive()
+    assert isinstance(got.get("exc"), ScanCancelled)
+
+
+def test_abandoned_handle_releases_scan(svc):
+    """Dropping a handle mid-scan (no cancel, no exhaustion) must not leak
+    the scan registration in the shared service."""
+    import gc
+
+    handle = svc.submit(StubScanner(20, decode_s=0.01), depth=2)
+    next(handle)
+    del handle
+    gc.collect()
+    deadline = time.time() + 2.0
+    while svc.active_scans and time.time() < deadline:
+        time.sleep(0.01)
+    assert svc.active_scans == 0
+    # context-manager form closes on scope exit too
+    with svc.submit(StubScanner(20, decode_s=0.01), depth=2) as h:
+        next(h)
+    assert svc.active_scans == 0
+
+
+def test_cancellation_releases_scan(svc):
+    handle = svc.submit(StubScanner(50, decode_s=0.01), depth=2)
+    next(handle)
+    handle.cancel()
+    with pytest.raises((ScanCancelled, StopIteration)):
+        while True:
+            next(handle)
+    assert svc.active_scans == 0
+    # cancel is idempotent
+    handle.cancel()
+
+
+# -- adaptive sizing ---------------------------------------------------------
+
+def test_adaptive_grows_on_decode_bound_stream():
+    svc = ScanService(adaptive=True, max_workers=4, resize_every=4)
+    try:
+        handle = svc.submit(StubScanner(24, fetch_s=0.0005,
+                                        decode_s=0.02), depth=8)
+        for _ in handle:
+            time.sleep(0.002)          # cheap consume → decode-bound
+        assert svc.resize_events, "no resize window completed"
+        # decode ≫ max(fetch, consume) → pool grew toward max_workers
+        assert svc.resize_events[-1] >= 3
+    finally:
+        svc.shutdown()
+
+
+def test_adaptive_shrinks_on_consume_bound_stream():
+    svc = ScanService(workers=4, adaptive=True, max_workers=4,
+                      resize_every=4)
+    try:
+        handle = svc.submit(StubScanner(16, fetch_s=0.0005,
+                                        decode_s=0.001), depth=4)
+        for _ in handle:
+            time.sleep(0.01)           # consume dominates
+        assert svc.resize_events[-1] == 1
+    finally:
+        svc.shutdown()
+
+
+def test_workers_hint_floors_pool(svc):
+    handle = svc.submit(StubScanner(4), workers_hint=3)
+    assert handle.workers == 3
+    assert svc.pool_size >= 3
+    for _ in handle:
+        pass
+    # floor released with the scan; adaptive=False keeps base width
+    assert svc.active_scans == 0
+
+
+# -- cooperative scans -------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_tpch(tmp_path_factory):
+    d = tmp_path_factory.mktemp("tpch_sched")
+    from repro.core.config import ACCELERATOR_OPTIMIZED
+    metas = tpch.write_tpch(str(d), sf=0.004,
+                            config=ACCELERATOR_OPTIMIZED.replace(
+                                rows_per_rg=4_000,
+                                target_pages_per_chunk=8),
+                            seed=77)
+    line, orders = tpch.generate_tables(sf=0.004, seed=77)
+    return metas, line, orders
+
+
+def test_cooperative_scans_share_inflight_jobs(small_tpch):
+    """Concurrent identical scans subscribe to each other's in-flight
+    jobs: total fetched requests drop, results stay correct."""
+    metas, line, _ = small_tpch
+    ref = q6_reference({c: np.asarray(line[c]) for c in Q6_COLUMNS})
+    svc = ScanService(workers=1, adaptive=False)
+    try:
+        results = {}
+
+        def one(k):
+            sc = open_scanner(metas["lineitem_path"],
+                              columns=list(Q6_COLUMNS),
+                              decode_backend="host")
+            # slow the consume a touch so scans stay overlapped and the
+            # subscription window is reliably open
+            got, rep = q6(sc, prune=False, service=svc, depth=1)
+            results[k] = (got, rep)
+
+        threads = [threading.Thread(target=one, args=(k,))
+                   for k in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for got, rep in results.values():
+            assert abs(got - ref) / max(1.0, abs(ref)) < 1e-5
+        assert svc.shared_rgs > 0, "no cooperative sharing happened"
+        fetched = sum(rep.metrics.n_io_requests
+                      for _, rep in results.values())
+        solo = max(rep.metrics.n_row_groups
+                   for _, rep in results.values())
+        # 4 scans fetched fewer requests than 4 solo scans would have
+        assert fetched < 4 * max(1, solo) * len(Q6_COLUMNS)
+    finally:
+        svc.shutdown()
+
+
+def test_sharing_requires_identical_shape(small_tpch):
+    """Different column selections must NOT share jobs."""
+    metas, line, _ = small_tpch
+    svc = ScanService(workers=1, adaptive=False)
+    try:
+        out = {}
+
+        def one(name, cols, expect):
+            sc = open_scanner(metas["lineitem_path"], columns=cols,
+                              decode_backend="host")
+            total = 0.0
+            for _, dec, *_ in svc.submit(sc, depth=1):
+                total += float(np.asarray(
+                    dec[expect].array, dtype=np.float64).sum())
+            out[name] = total
+
+        t1 = threading.Thread(target=one, args=(
+            "qty", ["l_quantity"], "l_quantity"))
+        t2 = threading.Thread(target=one, args=(
+            "disc", ["l_discount"], "l_discount"))
+        t1.start(), t2.start()
+        t1.join(), t2.join()
+        assert out["qty"] == pytest.approx(
+            np.asarray(line["l_quantity"], dtype=np.float64).sum())
+        assert out["disc"] == pytest.approx(
+            np.asarray(line["l_discount"], dtype=np.float64).sum())
+    finally:
+        svc.shutdown()
+
+
+# -- per-chunk dispatch bit-identity (regression) ----------------------------
+
+def _mixed_table(n=5_000, seed=5):
+    rng = np.random.default_rng(seed)
+    return Table({
+        "sorted32": np.cumsum(rng.integers(0, 5, n)).astype(np.int32),
+        "lowcard": rng.integers(0, 11, n).astype(np.int32),
+        "f32dict": rng.integers(0, 9, n).astype(np.float32) / 8.0,
+        "f32noise": rng.normal(size=n).astype(np.float32),
+        "flags": rng.random(n) < 0.2,
+        "runs": np.repeat(np.arange(-(-n // 500), dtype=np.int32), 500)[:n],
+        "strs": StringColumn.from_pylist([f"s{i % 23}" for i in range(n)]),
+    })
+
+
+@pytest.mark.parametrize("backend", ["host", "pallas"])
+@pytest.mark.parametrize("codec", ["gzip", "cascade"])
+def test_per_chunk_dispatch_bit_identical(tmp_path, backend, codec):
+    """The scheduled per-chunk decode (phase-1/phase-2 items through the
+    shared pool) must equal the monolithic per-RG decode AND the
+    per-chunk reference decoder, bit for bit."""
+    tbl = _mixed_table()
+    path = str(tmp_path / f"m_{backend}_{codec}.tab")
+    write_table(tbl, path, FileConfig(
+        rows_per_rg=2_000, target_pages_per_chunk=6,
+        encodings=EncodingPolicy.FLEX,
+        compression=CompressionSpec(codec=codec, min_gain=0.0)))
+    svc = ScanService(workers=2, adaptive=False)
+    try:
+        sched_cols = {}
+
+        def consume(acc, i, cols):
+            sched_cols[i] = cols
+            return acc
+
+        run_overlapped(Scanner(path, decode_backend=backend), consume,
+                       decode_workers=2, service=svc)
+        ref = Scanner(path, decode_backend=backend, use_plan=False)
+        mono = Scanner(path, decode_backend=backend)
+        for i in ref.plan():
+            raws, _ = ref.fetch_rg(i)
+            cols_r, _ = ref.decode_rg(i, raws)
+            cols_m, _ = mono.decode_rg(i, raws)
+            for name in tbl.columns:
+                for other in (cols_m[name], cols_r[name]):
+                    a, b = sched_cols[i][name], other
+                    if isinstance(a.array, StringColumn):
+                        np.testing.assert_array_equal(a.array.offsets,
+                                                      b.array.offsets)
+                        np.testing.assert_array_equal(a.array.payload,
+                                                      b.array.payload)
+                    else:
+                        ra, rb = np.asarray(a.array), np.asarray(b.array)
+                        assert ra.dtype == rb.dtype, (i, name)
+                        np.testing.assert_array_equal(
+                            ra, rb, err_msg=f"rg{i}:{name}")
+    finally:
+        svc.shutdown()
+
+
+def test_per_chunk_item_times_reach_report(small_tpch):
+    """decode_chunks_per_rg is populated by the service path and feeds the
+    per-chunk modeled schedule."""
+    metas, _, _ = small_tpch
+    sc = open_scanner(metas["lineitem_path"], columns=list(Q6_COLUMNS),
+                      decode_backend="host")
+    svc = ScanService(workers=2, adaptive=False)
+    try:
+        _, rep = q6(sc, prune=False, service=svc, decode_workers=2)
+        chunks = rep.metrics.decode_chunks_per_rg
+        assert len(chunks) == rep.metrics.n_row_groups
+        assert all(len(c) >= 1 for c in chunks)
+        # item times sum to ~the per-RG decode accounting
+        for parts, d in zip(chunks, rep.metrics.decode_per_rg):
+            assert sum(parts) == pytest.approx(d, rel=1e-6)
+        # the phase-2 barrier index is recorded for every RG and lands
+        # inside the item list (after open + phase 1 + transition)
+        splits = rep.metrics.decode_p2_start_per_rg
+        assert len(splits) == len(chunks)
+        for parts, s in zip(chunks, splits):
+            assert 2 <= s <= len(parts) - 1
+        assert rep.modeled_wall > 0.0
+    finally:
+        svc.shutdown()
+
+
+def test_modeled_wall_chunk_schedule_tighter_than_rg():
+    """Per-chunk schedule: 2 servers split an RG's two 1s chunks →
+    decode_done = 1s, vs 2s when the RG is indivisible."""
+    from repro.core.overlap import RunReport
+    from repro.core.scan import ScanMetrics
+
+    def report(chunked):
+        m = ScanMetrics()
+        m.io_per_rg = [0.0, 0.0]
+        m.decode_per_rg = [2.0, 2.0]
+        if chunked:
+            # [open, transition, chunk, chunk, finalize] with the phase-2
+            # barrier at index 2 — open/transition/finalize model the
+            # executor's serialized DAG edges and stay serial
+            m.decode_chunks_per_rg = [[0.0, 0.0, 1.0, 1.0, 0.0],
+                                      [0.0, 0.0, 1.0, 1.0, 0.0]]
+            m.decode_p2_start_per_rg = [2, 2]
+        return RunReport("overlapped", 0.0, m, [0.5, 0.5],
+                         decode_workers=2, depth=8)
+
+    # indivisible RGs: two servers pipeline whole RGs
+    #   rg0 decode 0→2, consume 2→2.5; rg1 decode 0→2, consume 2.5→3
+    assert report(False).modeled_wall == pytest.approx(3.0)
+    # chunked: rg0's two chunks decode in parallel 0→1, consume 1→1.5;
+    #   rg1 decodes 1→2, consume 2→2.5
+    assert report(True).modeled_wall == pytest.approx(2.5)
+    # phase-1 work gates phase 2: [open, inflate=10, transition,
+    # decode=1, decode=1, fin] must model ≥ 10 + 1 even with spare
+    # servers (the barrier), not min(10, 1+1)
+    m = ScanMetrics()
+    m.io_per_rg = [0.0]
+    m.decode_per_rg = [12.0]
+    m.decode_chunks_per_rg = [[0.0, 10.0, 0.0, 1.0, 1.0, 0.0]]
+    m.decode_p2_start_per_rg = [3]
+    barrier = RunReport("overlapped", 0.0, m, [0.0],
+                        decode_workers=4, depth=8)
+    assert barrier.modeled_wall == pytest.approx(11.0)
+    # no recorded barrier → fully serial; never beat the executor's DAG
+    m = ScanMetrics()
+    m.io_per_rg = [0.0]
+    m.decode_per_rg = [2.0]
+    m.decode_chunks_per_rg = [[1.0, 1.0]]
+    serial = RunReport("overlapped", 0.0, m, [0.0],
+                       decode_workers=4, depth=8)
+    assert serial.modeled_wall == pytest.approx(2.0)
+
+
+def test_global_singleton_lifecycle():
+    svc1 = scan_service()
+    assert scan_service() is svc1
+    handle = svc1.submit(StubScanner(2))
+    assert [i for i, *_ in handle] == [0, 1]
+    shutdown_scan_service()
+    svc2 = scan_service()
+    assert svc2 is not svc1
+    assert [i for i, *_ in svc2.submit(StubScanner(1))] == [0]
+    shutdown_scan_service()

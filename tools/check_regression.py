@@ -26,7 +26,7 @@ Usage:
         --baseline results/benchmarks/baselines \
         --current results/benchmarks \
         --report regression-report.md \
-        fig5_smoke.csv scan_plan_smoke.csv
+        fig5_smoke.csv scan_plan_smoke.csv concurrent_smoke.csv
 
 Demo an injected regression (doubles one wall time, bumps one counter):
     python tools/check_regression.py --selftest
@@ -208,7 +208,8 @@ def selftest() -> int:
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("files", nargs="*",
-                    default=["fig5_smoke.csv", "scan_plan_smoke.csv"])
+                    default=["fig5_smoke.csv", "scan_plan_smoke.csv",
+                             "concurrent_smoke.csv"])
     ap.add_argument("--baseline", default="results/benchmarks/baselines")
     ap.add_argument("--current", default="results/benchmarks")
     ap.add_argument("--current2", default=None,
@@ -230,7 +231,8 @@ def main() -> int:
     if args.selftest:
         return selftest()
 
-    files = args.files or ["fig5_smoke.csv", "scan_plan_smoke.csv"]
+    files = args.files or ["fig5_smoke.csv", "scan_plan_smoke.csv",
+                           "concurrent_smoke.csv"]
     all_regressions: List[str] = []
     file_tables: Dict[str, List[List[str]]] = {}
     for fname in files:
