@@ -34,7 +34,6 @@ from __future__ import annotations
 import os
 import threading
 import time
-from typing import Dict, List, Tuple
 
 import numpy as np
 
@@ -61,7 +60,7 @@ def _q12_scanners(lpath: str, opath: str):
 
 
 def _run_n(make_job, n: int, service: ScanService, concurrent: bool
-           ) -> Tuple[float, List[float], Dict[str, int]]:
+           ) -> tuple[float, list[float], dict[str, int]]:
     """Run n scan jobs; returns (aggregate wall, per-scan walls, counters).
 
     ``make_job(k, service)`` returns a zero-arg callable executing one full

@@ -1,0 +1,173 @@
+"""Dataset-layer throughput: partitioned multi-file Q6 through the
+pruning planner + sharded ScanService executor (repro.dataset).
+
+Three comparisons, each over range-partitioned (l_shipdate) lineitem
+datasets of files ∈ {1, 4, 16}:
+
+  seq        the status-quo client: a per-file loop running q6 over
+             every fragment back to back (row-group zone maps on, no
+             file-level pruning, no cross-file overlap)
+  sharded    the dataset executor: manifest pruning (partition ranges +
+             file zone maps under the FY1994 predicate), surviving
+             fragments scanned concurrently through the shared
+             ScanService with a bounded window
+  unpruned   the sharded executor with pruning disabled — isolates the
+             pruning contribution, and every round asserts its result is
+             bit-identical to the pruned arm (plan-order reduction)
+
+plus, at 16 files, **compacted vs raw**: the same rows ingested as
+CPU-default fragments (1 page/chunk, blind gzip) scanned as-is vs after
+``compact_dataset`` rewrote them to the tuned config behind the atomic
+manifest swap.
+
+Counters (gated by tools/check_regression.py): ``launches`` and
+``io_requests`` are deterministic — file pruning must keep lowering
+requests, and concurrency must never raise them.  Storage is the
+calibrated sim backend, decode the host backend (fig5 shape).
+
+Standalone:  python -m benchmarks.bench_dataset --smoke
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+from benchmarks.common import emit, emit_cpu_reference, ensure_tpch
+from repro.core.config import ACCELERATOR_OPTIMIZED, CPU_DEFAULT
+from repro.core.query import Q6_COLUMNS, q6
+from repro.core.reader import TabFileReader
+from repro.core.scheduler import ScanService
+from repro.dataset import (Dataset, compact_dataset, plan_dataset_scan,
+                           write_dataset)
+
+SIM_OPTS = {"backend": "sim", "decode_backend": "host"}
+TUNED = ACCELERATOR_OPTIMIZED.replace(rows_per_rg=4_000,
+                                      target_pages_per_chunk=4)
+FILES = (1, 4, 16)
+WINDOW = 4
+
+
+def _dataset(line_table, root: str, n_files: int, config) -> Dataset:
+    if os.path.exists(os.path.join(root, "manifest.json")):
+        return Dataset.load(root)
+    return write_dataset(line_table, root, config,
+                         partition_by="l_shipdate", how="range",
+                         fragments=n_files)
+
+
+def _seq_loop(ds: Dataset, service: ScanService) -> tuple[float, dict]:
+    """Per-file q6 loop over every fragment (no manifest pruning)."""
+    total = None
+    io_requests = 0
+    t0 = time.perf_counter()
+    for frag in ds.fragments:
+        sc = ds.open_fragment(frag, columns=list(Q6_COLUMNS), **SIM_OPTS)
+        acc, rep = q6(sc, prune=True, service=service)
+        io_requests += rep.metrics.n_io_requests
+        total = acc if total is None else total + acc
+    wall = time.perf_counter() - t0
+    return wall, {"result": total, "io_requests": io_requests,
+                  "launches": 0, "files": len(ds.fragments),
+                  "scanned": len(ds.fragments), "pruned": 0}
+
+
+def _sharded(ds: Dataset, service: ScanService, prune: bool
+             ) -> tuple[float, dict]:
+    t0 = time.perf_counter()
+    acc, rep = q6(ds, prune=prune, service=service, window=WINDOW,
+                  open_opts=SIM_OPTS)
+    wall = time.perf_counter() - t0
+    return wall, {"result": acc, "io_requests": rep.n_io_requests,
+                  "launches": rep.n_kernel_launches,
+                  "files": rep.files_total, "scanned": rep.files_scanned,
+                  "pruned": rep.files_pruned}
+
+
+def _emit_arm(name: str, wall: float, info: dict, seq_wall: float) -> None:
+    emit(name, wall * 1e6,
+         f"launches={info['launches']};io_requests={info['io_requests']};"
+         f"files={info['files']};scanned={info['scanned']};"
+         f"pruned={info['pruned']};"
+         f"speedup_vs_seq={seq_wall / max(wall, 1e-12):.2f}x;measured")
+
+
+def run() -> None:
+    emit_cpu_reference()
+    base = ensure_tpch(CPU_DEFAULT, "fig5_base")
+    line = TabFileReader(base["lineitem_path"]).read_table()
+    data_root = os.path.dirname(base["lineitem_path"])
+    rounds = max(1, int(os.environ.get("BENCH_ROUNDS", "3")))
+    service = ScanService()
+
+    datasets = {f: _dataset(line, os.path.join(data_root, f"ds_{f}"),
+                            f, TUNED) for f in FILES}
+    raw_root = os.path.join(data_root, "ds_raw_16")
+    raw_is_new = not os.path.exists(os.path.join(raw_root,
+                                                 "manifest.json"))
+    raw = _dataset(line, raw_root, 16, CPU_DEFAULT)
+    compact_root = os.path.join(data_root, "ds_compacted_16")
+    if not os.path.exists(os.path.join(compact_root, "manifest.json")):
+        # compact a private copy so the raw arm keeps its raw files
+        compacted = _dataset(line, compact_root, 16, CPU_DEFAULT)
+        compact_dataset(compacted, target_config=TUNED)
+    compacted = Dataset.load(compact_root)
+    if raw_is_new:
+        # sanity: the pruning planner sees the paper's FY1994 shape
+        from repro.core.query import q6_rg_stats_predicate
+        p = plan_dataset_scan(datasets[16],
+                              predicate_stats=q6_rg_stats_predicate)
+        assert p.files_pruned >= 8, p.summary()
+
+    # warm plan/dict caches and the jitted consumers outside timing
+    for ds in (*datasets.values(), raw, compacted):
+        q6(ds, prune=False, service=service, window=WINDOW,
+           open_opts=SIM_OPTS)
+
+    for f in FILES:
+        ds = datasets[f]
+        best: dict = {}
+        for _ in range(rounds):
+            for arm, fn in (("seq", lambda d=ds: _seq_loop(d, service)),
+                            ("sharded", lambda d=ds: _sharded(
+                                d, service, prune=True)),
+                            ("unpruned", lambda d=ds: _sharded(
+                                d, service, prune=False))):
+                wall, info = fn()
+                if arm not in best or wall < best[arm][0]:
+                    best[arm] = (wall, info)
+        # pruning correctness: bit-identical to the full scan, every time
+        assert best["sharded"][1]["result"] == best["unpruned"][1]["result"]
+        seq_wall = best["seq"][0]
+        for arm in ("seq", "sharded", "unpruned"):
+            _emit_arm(f"ds_q6_f{f}_{arm}", best[arm][0], best[arm][1],
+                      seq_wall)
+
+    best = {}
+    for _ in range(rounds):
+        for arm, d in (("raw", raw), ("compacted", compacted)):
+            wall, info = _sharded(d, service, prune=True)
+            if arm not in best or wall < best[arm][0]:
+                best[arm] = (wall, info)
+    raw_wall = best["raw"][0]
+    for arm in ("raw", "compacted"):
+        _emit_arm(f"ds_q6_16_{arm}", best[arm][0], best[arm][1], raw_wall)
+    service.shutdown()
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from benchmarks.common import flush_csv
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized subset (tiny SF)")
+    args = ap.parse_args()
+    if args.smoke:
+        os.environ.setdefault("BENCH_SF", "0.01")
+        os.environ.setdefault("BENCH_ROUNDS", "5")
+        os.environ["BENCH_SMOKE"] = "1"
+    print("name,us_per_call,derived")
+    run()
+    flush_csv(f"dataset{'_smoke' if args.smoke else ''}.csv")

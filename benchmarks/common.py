@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import os
 import time
-from typing import Callable, Dict, List
+from collections.abc import Callable
 
 import numpy as np
 
@@ -17,7 +17,7 @@ BENCH_SF = float(os.environ.get("BENCH_SF", "0.05"))
 DATA_DIR = os.environ.get("BENCH_DATA", "/tmp/repro_bench")
 RESULTS_DIR = os.environ.get("BENCH_RESULTS", "results/benchmarks")
 
-_ROWS: List[str] = []
+_ROWS: list[str] = []
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
@@ -35,7 +35,7 @@ def flush_csv(filename: str) -> None:
     _ROWS.clear()
 
 
-def ensure_tpch(config, tag: str, sf: float = None) -> Dict:
+def ensure_tpch(config, tag: str, sf: float = None) -> dict:
     """Write (or reuse) a TPC-H pair under the given file config."""
     from repro.data import tpch
     sf = BENCH_SF if sf is None else sf

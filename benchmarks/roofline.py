@@ -17,7 +17,6 @@ from __future__ import annotations
 import glob
 import json
 import os
-from typing import Dict, List, Optional
 
 from repro.configs import SHAPES
 from repro.launch.mesh import HBM_BW, ICI_LINK_BW, PEAK_FLOPS_BF16
@@ -25,7 +24,7 @@ from repro.launch.mesh import HBM_BW, ICI_LINK_BW, PEAK_FLOPS_BF16
 DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "results/dryrun")
 
 
-def model_flops(rec: Dict) -> float:
+def model_flops(rec: dict) -> float:
     sh = SHAPES[rec["shape"]]
     n_act = rec["model_params_active"]
     if sh.kind == "train":
@@ -37,7 +36,7 @@ def model_flops(rec: Dict) -> float:
     return 2.0 * n_act * sh.global_batch          # decode: 1 token/seq
 
 
-def analyze_cell(rec: Dict) -> Optional[Dict]:
+def analyze_cell(rec: dict) -> dict | None:
     if rec.get("status") != "ok" or "hlo" not in rec:
         return None
     n_dev = rec["n_devices"]
@@ -62,7 +61,7 @@ def analyze_cell(rec: Dict) -> Optional[Dict]:
     }
 
 
-def suggestion(row: Dict, rec: Dict) -> str:
+def suggestion(row: dict, rec: dict) -> str:
     dom = row["dominant"]
     kind = SHAPES[row["shape"]].kind
     if dom == "compute" and row["useful_ratio"] < 0.5 and kind == "train":
@@ -86,7 +85,7 @@ def suggestion(row: Dict, rec: Dict) -> str:
     return "balanced: push MXU utilization via larger microbatches"
 
 
-def load_cells(mesh: str = "single_pod") -> List[Dict]:
+def load_cells(mesh: str = "single_pod") -> list[dict]:
     out = []
     for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, mesh, "*.json"))):
         rec = json.load(open(f))

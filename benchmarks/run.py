@@ -33,6 +33,7 @@ def main() -> None:
         ("bench_queries", "fig5"),          # Fig 5: Q6/Q12 query level
         ("bench_scan_plan", "scan_plan"),   # DecodePlan launch/IO economy
         ("bench_concurrent", "concurrent"),  # ScanService N-scan sharing
+        ("bench_dataset", "dataset"),       # dataset pruning + sharding
         ("bench_rewriter", "sec5"),         # §5: rewriter overhead
         ("bench_kernels", "kernels"),       # §3: per-encoding decode bw
         ("roofline", "roofline"),           # §Roofline from dry-run JSONs
@@ -40,7 +41,7 @@ def main() -> None:
     if args.smoke:
         suites = [s for s in suites
                   if s[0] in ("bench_queries", "bench_scan_plan",
-                              "bench_concurrent")]
+                              "bench_concurrent", "bench_dataset")]
     if args.only:
         keep = set(args.only.split(","))
         suites = [s for s in suites if s[0] in keep]

@@ -4,7 +4,6 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -65,7 +64,7 @@ def list_archs():
 # ---------------------------------------------------------------------------
 
 def input_specs(arch: ArchSpec, shape_name: str,
-                batch_override: Optional[int] = None) -> Dict:
+                batch_override: int | None = None) -> dict:
     """Returns the abstract inputs for the given cell.
 
     train:   {"tokens","labels"} (+frontend extras)
@@ -109,7 +108,7 @@ def input_specs(arch: ArchSpec, shape_name: str,
 
 
 def concrete_inputs(arch: ArchSpec, shape_name: str, batch: int,
-                    seq_len: Optional[int] = None, seed: int = 0) -> Dict:
+                    seq_len: int | None = None, seed: int = 0) -> dict:
     """Small concrete batches for smoke tests (reduced configs only)."""
     cfg = arch.config
     sh = SHAPES[shape_name]

@@ -3,7 +3,6 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import List
 
 
 @dataclasses.dataclass(frozen=True)
@@ -22,7 +21,7 @@ SHAPES = {
 }
 
 
-def applicable_shapes(arch) -> List[str]:
+def applicable_shapes(arch) -> list[str]:
     """Skip rules: encoder-only archs have no decode step; long_500k needs
     sub-quadratic attention (SSM / window-only / hybrid-with-window)."""
     names = []

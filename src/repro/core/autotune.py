@@ -18,7 +18,6 @@ recommends a FileConfig:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
 
 import numpy as np
 
@@ -31,14 +30,14 @@ from repro.core.table import Table
 @dataclasses.dataclass
 class TuneReport:
     config: FileConfig
-    per_column: Dict[str, dict]
+    per_column: dict[str, dict]
     sampled_rows: int
     est_compressed_bytes_per_row: float
     notes: list
 
 
 def _encoded_size_per_row(table: Table, policy: EncodingPolicy,
-                          config: FileConfig) -> Dict[str, float]:
+                          config: FileConfig) -> dict[str, float]:
     out = {}
     n = table.num_rows
     cfg = config.replace(encodings=policy)

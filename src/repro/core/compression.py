@@ -24,7 +24,6 @@ from __future__ import annotations
 
 import enum
 import zlib
-from typing import Dict, Tuple
 
 import numpy as np
 
@@ -138,7 +137,7 @@ def cascade_manifest(data: bytes) -> dict:
 # chunk-level decompress memo
 # ---------------------------------------------------------------------------
 
-def _entry_bytes(payloads: Dict) -> int:
+def _entry_bytes(payloads: dict) -> int:
     return sum(len(p) for p in payloads.values()
                if isinstance(p, (bytes, bytearray, memoryview)))
 
@@ -195,7 +194,7 @@ def decompress(data: bytes, codec: Codec, uncompressed_size: int) -> bytes:
 
 
 def maybe_compress_chunk(page_payloads, codec: str, min_gain: float,
-                         level: int = 1) -> Tuple[Codec, list, int, int]:
+                         level: int = 1) -> tuple[Codec, list, int, int]:
     """Insight 4: compress the chunk only if it actually pays.
 
     Returns (codec_used, payloads, uncompressed_total, stored_total).

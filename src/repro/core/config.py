@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Optional, Sequence
+from collections.abc import Sequence
 
 
 class EncodingPolicy(str, enum.Enum):
@@ -78,6 +78,18 @@ class FileConfig:
 
     def replace(self, **kw) -> "FileConfig":
         return dataclasses.replace(self, **kw)
+
+    def fingerprint(self) -> dict:
+        """The knob values a written file records in its footer
+        (``FileMeta.writer_config``) and a dataset manifest records per
+        fragment — the identity compaction compares against its target."""
+        return {
+            "rows_per_rg": self.rows_per_rg,
+            "target_pages_per_chunk": self.target_pages_per_chunk,
+            "encodings": self.encodings.value,
+            "codec": self.compression.codec,
+            "min_gain": self.compression.min_gain,
+        }
 
 
 # The two named configurations from the paper (Fig. 1): the CPU-era default

@@ -40,7 +40,7 @@ import os
 import threading
 import time
 from collections import OrderedDict
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from collections.abc import Callable, Sequence
 
 import numpy as np
 
@@ -90,14 +90,14 @@ class ArenaPool:
 
     def __init__(self, max_bytes: int = 32 * 1024 * 1024):
         self.max_bytes = max_bytes
-        self._free: Dict[int, List[np.ndarray]] = {}
+        self._free: dict[int, list[np.ndarray]] = {}
         self._lock = threading.Lock()
         self._pooled_bytes = 0
         self.allocs = 0
         self.reuses = 0
 
-    def take(self, shape: Tuple[int, ...], dtype
-             ) -> Tuple[np.ndarray, np.ndarray]:
+    def take(self, shape: tuple[int, ...], dtype
+             ) -> tuple[np.ndarray, np.ndarray]:
         """Returns ``(view, buffer)``; pass ``buffer`` back to ``give``."""
         dt = np.dtype(dtype)
         need = int(np.prod(shape, dtype=np.int64)) * dt.itemsize
@@ -140,7 +140,7 @@ class DecodeGroup:
     key: tuple                    # (encoding, codec, *class params)
     encoding: Encoding
     codec: Codec
-    slots: List[PageSlot]
+    slots: list[PageSlot]
 
     @property
     def n_pages(self) -> int:
@@ -154,22 +154,22 @@ class CascadeGroup:
     widths the writer stamps into ``PageMeta.extra`` (``cascade_vw/cw``);
     ``key=None`` collects pages of older files without the stamp, which
     fall back to execute-time grouping by manifest widths."""
-    key: Optional[Tuple[int, int]]
-    slots: List[PageSlot]
+    key: tuple[int, int] | None
+    slots: list[PageSlot]
 
 
 @dataclasses.dataclass
 class RowGroupPlan:
     rg_index: int
-    groups: List[DecodeGroup]
-    grouped_columns: List[str]    # decoded via the batched group path
-    fallback_columns: List[str]   # decoded via the per-chunk reference path
+    groups: list[DecodeGroup]
+    grouped_columns: list[str]    # decoded via the batched group path
+    fallback_columns: list[str]   # decoded via the per-chunk reference path
     # decompress sub-plan: grouped columns whose pages inflate on the host
     # through the chunk memo vs. raw-view columns vs. device-cascade pages
     # (the latter pre-grouped by (vw, cw) — see CascadeGroup)
-    memo_columns: List[str] = dataclasses.field(default_factory=list)
-    raw_columns: List[str] = dataclasses.field(default_factory=list)
-    cascade_groups: List[CascadeGroup] = dataclasses.field(
+    memo_columns: list[str] = dataclasses.field(default_factory=list)
+    raw_columns: list[str] = dataclasses.field(default_factory=list)
+    cascade_groups: list[CascadeGroup] = dataclasses.field(
         default_factory=list)
 
     @property
@@ -193,7 +193,7 @@ _DICT_DEVICE_DTYPE = {
 }
 
 
-def _pallas_page_keys(chunk: ChunkMeta, field: Field) -> Optional[List[tuple]]:
+def _pallas_page_keys(chunk: ChunkMeta, field: Field) -> list[tuple] | None:
     """Per-page group keys for the device path, or None → per-chunk fallback."""
     enc = Encoding(chunk.encoding)
     codec = int(chunk.codec)
@@ -236,7 +236,7 @@ def _pallas_page_keys(chunk: ChunkMeta, field: Field) -> Optional[List[tuple]]:
     return None
 
 
-def _host_page_keys(chunk: ChunkMeta, field: Field) -> Optional[List[tuple]]:
+def _host_page_keys(chunk: ChunkMeta, field: Field) -> list[tuple] | None:
     """Group keys for the batched-host path (no padding classes needed —
     numpy handles ragged pages; keys only separate incompatible layouts)."""
     enc = Encoding(chunk.encoding)
@@ -273,14 +273,14 @@ class ExecContext:
     rg_index: int
     plan: RowGroupPlan
     rg: object                       # RowGroupMeta
-    raws: Dict[str, bytes]
+    raws: dict[str, bytes]
     use_kernels: bool
-    per_col_parts: Dict[str, Dict]
-    payloads: Dict = dataclasses.field(default_factory=dict)
-    demoted: List[str] = dataclasses.field(default_factory=list)
-    out: Dict[str, "ops.DecodeResult"] = dataclasses.field(
+    per_col_parts: dict[str, dict]
+    payloads: dict = dataclasses.field(default_factory=dict)
+    demoted: list[str] = dataclasses.field(default_factory=list)
+    out: dict[str, "ops.DecodeResult"] = dataclasses.field(
         default_factory=dict)
-    leases: List[np.ndarray] = dataclasses.field(default_factory=list)
+    leases: list[np.ndarray] = dataclasses.field(default_factory=list)
 
 
 # ---------------------------------------------------------------------------
@@ -297,12 +297,12 @@ class DecodePlanner:
 
     def __init__(self, meta: FileMeta, columns: Sequence[str],
                  backend: str = "pallas",
-                 cache_token: Optional[tuple] = None):
+                 cache_token: tuple | None = None):
         assert backend in ("pallas", "host")
         self.meta = meta
         self.columns = list(columns)
         self.backend = backend
-        self._plans: Dict[int, RowGroupPlan] = {}
+        self._plans: dict[int, RowGroupPlan] = {}
         self.plans_built = 0
         self.plan_seconds = 0.0
         # identifies the file *contents* this planner decodes; keys the
@@ -344,7 +344,7 @@ class DecodePlanner:
                                         codec=Codec(key[1]), slots=[])
                         groups[key] = g
                     g.slots.append(PageSlot(name, pi, pm.n_values))
-            final: List[DecodeGroup] = []
+            final: list[DecodeGroup] = []
             for g in groups.values():
                 final.extend(self._split_oversize_dict_group(g, rg))
             plan = RowGroupPlan(rg_index, final, grouped, fallback)
@@ -358,7 +358,7 @@ class DecodePlanner:
         """Classify grouped columns for the decompress stage and group
         device-cascade pages by their footer-stamped (vw, cw) class, so
         execute never re-reads page headers to discover the grouping."""
-        cas: "OrderedDict[Optional[Tuple[int, int]], CascadeGroup]" = \
+        cas: "OrderedDict[tuple[int, int] | None, CascadeGroup]" = \
             OrderedDict()
         for name in plan.grouped_columns:
             chunk = rg.column(name)
@@ -381,7 +381,7 @@ class DecodePlanner:
         plan.cascade_groups = list(cas.values())
 
     def _split_oversize_dict_group(self, group: DecodeGroup, rg
-                                   ) -> List[DecodeGroup]:
+                                   ) -> list[DecodeGroup]:
         """Bound the per-page dictionary duplication of multi-column dict
         groups (see _DICT_ARENA_CAP_BYTES): oversize groups split per
         column, which the executor decodes with the shared-dict kernel."""
@@ -394,7 +394,7 @@ class DecodePlanner:
         d_max = max(rg.column(c).dict_page.n_values for c in cols)
         if len(group.slots) * d_max * 4 <= _DICT_ARENA_CAP_BYTES:
             return [group]
-        by_col: "OrderedDict[str, List[PageSlot]]" = OrderedDict()
+        by_col: "OrderedDict[str, list[PageSlot]]" = OrderedDict()
         for s in group.slots:
             by_col.setdefault(s.column, []).append(s)
         return [DecodeGroup(key=group.key + (name,), encoding=group.encoding,
@@ -422,8 +422,8 @@ class DecodePlanner:
     # the same atomic operations; the planner-level caches (arena pool,
     # dictionary cache, decompress memo) are themselves thread-safe.
 
-    def execute(self, rg_index: int, raws: Dict[str, bytes]
-                ) -> Dict[str, ops.DecodeResult]:
+    def execute(self, rg_index: int, raws: dict[str, bytes]
+                ) -> dict[str, ops.DecodeResult]:
         ctx = self.begin_execute(rg_index, raws)
         for task in self.decompress_tasks(ctx):
             task()
@@ -431,7 +431,7 @@ class DecodePlanner:
             task()
         return self.finish_execute(ctx)
 
-    def begin_execute(self, rg_index: int, raws: Dict[str, bytes]
+    def begin_execute(self, rg_index: int, raws: dict[str, bytes]
                       ) -> "ExecContext":
         plan = self.plan_rg(rg_index)
         return ExecContext(
@@ -440,14 +440,14 @@ class DecodePlanner:
             use_kernels=(self.backend == "pallas"),
             per_col_parts={name: {} for name in plan.grouped_columns})
 
-    def decompress_tasks(self, ctx: "ExecContext") -> List[Callable[[], None]]:
+    def decompress_tasks(self, ctx: "ExecContext") -> list[Callable[[], None]]:
         """Phase-1 work items: decompressed page payloads for every grouped
         column.  Host-decompressed chunks (gzip on either backend, cascade
         on the host backend) go through the chunk-level decompress memo —
         a scan that revisits the chunk reuses the inflated payloads instead
         of re-running one zlib call per page.  Device-cascade pages launch
         one kernel per plan-time (vw, cw) group."""
-        tasks: List[Callable[[], None]] = []
+        tasks: list[Callable[[], None]] = []
         for name in ctx.plan.memo_columns:
             tasks.append(functools.partial(self._inflate_column_task,
                                            ctx, name))
@@ -508,7 +508,7 @@ class DecodePlanner:
             for s, (_, data) in zip(group.slots, dec):
                 ctx.payloads[(s.column, s.page_index)] = data
 
-    def decode_tasks(self, ctx: "ExecContext") -> List[Callable[[], None]]:
+    def decode_tasks(self, ctx: "ExecContext") -> list[Callable[[], None]]:
         """Phase-2 work items (valid once every decompress task drained):
         one per DecodeGroup plus one per fallback/demoted column.  The
         wide-delta demotion scan runs here, serially, so every group task
@@ -524,7 +524,7 @@ class DecodePlanner:
                 _, newly = self._demote_wide_delta(ctx.rg, slots,
                                                    ctx.payloads)
                 ctx.demoted.extend(newly)
-        tasks: List[Callable[[], None]] = []
+        tasks: list[Callable[[], None]] = []
         for group in plan.groups:
             tasks.append(functools.partial(self._group_task, ctx, group))
         for name in list(plan.fallback_columns) + list(ctx.demoted):
@@ -548,7 +548,7 @@ class DecodePlanner:
             payloads=self._fallback_payloads(chunk, name, ctx.raws))
 
     def finish_execute(self, ctx: "ExecContext"
-                       ) -> Dict[str, ops.DecodeResult]:
+                       ) -> dict[str, ops.DecodeResult]:
         """Join barrier: scatter group outputs back into per-column results,
         flush the device, return pooled arenas."""
         for name in ctx.plan.grouped_columns:
@@ -570,7 +570,7 @@ class DecodePlanner:
 
     # -- stages ------------------------------------------------------------
 
-    def _memo_key(self, chunk, name: str) -> Optional[tuple]:
+    def _memo_key(self, chunk, name: str) -> tuple | None:
         """Memo key for host-decompressed chunks (gzip on either backend,
         cascade on the host backend); None → not memoizable."""
         codec = Codec(chunk.codec)
@@ -580,13 +580,13 @@ class DecodePlanner:
         return None
 
     @staticmethod
-    def _inflate_chunk_entry(chunk, raw) -> Dict[object, object]:
+    def _inflate_chunk_entry(chunk, raw) -> dict[object, object]:
         """Decompress every page of one chunk into the memo entry format:
         {page_index: payload, "dict": dictionary payload} — the shape both
         the grouped decompress stage and ops.decode_chunk consume."""
         codec = Codec(chunk.codec)
         off0, _ = chunk.byte_range
-        entry: Dict[object, object] = {}
+        entry: dict[object, object] = {}
         if chunk.dict_page is not None:
             dp = chunk.dict_page
             entry["dict"] = decompress(
@@ -599,7 +599,7 @@ class DecodePlanner:
         return entry
 
     def _fallback_payloads(self, chunk, name: str, raws
-                           ) -> Optional[Dict]:
+                           ) -> dict | None:
         """Pre-inflated page payloads for a fallback column, served from
         (and feeding) the chunk decompress memo — strings/float64 gzip
         chunks are exactly the host-decompress bottleneck the memo is
@@ -615,11 +615,11 @@ class DecodePlanner:
         return memo.put(memo_key,
                         self._inflate_chunk_entry(chunk, raws[name]))
 
-    def _demote_wide_delta(self, rg, slots: List[PageSlot], payloads
-                           ) -> Tuple[List[PageSlot], List[str]]:
+    def _demote_wide_delta(self, rg, slots: list[PageSlot], payloads
+                           ) -> tuple[list[PageSlot], list[str]]:
         """Chunks whose min_delta exceeds int32 take the per-chunk path
         (mirrors the reference fallback, which is chunk-granular)."""
-        bad: List[str] = []
+        bad: list[str] = []
         for s in slots:
             if s.column in bad:
                 continue
@@ -686,7 +686,7 @@ class DecodePlanner:
     # -- pallas group execution -------------------------------------------
 
     def _execute_group_pallas(self, group: DecodeGroup,
-                              slots: List[PageSlot], rg, payloads,
+                              slots: list[PageSlot], rg, payloads,
                               per_col_parts, leases) -> None:
         enc = group.encoding
         if enc == Encoding.RLE_DICTIONARY:
@@ -702,7 +702,7 @@ class DecodePlanner:
         self._scatter_batch(batch, slots, per_col_parts)
 
     @staticmethod
-    def _scatter_batch(batch, slots: List[PageSlot], per_col_parts) -> None:
+    def _scatter_batch(batch, slots: list[PageSlot], per_col_parts) -> None:
         """Slice group output rows back to columns.  Consecutive pages of
         one column compact in a single segment (the uniform-page fast path
         of ops._compact), keyed by their page range for ordered reassembly."""
@@ -727,7 +727,7 @@ class DecodePlanner:
             (len(slots), max(w_arena, 1)), np.uint32)
         leases.append(buf)
         self._fill_arena(arena, slots, payloads)
-        dicts: Dict[str, dict_decode.CachedDictionary] = {}
+        dicts: dict[str, dict_decode.CachedDictionary] = {}
         for s in slots:
             if s.column not in dicts:
                 dicts[s.column] = self._device_dictionary(rg, s.column,
@@ -811,7 +811,7 @@ class DecodePlanner:
 
     # -- host group execution ---------------------------------------------
 
-    def _execute_group_host(self, group: DecodeGroup, slots: List[PageSlot],
+    def _execute_group_host(self, group: DecodeGroup, slots: list[PageSlot],
                             rg, payloads, per_col_parts, leases) -> None:
         del leases  # host groups build exact-size numpy slabs, no arenas
         enc = group.encoding
@@ -915,7 +915,7 @@ class DecodePlanner:
     # -- scatter -----------------------------------------------------------
 
     def _assemble_column(self, chunk: ChunkMeta, field: Field,
-                         parts: Dict[tuple, object],
+                         parts: dict[tuple, object],
                          payloads) -> ops.DecodeResult:
         import jax.numpy as jnp
         ordered = [parts[k] for k in sorted(parts)]  # keys: page ranges

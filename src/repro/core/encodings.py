@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from collections.abc import Sequence
 
 import numpy as np
 
@@ -61,8 +61,8 @@ class EncodedPage:
 @dataclasses.dataclass
 class ChunkEncoding:
     encoding: Encoding
-    pages: List[EncodedPage]
-    dict_page: Optional[EncodedPage] = None
+    pages: list[EncodedPage]
+    dict_page: EncodedPage | None = None
 
     @property
     def total_bytes(self) -> int:
@@ -72,7 +72,7 @@ class ChunkEncoding:
         return n
 
 
-Values = Union[np.ndarray, StringColumn]
+Values = np.ndarray | StringColumn
 
 
 def _pad4(b: bytes) -> bytes:
@@ -137,7 +137,7 @@ def _bit_widths_of(maxv: np.ndarray) -> np.ndarray:
     return out
 
 
-def _delta_encode_ints(values: np.ndarray) -> Tuple[bytes, dict]:
+def _delta_encode_ints(values: np.ndarray) -> tuple[bytes, dict]:
     """Vectorized across blocks: miniblocks grouped by bit-width so each
     distinct width packs in one numpy pass."""
     n = values.shape[0]
@@ -332,11 +332,11 @@ def decode_dlba_page(payload: bytes, n: int, field: Field,
 # RLE_DICTIONARY (chunk-level)
 # ---------------------------------------------------------------------------
 
-def _unique_with_codes(values: Values) -> Tuple[Values, np.ndarray]:
+def _unique_with_codes(values: Values) -> tuple[Values, np.ndarray]:
     if isinstance(values, StringColumn):
-        table: Dict[bytes, int] = {}
+        table: dict[bytes, int] = {}
         codes = np.empty(len(values), dtype=np.int64)
-        order: List[bytes] = []
+        order: list[bytes] = []
         for i, b in enumerate(values.to_pylist()):
             code = table.get(b)
             if code is None:
@@ -351,8 +351,8 @@ def _unique_with_codes(values: Values) -> Tuple[Values, np.ndarray]:
 
 
 def encode_dict_chunk(values: Values, field: Field,
-                      page_slices: Sequence[Tuple[int, int]],
-                      max_dict_fraction: float) -> Optional[ChunkEncoding]:
+                      page_slices: Sequence[tuple[int, int]],
+                      max_dict_fraction: float) -> ChunkEncoding | None:
     n = _n(values)
     uniq, codes = _unique_with_codes(values)
     n_dict = _n(uniq)
@@ -387,7 +387,7 @@ _FLOAT_TYPES = (PhysicalType.FLOAT, PhysicalType.DOUBLE)
 
 
 def candidate_encodings(field: Field, policy: EncodingPolicy,
-                        allow_dict: bool = True) -> List[Encoding]:
+                        allow_dict: bool = True) -> list[Encoding]:
     if policy == EncodingPolicy.PLAIN_ONLY:
         return [Encoding.PLAIN]
     if policy == EncodingPolicy.V1_ONLY:
@@ -434,9 +434,9 @@ _PAGE_DECODERS = {
 
 
 def encode_chunk_with(encoding: Encoding, values: Values, field: Field,
-                      page_slices: Sequence[Tuple[int, int]],
+                      page_slices: Sequence[tuple[int, int]],
                       max_dict_fraction: float = 1.0
-                      ) -> Optional[ChunkEncoding]:
+                      ) -> ChunkEncoding | None:
     """Encode one column chunk with a specific encoding (None if invalid)."""
     if encoding == Encoding.RLE_DICTIONARY:
         return encode_dict_chunk(values, field, page_slices,
@@ -450,12 +450,12 @@ def encode_chunk_with(encoding: Encoding, values: Values, field: Field,
 
 
 def select_chunk_encoding(values: Values, field: Field,
-                          page_slices: Sequence[Tuple[int, int]],
+                          page_slices: Sequence[tuple[int, int]],
                           config: FileConfig) -> ChunkEncoding:
     """Insight 3: try every candidate, keep the smallest encoded size."""
     allow_dict = field.name not in set(config.no_dict_columns)
     cands = candidate_encodings(field, config.encodings, allow_dict)
-    best: Optional[ChunkEncoding] = None
+    best: ChunkEncoding | None = None
     for c in cands:
         ce = encode_chunk_with(c, values, field, page_slices,
                                config.max_dict_fraction)
@@ -468,7 +468,7 @@ def select_chunk_encoding(values: Values, field: Field,
 
 
 def decode_page(encoding: Encoding, payload: bytes, n: int, field: Field,
-                extra: dict, dictionary: Optional[Values] = None) -> Values:
+                extra: dict, dictionary: Values | None = None) -> Values:
     if encoding == Encoding.RLE_DICTIONARY:
         assert dictionary is not None
         return decode_dict_page(payload, n, field, extra, dictionary)

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import threading
 from collections import OrderedDict
-from typing import Callable, Dict, Optional
+from collections.abc import Callable
 
 
 class ByteCappedLRU:
@@ -16,13 +16,13 @@ class ByteCappedLRU:
         self.max_bytes = max_bytes
         self._sizer = sizer
         self._entries: "OrderedDict[object, object]" = OrderedDict()
-        self._sizes: Dict[object, int] = {}
+        self._sizes: dict[object, int] = {}
         self._lock = threading.Lock()
         self.bytes = 0
         self.hits = 0
         self.misses = 0
 
-    def get(self, key) -> Optional[object]:
+    def get(self, key) -> object | None:
         with self._lock:
             value = self._entries.get(key)
             if value is None:

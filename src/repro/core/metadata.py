@@ -13,7 +13,6 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import List, Optional
 
 from repro.core.compression import Codec
 from repro.core.encodings import Encoding
@@ -43,9 +42,9 @@ class ChunkMeta:
     name: str
     encoding: int             # Encoding enum value
     codec: int                # Codec enum value
-    pages: List[PageMeta]
-    dict_page: Optional[PageMeta] = None
-    stats: Optional[dict] = None  # {"min":…, "max":…} for numerics
+    pages: list[PageMeta]
+    dict_page: PageMeta | None = None
+    stats: dict | None = None  # {"min":…, "max":…} for numerics
 
     @property
     def n_values(self) -> int:
@@ -94,7 +93,7 @@ class ChunkMeta:
 @dataclasses.dataclass
 class RowGroupMeta:
     n_rows: int
-    columns: List[ChunkMeta]
+    columns: list[ChunkMeta]
 
     def column(self, name: str) -> ChunkMeta:
         for c in self.columns:
@@ -116,7 +115,7 @@ class RowGroupMeta:
 class FileMeta:
     schema: Schema
     num_rows: int
-    row_groups: List[RowGroupMeta]
+    row_groups: list[RowGroupMeta]
     logical_nbytes: int       # raw decoded size — effective-bw numerator
     writer_config: dict       # provenance: the FileConfig that produced this
 

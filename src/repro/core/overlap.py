@@ -53,15 +53,15 @@ import os
 import queue
 import threading
 import time
-from typing import Callable, Dict, List, Optional, Sequence
+from collections.abc import Callable, Sequence
 
 from repro.core.scan import Scanner, ScanMetrics
 from repro.kernels.common import kernel_launch_count
 
-Consume = Callable[[object, int, Dict], object]
+Consume = Callable[[object, int, dict], object]
 
 
-def default_decode_workers() -> Optional[int]:
+def default_decode_workers() -> int | None:
     """Resolve ``decode_workers=None``: the REPRO_DECODE_WORKERS override
     when set (0 → inline decode), else None — the shared ScanService pool
     with adaptive sizing (core/scheduler.py).  Resolved at call time so
@@ -97,10 +97,10 @@ class RunReport:
     mode: str                   # "blocking" | "overlapped"
     measured_wall: float
     metrics: ScanMetrics
-    consume_per_rg: List[float]
+    consume_per_rg: list[float]
     decode_workers: int = 0     # 0 → decode ran inline on the consume thread
     depth: int = 2              # in-flight bound the executor ran with
-    stage_walls: Dict[str, float] = dataclasses.field(default_factory=dict)
+    stage_walls: dict[str, float] = dataclasses.field(default_factory=dict)
 
     @property
     def modeled_wall(self) -> float:
@@ -141,7 +141,7 @@ class RunReport:
         if self.mode == "blocking":
             return (self.metrics.io_seconds + sum(dec) + sum(cons))
         depth = max(1, self.depth)
-        done_hist: List[float] = []     # per-RG consume completion
+        done_hist: list[float] = []     # per-RG consume completion
         io_done = 0.0
         if self.decode_workers <= 0:
             compute_done = 0.0
@@ -210,7 +210,7 @@ class RunReport:
                 f"workers={self.decode_workers}")
 
 
-def _account_rg(scanner: Scanner, m: ScanMetrics, i: int, cols: Dict,
+def _account_rg(scanner: Scanner, m: ScanMetrics, i: int, cols: dict,
                 io_dt: float, dec_dt: float) -> None:
     m.io_seconds += io_dt
     m.io_per_rg.append(io_dt)
@@ -224,8 +224,8 @@ def _account_rg(scanner: Scanner, m: ScanMetrics, i: int, cols: Dict,
     m.n_row_groups += 1
 
 
-def run_blocking(scanner: Scanner, consume: Optional[Consume] = None,
-                 row_groups: Optional[Sequence[int]] = None,
+def run_blocking(scanner: Scanner, consume: Consume | None = None,
+                 row_groups: Sequence[int] | None = None,
                  predicate_stats=None):
     """Fetch everything, then decode+consume everything (paper Fig. 4 top)."""
     t0 = time.perf_counter()
@@ -239,7 +239,7 @@ def run_blocking(scanner: Scanner, consume: Optional[Consume] = None,
         staged.append((i, raws, io_dt))
     fetch_wall = time.perf_counter() - t_f0
     acc = None
-    consume_times: List[float] = []
+    consume_times: list[float] = []
     decode_wall = 0.0
     for i, raws, io_dt in staged:
         t_d = time.perf_counter()
@@ -267,7 +267,7 @@ class _FetchState:
     drain instead of deadlocking."""
 
     def __init__(self):
-        self.errors: List[BaseException] = []
+        self.errors: list[BaseException] = []
         self.abort = threading.Event()
 
     def fail(self, exc: BaseException) -> None:
@@ -275,10 +275,11 @@ class _FetchState:
         self.abort.set()
 
 
-def run_overlapped(scanner: Scanner, consume: Optional[Consume] = None,
-                   row_groups: Optional[Sequence[int]] = None,
+def run_overlapped(scanner: Scanner, consume: Consume | None = None,
+                   row_groups: Sequence[int] | None = None,
                    predicate_stats=None, depth: int = 2,
-                   decode_workers: Optional[int] = None, service=None):
+                   decode_workers: int | None = None, service=None,
+                   priority: int = 0):
     """Overlapped scan: fetch ∥ decode ∥ in-order consume.
 
     ``depth`` bounds row groups in flight (fetched or decoded, not yet
@@ -287,7 +288,9 @@ def run_overlapped(scanner: Scanner, consume: Optional[Consume] = None,
     value routes through the shared ScanService — ``None`` (the default)
     with adaptive pool sizing, ``N >= 1`` flooring the pool at N while
     this scan runs.  ``service`` overrides the process-wide singleton
-    (tests / dedicated pools).
+    (tests / dedicated pools).  ``priority`` is the ScanService strict
+    service class (lower first; the dataset executor biases the pool
+    toward earliest fragments) — ignored on the inline path.
     """
     if decode_workers is None:
         decode_workers = default_decode_workers()
@@ -296,12 +299,13 @@ def run_overlapped(scanner: Scanner, consume: Optional[Consume] = None,
                                       predicate_stats, depth)
     return _run_overlapped_service(scanner, consume, row_groups,
                                    predicate_stats, depth,
-                                   decode_workers, service)
+                                   decode_workers, service, priority)
 
 
-def _run_overlapped_service(scanner: Scanner, consume: Optional[Consume],
+def _run_overlapped_service(scanner: Scanner, consume: Consume | None,
                             row_groups, predicate_stats, depth: int,
-                            decode_workers: Optional[int], service):
+                            decode_workers: int | None, service,
+                            priority: int = 0):
     """Shared-pool path: submit to the ScanService, consume in order."""
     from repro.core.scheduler import scan_service
 
@@ -313,9 +317,10 @@ def _run_overlapped_service(scanner: Scanner, consume: Optional[Consume],
     handle = svc.submit(scanner, row_groups=row_groups,
                         predicate_stats=predicate_stats, depth=depth,
                         workers_hint=hint,
-                        label=getattr(scanner, "path", "scan"))
+                        label=getattr(scanner, "path", "scan"),
+                        priority=priority)
     acc = None
-    consume_times: List[float] = []
+    consume_times: list[float] = []
     try:
         for i, cols, io_dt, dec_dt, chunk_times, p2_start in handle:
             _account_rg(scanner, m, i, cols, io_dt, dec_dt)
@@ -329,6 +334,7 @@ def _run_overlapped_service(scanner: Scanner, consume: Optional[Consume],
         handle.cancel()             # no-op if the scan already finished
         raise
     probe.finish(m)
+    m.shared_rgs = handle.shared_rgs
     workers = handle.workers
     walls = handle.stage_walls()
     walls["consume"] = sum(consume_times)
@@ -340,7 +346,7 @@ def _run_overlapped_service(scanner: Scanner, consume: Optional[Consume],
                           depth=max(1, depth), stage_walls=walls)
 
 
-def _run_overlapped_inline(scanner: Scanner, consume: Optional[Consume],
+def _run_overlapped_inline(scanner: Scanner, consume: Consume | None,
                            row_groups, predicate_stats, depth: int):
     """The PR-1 executor: private fetch thread ∥ inline decode + consume.
     Kept behind ``decode_workers=0`` so file-layout comparisons can pin an
@@ -375,7 +381,7 @@ def _run_overlapped_inline(scanner: Scanner, consume: Optional[Consume],
     thread.start()
 
     acc = None
-    consume_times: List[float] = []
+    consume_times: list[float] = []
     decode_wall = 0.0
     try:
         for _ in range(len(plan)):

@@ -4,6 +4,15 @@ These are the paper's §4 query-level validation workloads.  Both consume
 row groups streamed by the overlap executor, so file-level configuration
 gains translate to query runtime exactly as in Fig. 5.
 
+Both also accept a **Dataset** (repro.dataset) in place of a Scanner:
+the scan is then planned over the manifest (partition + file-level
+zone-map pruning with the same stats contract the row-group pruner
+uses) and executed as sharded fragment scans through the shared
+ScanService — the "data-lake" path where file pruning and cooperative
+multi-scan scheduling compound with the paper's single-file config
+gains.  Per-fragment partial results reduce in plan order, so pruned
+and unpruned runs are bit-identical.
+
 Dates are int32 days since 1992-01-01 (DATE logical type).
 """
 
@@ -11,7 +20,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +40,12 @@ Q12_ORDERS_COLUMNS = ["o_orderkey", "o_orderpriority"]
 
 def _dev(x):
     return jnp.asarray(np.asarray(x))
+
+
+def _is_dataset(source) -> bool:
+    """Duck-typed Dataset check (no repro.dataset import on the scan-only
+    path): a manifest-backed source exposes fragments + partitioning."""
+    return hasattr(source, "fragments") and hasattr(source, "partitioning")
 
 
 # ---------------------------------------------------------------------------
@@ -82,14 +96,36 @@ def _q6_consume(use_kernel: bool):
 
 def q6(scanner: Scanner, overlapped: bool = True, use_kernel: bool = False,
        prune: bool = True, prepare_plan: bool = False, depth: int = 2,
-       decode_workers: Optional[int] = None, service=None
-       ) -> Tuple[float, RunReport]:
-    """Run Q6 over the scanner's stream.  ``prepare_plan`` pre-builds the
-    row-group decode plans before timing starts (the serving-loop case —
-    plans are cached per file footer + column selection, so repeated
-    queries always hit).  ``depth``/``decode_workers`` shape the pipelined
-    executor (overlap.py); ``service`` selects a specific ScanService
-    instead of the shared one; all three are ignored for blocking runs."""
+       decode_workers: int | None = None, service=None,
+       window: int = 4, open_opts: dict | None = None
+       ) -> tuple[float, RunReport]:
+    """Run Q6 over the scanner's stream — or over a whole **Dataset**
+    (file-level pruning + sharded fragment scans; returns a
+    ``DatasetRunReport``).  ``prepare_plan`` pre-builds the row-group
+    decode plans before timing starts (the serving-loop case — plans are
+    cached per file footer + column selection, so repeated queries always
+    hit).  ``depth``/``decode_workers`` shape the pipelined executor
+    (overlap.py); ``service`` selects a specific ScanService instead of
+    the shared one; all three are ignored for blocking runs.
+    ``window``/``open_opts`` apply to dataset runs only (fragment
+    concurrency bound; ``Dataset.open_fragment`` storage options);
+    dataset runs are always sharded (``overlapped=False`` raises) and
+    ``prepare_plan`` is a no-op for them (per-fragment decode plans are
+    cached on first scan)."""
+    if _is_dataset(scanner):
+        if not overlapped:
+            raise ValueError("dataset runs are always sharded/overlapped; "
+                             "open a fragment Scanner for a blocking run")
+        from repro.dataset.executor import run_dataset_scan
+        from repro.dataset.planner import plan_dataset_scan
+        plan = plan_dataset_scan(
+            scanner, columns=list(Q6_COLUMNS),
+            predicate_stats=q6_rg_stats_predicate if prune else None)
+        acc, report = run_dataset_scan(
+            plan, _q6_consume(use_kernel), lambda a, b: a + b,
+            window=window, depth=depth, decode_workers=decode_workers,
+            service=service, open_opts=open_opts)
+        return (acc or 0.0), report
     if prepare_plan:
         scanner.prepare_plans(
             predicate_stats=q6_rg_stats_predicate if prune else None)
@@ -105,7 +141,7 @@ def q6(scanner: Scanner, overlapped: bool = True, use_kernel: bool = False,
     return (acc or 0.0), report
 
 
-def q6_reference(tables: Dict[str, np.ndarray]) -> float:
+def q6_reference(tables: dict[str, np.ndarray]) -> float:
     """Numpy oracle over raw columns."""
     ship, disc = tables["l_shipdate"], tables["l_discount"]
     qty, price = tables["l_quantity"], tables["l_extendedprice"]
@@ -145,10 +181,21 @@ def _q12_probe(skeys, sprio, okey, mode, ship, commit, receipt):
 
 def q12(lineitem_scanner: Scanner, orders_scanner: Scanner,
         overlapped: bool = True, prepare_plan: bool = False,
-        depth: int = 2, decode_workers: Optional[int] = None,
-        service=None) -> Tuple[Dict[str, int], RunReport, RunReport]:
-    if prepare_plan:
+        depth: int = 2, decode_workers: int | None = None,
+        service=None, window: int = 4, open_opts: dict | None = None
+        ) -> tuple[dict[str, int], RunReport, RunReport]:
+    """Q12 over scanners — or over Datasets (either side independently):
+    the build side streams every orders fragment, the probe side shards
+    lineitem fragments through the ScanService, and per-fragment counts
+    reduce in plan order.  Dataset sides are always sharded
+    (``overlapped=False`` raises) and skip ``prepare_plan``."""
+    if not overlapped and (_is_dataset(lineitem_scanner)
+                           or _is_dataset(orders_scanner)):
+        raise ValueError("dataset runs are always sharded/overlapped; "
+                         "open fragment Scanners for a blocking run")
+    if prepare_plan and not _is_dataset(lineitem_scanner):
         lineitem_scanner.prepare_plans()
+    if prepare_plan and not _is_dataset(orders_scanner):
         orders_scanner.prepare_plans()
     # Build side: stream orders, then sort once on device.
     def build_consume(acc, rg_index, cols):
@@ -163,7 +210,20 @@ def q12(lineitem_scanner: Scanner, orders_scanner: Scanner,
                                    service=service)
     else:
         runner = run_blocking
-    (keys, prio), build_report = runner(orders_scanner, build_consume)
+
+    if _is_dataset(orders_scanner):
+        from repro.dataset.executor import run_dataset_scan
+        from repro.dataset.planner import plan_dataset_scan
+        oplan = plan_dataset_scan(orders_scanner,
+                                  columns=list(Q12_ORDERS_COLUMNS))
+        (keys, prio), build_report = run_dataset_scan(
+            oplan, build_consume,
+            lambda a, b: (jnp.concatenate([a[0], b[0]]),
+                          jnp.concatenate([a[1], b[1]])),
+            window=window, depth=depth, decode_workers=decode_workers,
+            service=service, open_opts=open_opts)
+    else:
+        (keys, prio), build_report = runner(orders_scanner, build_consume)
     order = jnp.argsort(keys)
     skeys, sprio = keys[order], prio[order]
 
@@ -177,7 +237,17 @@ def q12(lineitem_scanner: Scanner, orders_scanner: Scanner,
             _dev(cols["l_receiptdate"].array).astype(jnp.int32))
         return part if acc is None else acc + part
 
-    counts, probe_report = runner(lineitem_scanner, probe_consume)
+    if _is_dataset(lineitem_scanner):
+        from repro.dataset.executor import run_dataset_scan
+        from repro.dataset.planner import plan_dataset_scan
+        lplan = plan_dataset_scan(lineitem_scanner,
+                                  columns=list(Q12_LINEITEM_COLUMNS))
+        counts, probe_report = run_dataset_scan(
+            lplan, probe_consume, lambda a, b: a + b,
+            window=window, depth=depth, decode_workers=decode_workers,
+            service=service, open_opts=open_opts)
+    else:
+        counts, probe_report = runner(lineitem_scanner, probe_consume)
     counts = np.asarray(counts)
     result = {
         "MAIL_high": int(counts[0]), "MAIL_low": int(counts[1]),
@@ -186,8 +256,8 @@ def q12(lineitem_scanner: Scanner, orders_scanner: Scanner,
     return result, build_report, probe_report
 
 
-def q12_reference(line: Dict[str, np.ndarray],
-                  orders: Dict[str, np.ndarray]) -> Dict[str, int]:
+def q12_reference(line: dict[str, np.ndarray],
+                  orders: dict[str, np.ndarray]) -> dict[str, int]:
     ok = orders["o_orderkey"].astype(np.int64)
     op = orders["o_orderpriority"]
     pr = dict(zip(ok.tolist(), op.tolist()))

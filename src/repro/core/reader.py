@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import os
 import struct
-from typing import Callable, Dict, List, Optional, Sequence
+from collections.abc import Callable, Sequence
 
 import numpy as np
 
@@ -52,7 +52,7 @@ def file_fetcher(path: str) -> Fetch:
 
 
 class TabFileReader:
-    def __init__(self, path: str, fetch: Optional[Fetch] = None):
+    def __init__(self, path: str, fetch: Fetch | None = None):
         self.path = path
         self.meta = read_footer(path)
         self.fetch: Fetch = fetch if fetch is not None else file_fetcher(path)
@@ -60,8 +60,8 @@ class TabFileReader:
     # -- planning ----------------------------------------------------------
 
     def plan_row_groups(self, predicate_stats=None,
-                        row_groups: Optional[Sequence[int]] = None
-                        ) -> List[int]:
+                        row_groups: Sequence[int] | None = None
+                        ) -> list[int]:
         """Row groups to scan; ``predicate_stats`` is an optional callable
         (col_name -> stats dict -> bool keep) enabling zone-map skipping."""
         idxs = list(range(len(self.meta.row_groups))) \
@@ -90,7 +90,7 @@ class TabFileReader:
         off, size = chunk.byte_range
         return self.fetch(off, size)
 
-    def chunk_pages(self, chunk: ChunkMeta, raw: Optional[bytes] = None):
+    def chunk_pages(self, chunk: ChunkMeta, raw: bytes | None = None):
         """Yield (page_meta, decompressed_payload) for each data page;
         first element of the returned tuple list is the dict payload."""
         off0, _ = chunk.byte_range
@@ -108,7 +108,7 @@ class TabFileReader:
     # -- host decode path ---------------------------------------------------
 
     def decode_chunk(self, chunk: ChunkMeta, field: Field,
-                     raw: Optional[bytes] = None):
+                     raw: bytes | None = None):
         dict_payload, pages = self.chunk_pages(chunk, raw)
         encoding = Encoding(chunk.encoding)
         dictionary = None
@@ -130,19 +130,19 @@ class TabFileReader:
                                 np.concatenate([p.payload for p in parts]))
         return np.concatenate(parts)
 
-    def read_table(self, columns: Optional[List[str]] = None,
-                   row_groups: Optional[Sequence[int]] = None,
+    def read_table(self, columns: list[str] | None = None,
+                   row_groups: Sequence[int] | None = None,
                    coalesce_gap: int = DEFAULT_COALESCE_GAP) -> Table:
         names = columns if columns is not None else self.meta.schema.names
         rgs = self.plan_row_groups(row_groups=row_groups)
-        per_rg: List[Table] = []
+        per_rg: list[Table] = []
         for i in rgs:
             rg = self.meta.row_groups[i]
             # coalesced fetch: adjacent chunk ranges merge into one read
             # (Insight 2), per-chunk views are sliced back zero-copy
             ranges = [rg.column(n).byte_range for n in names]
             raws = fetch_ranges(self.fetch, ranges, coalesce_gap)
-            cols: Dict[str, object] = {}
+            cols: dict[str, object] = {}
             for name, raw in zip(names, raws):
                 field = self.meta.schema.field(name)
                 cols[name] = self.decode_chunk(rg.column(name), field,

@@ -11,7 +11,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, Optional
 
 from repro.core.config import FileConfig
 from repro.core.metadata import FileMeta
@@ -43,7 +42,7 @@ class RewriteReport:
 
 def rewrite_file(src_path: str, dst_path: str, config: FileConfig,
                  threads: int = 4,
-                 columns: Optional[List[str]] = None) -> RewriteReport:
+                 columns: list[str] | None = None) -> RewriteReport:
     t0 = time.perf_counter()
     reader = TabFileReader(src_path)
     src_meta = reader.meta
@@ -52,7 +51,7 @@ def rewrite_file(src_path: str, dst_path: str, config: FileConfig,
     schema = Schema([src_meta.schema.field(n) for n in names])
 
     writer = TabFileWriter(dst_path, config, threads=threads).begin(schema)
-    pending: List[Table] = []
+    pending: list[Table] = []
     pending_rows = 0
 
     def flush(n_target: int) -> None:

@@ -26,7 +26,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+from collections.abc import Iterator, Sequence
 
 import numpy as np
 
@@ -49,10 +49,12 @@ class ScanMetrics:
     decode_seconds: float = 0.0
     n_row_groups: int = 0
     n_pages: int = 0
-    io_per_rg: List[float] = dataclasses.field(default_factory=list)
-    decode_per_rg: List[float] = dataclasses.field(default_factory=list)
+    io_per_rg: list[float] = dataclasses.field(default_factory=list)
+    decode_per_rg: list[float] = dataclasses.field(default_factory=list)
     n_kernel_launches: int = 0   # pallas dispatches during this scan
     n_io_requests: int = 0       # storage requests issued (post-coalescing)
+    shared_rgs: int = 0          # RGs delivered from another scan's
+                                 # in-flight job (cooperative scans)
     plan_seconds: float = 0.0    # decode-plan build time (0 on cache hits)
     # per-stage wall spans of a pipelined run (overlap.py): elapsed time
     # between each stage's first start and last end — distinct from the
@@ -68,9 +70,9 @@ class ScanMetrics:
     # decode_p2_start_per_rg[k] indexes RG k's first phase-2 item — the
     # barrier the modeled schedule honors (phase 2 starts only after
     # every phase-1 item drained).
-    decode_chunks_per_rg: List[List[float]] = dataclasses.field(
+    decode_chunks_per_rg: list[list[float]] = dataclasses.field(
         default_factory=list)
-    decode_p2_start_per_rg: List[int] = dataclasses.field(
+    decode_p2_start_per_rg: list[int] = dataclasses.field(
         default_factory=list)
     # informational: the gzip-inflate backend active for this process
     # (isal / zlib-ng / zlib — core/compression.py)
@@ -115,13 +117,13 @@ class DecodeJob:
     slow chunk no longer holds its whole row group.
     """
 
-    def phase1_tasks(self) -> List:
+    def phase1_tasks(self) -> list:
         return []
 
-    def phase2_tasks(self) -> List:
+    def phase2_tasks(self) -> list:
         return []
 
-    def finalize(self) -> Dict[str, ops.DecodeResult]:
+    def finalize(self) -> dict[str, ops.DecodeResult]:
         raise NotImplementedError
 
 
@@ -153,7 +155,7 @@ class _PerChunkDecodeJob(DecodeJob):
         self.scanner = scanner
         self.rg_index = rg_index
         self.raws = raws
-        self.out: Dict[str, ops.DecodeResult] = {}
+        self.out: dict[str, ops.DecodeResult] = {}
 
     def _decode_column(self, name: str) -> None:
         sc = self.scanner
@@ -176,7 +178,7 @@ class _PerChunkDecodeJob(DecodeJob):
 
 
 class Scanner:
-    def __init__(self, path: str, columns: Optional[List[str]] = None,
+    def __init__(self, path: str, columns: list[str] | None = None,
                  storage=None, decode_backend: str = "pallas",
                  use_plan: bool = True,
                  coalesce_gap: int = DEFAULT_COALESCE_GAP):
@@ -195,10 +197,10 @@ class Scanner:
     # -- planning -------------------------------------------------------------
 
     def plan(self, predicate_stats=None,
-             row_groups: Optional[Sequence[int]] = None) -> List[int]:
+             row_groups: Sequence[int] | None = None) -> list[int]:
         return self._reader.plan_row_groups(predicate_stats, row_groups)
 
-    def prepare_plans(self, row_groups: Optional[Sequence[int]] = None,
+    def prepare_plans(self, row_groups: Sequence[int] | None = None,
                       predicate_stats=None) -> int:
         """Build (and cache) decode plans for the scan's row groups ahead of
         time — the serving/query loop pattern where planning cost must not
@@ -208,8 +210,8 @@ class Scanner:
         return sum(self.planner.plan_rg(i).n_groups
                    for i in self.plan(predicate_stats, row_groups))
 
-    def rg_requests(self, rg_index: int) -> List[Tuple[str, ChunkMeta,
-                                                       Tuple[int, int]]]:
+    def rg_requests(self, rg_index: int) -> list[tuple[str, ChunkMeta,
+                                                       tuple[int, int]]]:
         rg = self.meta.row_groups[rg_index]
         out = []
         for name in self.columns:
@@ -219,7 +221,7 @@ class Scanner:
 
     # -- stages ----------------------------------------------------------------
 
-    def fetch_rg(self, rg_index: int) -> Tuple[Dict[str, bytes], float]:
+    def fetch_rg(self, rg_index: int) -> tuple[dict[str, bytes], float]:
         """Fetch every selected chunk of one row group with coalesced
         requests: adjacent/near-adjacent column byte ranges merge into one
         large read (Insight 2); per-column zero-copy views come back."""
@@ -228,7 +230,7 @@ class Scanner:
                                     self.coalesce_gap)
         return {name: d for (name, _, _), d in zip(reqs, datas)}, dt
 
-    def decode_job(self, rg_index: int, raws: Dict[str, bytes]
+    def decode_job(self, rg_index: int, raws: dict[str, bytes]
                    ) -> "DecodeJob":
         """Schedulable decode of one row group (ScanService per-chunk
         dispatch, core/scheduler.py): phase-1 items (decompress), phase-2
@@ -244,8 +246,8 @@ class Scanner:
             return _PlannedDecodeJob(self, rg_index, raws)
         return _PerChunkDecodeJob(self, rg_index, raws)
 
-    def decode_rg(self, rg_index: int, raws: Dict[str, bytes]
-                  ) -> Tuple[Dict[str, ops.DecodeResult], float]:
+    def decode_rg(self, rg_index: int, raws: dict[str, bytes]
+                  ) -> tuple[dict[str, ops.DecodeResult], float]:
         t0 = time.perf_counter()
         if self.planner is not None:
             out = self.planner.execute(rg_index, raws)
@@ -267,17 +269,17 @@ class Scanner:
 
     # -- full scans --------------------------------------------------------------
 
-    def scan(self, row_groups: Optional[Sequence[int]] = None,
+    def scan(self, row_groups: Sequence[int] | None = None,
              predicate_stats=None
-             ) -> Iterator[Tuple[int, Dict[str, ops.DecodeResult]]]:
+             ) -> Iterator[tuple[int, dict[str, ops.DecodeResult]]]:
         for i in self.plan(predicate_stats, row_groups):
             raws, _ = self.fetch_rg(i)
             cols, _ = self.decode_rg(i, raws)
             yield i, cols
 
-    def scan_with_metrics(self, row_groups: Optional[Sequence[int]] = None,
+    def scan_with_metrics(self, row_groups: Sequence[int] | None = None,
                           predicate_stats=None, consume=None
-                          ) -> Tuple[Optional[object], ScanMetrics]:
+                          ) -> tuple[object | None, ScanMetrics]:
         m = ScanMetrics(backend=getattr(self.storage, "kind", "real"))
         launches0 = kernel_launch_count()
         requests0 = self.storage.stats.requests

@@ -8,14 +8,16 @@ stalled its row group.  This module schedules the fetch → decompress →
 decode path as one shared resource across scans (the Presto-on-GPU /
 Data-Path-Fusion result):
 
-  fetch    ONE shared thread issues each scan's coalesced per-RG reads,
-           round-robin across active scans, gated by each scan's ``depth``
-           credits (the per-scan in-flight bound / OOM backpressure).
-           Serializing fetches is deliberate — the paper's storage model
+  fetch    a shared fetch pool (``fetch_threads``, default ONE thread)
+           issues each scan's coalesced per-RG reads, round-robin across
+           active scans, gated by each scan's ``depth`` credits (the
+           per-scan in-flight bound / OOM backpressure).  The single-
+           thread default is deliberate — the paper's storage model
            treats the NVMe array as one shared channel whose bandwidth
-           coalesced large reads already saturate — but it does trade
-           away concurrent-fetch overlap on high-latency *real* backends
-           (network FS); a small fetch pool there is a ROADMAP item;
+           coalesced large reads already saturate — but high-latency
+           *real* backends (network FS) want ``fetch_threads > 1`` so
+           concurrent fragment scans overlap their blocking reads; the
+           default path is bit-identical either way (pinned in tests);
   decode   ONE shared worker pool runs *per-chunk* work items — each
            DecodePlan group, fallback column, or decompress item of a row
            group is independently schedulable (``Scanner.decode_job``),
@@ -25,9 +27,15 @@ Data-Path-Fusion result):
   consume  each scan's caller thread takes its row groups strictly in
            plan order from a per-scan in-order queue (``ScanHandle``).
 
-**Fairness.**  Both the fetch thread and the decode workers service scans
-in round-robin order, so N concurrent scans each make progress instead of
-the first-submitted scan monopolizing the pool.
+**Fairness & priority.**  Both the fetch pool and the decode workers
+service scans in round-robin order, so N concurrent scans each make
+progress instead of the first-submitted scan monopolizing the pool.
+``submit(priority=k)`` groups scans into strict priority classes (lower k
+served first; round-robin *within* a class): the dataset executor uses
+this to bias the pool toward earliest-submitted fragments so fragment
+results complete (and release their window slot) in plan order.  The
+default priority 0 for every scan reduces exactly to the flat
+round-robin.
 
 **Error isolation / cancellation.**  A failing work item (or fetch) marks
 only its own scan: queued items of that scan are dropped, its handle
@@ -54,7 +62,7 @@ import os
 import threading
 import time
 from collections import deque
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from collections.abc import Callable, Sequence
 
 
 class ScanCancelled(RuntimeError):
@@ -122,11 +130,11 @@ class _RgJob:
         self.job = None           # built by the "open" item
         self.pending = 0          # outstanding items of the current phase
         self.phase = 0            # 0=open, 1, 2
-        self.chunk_times: List[float] = []
+        self.chunk_times: list[float] = []
         self.p2_start = 0         # chunk_times index of the first phase-2
                                   # item (the phase barrier, for the model)
         self.key = key            # sharing identity, None → not shareable
-        self.subscribers: List[tuple] = [(seq_scan, seq)]
+        self.subscribers: list[tuple] = [(seq_scan, seq)]
 
     def live_scan(self):
         """First subscriber scan still interested in this job, or None."""
@@ -136,7 +144,7 @@ class _RgJob:
         return None
 
 
-def _share_key(scanner) -> Optional[tuple]:
+def _share_key(scanner) -> tuple | None:
     """Identity under which two scans may share fetch+decode work: file
     *contents* (the planner cache token carries path + size + mtime),
     column selection, decode backend, and the storage model (its kind and
@@ -163,21 +171,23 @@ def _share_key(scanner) -> Optional[tuple]:
 class _ScanState:
     """Service-side state of one submitted scan."""
 
-    def __init__(self, service: "ScanService", scanner, plan: List[int],
-                 depth: int, workers_hint: Optional[int], label: str):
+    def __init__(self, service: "ScanService", scanner, plan: list[int],
+                 depth: int, workers_hint: int | None, label: str,
+                 priority: int = 0):
         self.scanner = scanner
         self.plan = plan
         self.depth = max(1, depth)
         self.workers_hint = workers_hint
         self.label = label
+        self.priority = priority
         self.share_key = _share_key(scanner)
         self.shared_rgs = 0            # RGs satisfied by cooperative jobs
         self.workers_seen = 1          # max pool width while this scan ran
         self.credits = self.depth      # fetch permits (in-flight RG bound)
         self.next_fetch = 0            # next plan position to fetch
         self.ready: deque = deque()    # work items ready for the pool
-        self.done: Dict[int, tuple] = {}
-        self.error: Optional[BaseException] = None
+        self.done: dict[int, tuple] = {}
+        self.error: BaseException | None = None
         self.cancelled = False
         self.finished = False
         # stage wall spans (first start → last end) for RunReport
@@ -209,8 +219,8 @@ class ScanHandle:
         self._svc = service
         self._scan = scan
         self._next_seq = 0
-        self._t_delivered: Optional[float] = None
-        self._last_item: Optional[tuple] = None
+        self._t_delivered: float | None = None
+        self._last_item: tuple | None = None
 
     def __iter__(self) -> "ScanHandle":
         return self
@@ -274,7 +284,7 @@ class ScanHandle:
             return self._scan.workers_hint
         return max(1, self._scan.workers_seen)
 
-    def stage_walls(self) -> Dict[str, float]:
+    def stage_walls(self) -> dict[str, float]:
         return {"fetch": self._scan.span("fetch"),
                 "decode": self._scan.span("decode")}
 
@@ -288,18 +298,23 @@ class ScanHandle:
 class ScanService:
     """One shared fetch thread + one shared decode pool for all scans."""
 
-    def __init__(self, workers: Optional[int] = None, adaptive: bool = True,
-                 max_workers: Optional[int] = None, resize_every: int = 8):
+    def __init__(self, workers: int | None = None, adaptive: bool = True,
+                 max_workers: int | None = None, resize_every: int = 8,
+                 fetch_threads: int = 1):
         self._lock = threading.RLock()
         self._work_cv = threading.Condition(self._lock)
         self._fetch_cv = threading.Condition(self._lock)
-        self._scans: List[_ScanState] = []
+        self._scans: list[_ScanState] = []
         self._rr = 0               # decode round-robin cursor
         self._fetch_rr = 0         # fetch round-robin cursor
-        self._inflight: Dict[tuple, _RgJob] = {}   # cooperative-scan jobs
+        self._inflight: dict[tuple, _RgJob] = {}   # cooperative-scan jobs
         self.shared_rgs = 0        # total RGs served by subscription
         self.adaptive = adaptive
         self.max_workers = max_workers or default_max_workers()
+        # the paper's one-channel NVMe model wants exactly one fetch
+        # thread (the default); >1 overlaps blocking reads of concurrent
+        # scans on high-latency real backends (network FS / many files)
+        self.fetch_threads = max(1, fetch_threads)
         # _policy is what the adaptive sizer asks for; the effective target
         # additionally honors active scans' explicit workers hints
         self._policy = max(1, workers) if workers else 1
@@ -307,22 +322,25 @@ class ScanService:
         self._n_workers = 0
         self._shrink = 0           # workers asked to retire
         self._shutdown = False
-        self._fetch_thread: Optional[threading.Thread] = None
-        self._threads: List[threading.Thread] = []
+        self._fetch_pool: list[threading.Thread] = []
+        self._threads: list[threading.Thread] = []
         # adaptive window accumulators (delivered-RG stage times)
         self._win = {"io": 0.0, "dec": 0.0, "cons": 0.0, "rgs": 0}
         self.resize_every = max(1, resize_every)
-        self.resize_events: List[int] = []   # pool sizes after each resize
+        self.resize_events: list[int] = []   # pool sizes after each resize
 
     # -- public API ---------------------------------------------------------
 
-    def submit(self, scanner, row_groups: Optional[Sequence[int]] = None,
+    def submit(self, scanner, row_groups: Sequence[int] | None = None,
                predicate_stats=None, depth: int = 2,
-               workers_hint: Optional[int] = None,
-               label: str = "scan") -> ScanHandle:
-        """Register one scan; returns its in-order consume handle."""
+               workers_hint: int | None = None,
+               label: str = "scan", priority: int = 0) -> ScanHandle:
+        """Register one scan; returns its in-order consume handle.
+        ``priority`` selects the scan's strict service class (lower is
+        served first; round-robin within a class)."""
         plan = list(scanner.plan(predicate_stats, row_groups))
-        scan = _ScanState(self, scanner, plan, depth, workers_hint, label)
+        scan = _ScanState(self, scanner, plan, depth, workers_hint, label,
+                          priority=priority)
         with self._lock:
             if self._shutdown:
                 raise RuntimeError("ScanService is shut down")
@@ -352,18 +370,18 @@ class ScanService:
                 scan.done_cv.notify_all()
             self._work_cv.notify_all()
             self._fetch_cv.notify_all()
-        for t in [self._fetch_thread] + self._threads:
-            if t is not None:
-                t.join(timeout=5.0)
+        for t in self._fetch_pool + self._threads:
+            t.join(timeout=5.0)
 
     # -- thread management --------------------------------------------------
 
     def _ensure_threads_locked(self) -> None:
-        if self._fetch_thread is None:
-            self._fetch_thread = threading.Thread(
+        while len(self._fetch_pool) < self.fetch_threads:
+            t = threading.Thread(
                 target=self._fetch_loop, daemon=True,
-                name="scan-service-fetch")
-            self._fetch_thread.start()
+                name=f"scan-service-fetch-{len(self._fetch_pool)}")
+            self._fetch_pool.append(t)
+            t.start()
         self._spawn_to_target_locked()
 
     def _spawn_to_target_locked(self) -> None:
@@ -407,19 +425,39 @@ class ScanService:
 
     # -- fetch stage --------------------------------------------------------
 
-    def _next_fetch_locked(self) -> Optional[Tuple[_ScanState, int, bool]]:
-        """Next (scan, seq, subscribed) to fetch, round-robin across scans
-        with fetch credit.  When an identical job for that row group is
-        already in flight (cooperative scans), the scan subscribes to it
-        instead — no fetch, no decode, the credit stays held until the
-        delivered RG is acked like any other."""
+    def _service_order_locked(self, cursor: int
+                              ) -> list[tuple[_ScanState, int]]:
+        """Active scans in service order: ascending priority class, with
+        the round-robin rotation (by ``cursor``) applied *within* each
+        class.  Each entry carries the scan's rotation offset inside its
+        own class — what the cursor must advance by when that scan is
+        chosen, so scans skipped in *other* classes never skew a class's
+        rotation.  All-default-priority workloads reduce to the flat
+        rotated list (offset == list position) the pre-priority scheduler
+        iterated."""
+        by_prio: dict[int, list[_ScanState]] = {}
+        for s in self._scans:
+            by_prio.setdefault(s.priority, []).append(s)
+        out: list[tuple[_ScanState, int]] = []
+        for prio in sorted(by_prio):
+            cls = by_prio[prio]
+            k = cursor % len(cls)
+            out.extend((scan, off)
+                       for off, scan in enumerate(cls[k:] + cls[:k]))
+        return out
+
+    def _next_fetch_locked(self) -> tuple[_ScanState, int, bool] | None:
+        """Next (scan, seq, subscribed) to fetch, priority-ordered
+        round-robin across scans with fetch credit.  When an identical job
+        for that row group is already in flight (cooperative scans), the
+        scan subscribes to it instead — no fetch, no decode, the credit
+        stays held until the delivered RG is acked like any other."""
         n = len(self._scans)
-        for k in range(n):
-            scan = self._scans[(self._fetch_rr + k) % n]
+        for scan, off in self._service_order_locked(self._fetch_rr):
             if (scan.dead or scan.credits <= 0
                     or scan.next_fetch >= len(scan.plan)):
                 continue
-            self._fetch_rr = (self._fetch_rr + k + 1) % max(1, n)
+            self._fetch_rr = (self._fetch_rr + off + 1) % max(1, n)
             scan.credits -= 1
             seq = scan.next_fetch
             scan.next_fetch += 1
@@ -464,17 +502,22 @@ class ScanService:
                 key = (None if scan.share_key is None
                        else (scan.share_key, scan.plan[seq]))
                 rgjob = _RgJob(scan, seq, scan.plan[seq], raws, io_dt, key)
-                if key is not None:
+                if key is not None and key not in self._inflight:
+                    # two fetch-pool threads may race the same key for
+                    # different scans; first registration wins (the loser
+                    # just decodes its own copy — duplicated work, never
+                    # wrong results)
                     self._inflight[key] = rgjob
                 scan.ready.append(("open", rgjob, None))
                 self._work_cv.notify()
 
     # -- decode stage -------------------------------------------------------
 
-    def _next_item_locked(self, prefer: Optional[_ScanState]
-                          ) -> Optional[Tuple[_ScanState, tuple]]:
-        """Next work item, fair round-robin across scans at *row-group*
-        granularity: a worker that just ran an item of ``prefer`` keeps
+    def _next_item_locked(self, prefer: _ScanState | None
+                          ) -> tuple[_ScanState, tuple] | None:
+        """Next work item, priority-ordered fair round-robin across scans
+        at *row-group* granularity: a worker that just ran an item of
+        ``prefer`` keeps
         draining that scan (its in-flight RG finishes and delivers before
         the pool switches away — decode locality, and consumers
         desynchronize instead of bursting), and the round-robin cursor
@@ -483,18 +526,17 @@ class ScanService:
                 and prefer in self._scans):
             return prefer, prefer.ready.popleft()
         n = len(self._scans)
-        for k in range(n):
-            scan = self._scans[(self._rr + k) % n]
+        for scan, off in self._service_order_locked(self._rr):
             while scan.ready:
                 item = scan.ready.popleft()
                 if item[1].live_scan() is None:
                     continue         # no subscriber left — drop the item
-                self._rr = (self._rr + k + 1) % max(1, n)
+                self._rr = (self._rr + off + 1) % max(1, n)
                 return scan, item
         return None
 
     def _worker_loop(self) -> None:
-        prefer: Optional[_ScanState] = None
+        prefer: _ScanState | None = None
         while True:
             with self._lock:
                 got = None
@@ -543,7 +585,7 @@ class ScanService:
         raise AssertionError(kind)
 
     def _enqueue_phase(self, scan: _ScanState, rgjob: _RgJob,
-                       tasks: List[Callable[[], None]]) -> bool:
+                       tasks: list[Callable[[], None]]) -> bool:
         """Queue one phase's items, or fall through to the next phase /
         finalize when the phase is empty.  Continuation items go to the
         *front* of the scan's queue, ahead of later row groups' "open"
@@ -579,8 +621,9 @@ class ScanService:
             # decode side of the adaptive window accrues ONCE per job here
             # — a cooperative job has many subscribers but ran one decode
             self._win["dec"] += dec_dt
-            if rgjob.key is not None:
-                self._inflight.pop(rgjob.key, None)
+            if (rgjob.key is not None
+                    and self._inflight.get(rgjob.key) is rgjob):
+                self._inflight.pop(rgjob.key)
             for sub, seq in rgjob.subscribers:
                 if sub.dead:
                     continue
@@ -608,7 +651,7 @@ class ScanService:
 
     # -- completion / failure ----------------------------------------------
 
-    def _ack_locked(self, scan: _ScanState, item: Optional[tuple],
+    def _ack_locked(self, scan: _ScanState, item: tuple | None,
                     consume_dt: float) -> None:
         scan.credits += 1
         scan.workers_seen = max(scan.workers_seen, self.pool_size)
@@ -675,7 +718,7 @@ class ScanService:
 # process-wide singleton
 # ---------------------------------------------------------------------------
 
-_SERVICE: Optional[ScanService] = None
+_SERVICE: ScanService | None = None
 _SERVICE_LOCK = threading.Lock()
 
 

@@ -4,7 +4,6 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import List, Optional
 
 import numpy as np
 
@@ -56,7 +55,7 @@ class Field:
     decimal_scale: int = 0  # only for DECIMAL
 
     @property
-    def numpy_dtype(self) -> Optional[np.dtype]:
+    def numpy_dtype(self) -> np.dtype | None:
         return _NUMPY_OF_PHYSICAL.get(self.physical)
 
     def to_json(self) -> dict:
@@ -79,7 +78,7 @@ class Field:
 
 @dataclasses.dataclass(frozen=True)
 class Schema:
-    fields: List[Field]
+    fields: list[Field]
 
     def __post_init__(self) -> None:
         names = [f.name for f in self.fields]
@@ -93,7 +92,7 @@ class Schema:
         raise KeyError(name)
 
     @property
-    def names(self) -> List[str]:
+    def names(self) -> list[str]:
         return [f.name for f in self.fields]
 
     def to_json(self) -> list:

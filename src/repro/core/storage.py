@@ -35,7 +35,7 @@ import dataclasses
 import os
 import threading
 import time
-from typing import List, Sequence, Tuple
+from collections.abc import Sequence
 
 from repro.core.compression import inflate_backend
 
@@ -70,9 +70,9 @@ class FetchStats:
         return self.bytes / max(1e-12, self.seconds)
 
 
-def coalesce_ranges(ranges: Sequence[Tuple[int, int]], gap: int
-                    ) -> Tuple[List[Tuple[int, int]],
-                               List[Tuple[int, int]]]:
+def coalesce_ranges(ranges: Sequence[tuple[int, int]], gap: int
+                    ) -> tuple[list[tuple[int, int]],
+                               list[tuple[int, int]]]:
     """Merge byte ranges whose gaps are ≤ ``gap`` into large requests.
 
     Returns ``(merged, index)`` where ``merged`` is the ascending list of
@@ -81,8 +81,8 @@ def coalesce_ranges(ranges: Sequence[Tuple[int, int]], gap: int
     """
     n = len(ranges)
     order = sorted(range(n), key=lambda i: ranges[i][0])
-    merged: List[Tuple[int, int]] = []
-    index: List[Tuple[int, int]] = [(0, 0)] * n
+    merged: list[tuple[int, int]] = []
+    index: list[tuple[int, int]] = [(0, 0)] * n
     for i in order:
         off, size = ranges[i]
         if merged:
@@ -96,15 +96,15 @@ def coalesce_ranges(ranges: Sequence[Tuple[int, int]], gap: int
     return merged, index
 
 
-def _slice_back(views: List[memoryview], index, ranges
-                ) -> List[memoryview]:
+def _slice_back(views: list[memoryview], index, ranges
+                ) -> list[memoryview]:
     return [views[mi][rel:rel + size]
             for (mi, rel), (_, size) in zip(index, ranges)]
 
 
-def fetch_coalesced(storage, ranges: Sequence[Tuple[int, int]],
+def fetch_coalesced(storage, ranges: Sequence[tuple[int, int]],
                     gap: int = DEFAULT_COALESCE_GAP
-                    ) -> Tuple[List[memoryview], float]:
+                    ) -> tuple[list[memoryview], float]:
     """Fetch ``ranges`` through ``storage`` as coalesced requests.
 
     Returns per-input-range zero-copy views into the merged buffers plus the
@@ -119,8 +119,8 @@ def fetch_coalesced(storage, ranges: Sequence[Tuple[int, int]],
     return _slice_back([memoryview(b) for b in bufs], index, ranges), dt
 
 
-def fetch_ranges(fetch, ranges: Sequence[Tuple[int, int]],
-                 gap: int = DEFAULT_COALESCE_GAP) -> List[memoryview]:
+def fetch_ranges(fetch, ranges: Sequence[tuple[int, int]],
+                 gap: int = DEFAULT_COALESCE_GAP) -> list[memoryview]:
     """Coalesced reads through a plain ``fetch(offset, size)`` callable
     (the reader's storage-agnostic path; no batch timing)."""
     if gap <= 0:
@@ -167,8 +167,8 @@ class RealStorage:
             self.stats.add(FetchStats(1, len(data), dt))
         return data
 
-    def fetch_batch(self, requests: Sequence[Tuple[int, int]]
-                    ) -> Tuple[List[bytes], float]:
+    def fetch_batch(self, requests: Sequence[tuple[int, int]]
+                    ) -> tuple[list[bytes], float]:
         t0 = time.perf_counter()
         out = [os.pread(self._fd, s, o) for o, s in requests]
         dt = time.perf_counter() - t0
@@ -231,8 +231,8 @@ class SimulatedStorage:
                                       self.request_seconds(size)))
         return data
 
-    def fetch_batch(self, requests: Sequence[Tuple[int, int]]
-                    ) -> Tuple[List[bytes], float]:
+    def fetch_batch(self, requests: Sequence[tuple[int, int]]
+                    ) -> tuple[list[bytes], float]:
         out = [self._read(o, s) for o, s in requests]
         dt = self.batch_seconds([s for _, s in requests])
         with self._stats_lock:

@@ -3,7 +3,6 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Union
 
 import numpy as np
 
@@ -36,13 +35,13 @@ class StringColumn:
     def lengths(self) -> np.ndarray:
         return np.diff(self.offsets).astype(np.int64)
 
-    def to_pylist(self) -> List[bytes]:
+    def to_pylist(self) -> list[bytes]:
         pay = self.payload.tobytes()
         off = self.offsets
         return [pay[off[i]:off[i + 1]] for i in range(len(self))]
 
     @staticmethod
-    def from_pylist(values: List[Union[str, bytes]]) -> "StringColumn":
+    def from_pylist(values: list[str | bytes]) -> "StringColumn":
         bs = [v.encode("utf-8") if isinstance(v, str) else bytes(v)
               for v in values]
         lengths = np.fromiter((len(b) for b in bs), dtype=np.int64,
@@ -71,17 +70,17 @@ class StringColumn:
         return StringColumn(off - off[0], pay.copy())
 
 
-ColumnData = Union[np.ndarray, StringColumn]
+ColumnData = np.ndarray | StringColumn
 
 
 class Table:
     """An ordered mapping of column name -> data with a derived schema."""
 
-    def __init__(self, columns: Dict[str, ColumnData],
-                 schema: Optional[Schema] = None):
+    def __init__(self, columns: dict[str, ColumnData],
+                 schema: Schema | None = None):
         if not columns:
             raise ValueError("empty table")
-        self.columns: Dict[str, ColumnData] = {}
+        self.columns: dict[str, ColumnData] = {}
         n = None
         for name, col in columns.items():
             if isinstance(col, StringColumn):
@@ -120,7 +119,7 @@ class Table:
         return name in self.columns
 
     @property
-    def names(self) -> List[str]:
+    def names(self) -> list[str]:
         return list(self.columns)
 
     @property
@@ -128,13 +127,13 @@ class Table:
         """Logical raw size — the numerator of *effective bandwidth*."""
         return sum(int(c.nbytes) for c in self.columns.values())
 
-    def select(self, names: List[str]) -> "Table":
+    def select(self, names: list[str]) -> "Table":
         return Table({n: self.columns[n] for n in names},
                      Schema([self.schema.field(n) for n in names]))
 
     def slice(self, start: int, stop: int) -> "Table":
         stop = min(stop, self.num_rows)
-        cols: Dict[str, ColumnData] = {}
+        cols: dict[str, ColumnData] = {}
         for n, c in self.columns.items():
             cols[n] = (c.slice(start, stop) if isinstance(c, StringColumn)
                        else c[start:stop])
@@ -157,11 +156,11 @@ class Table:
         return True
 
     @staticmethod
-    def concat(tables: List["Table"]) -> "Table":
+    def concat(tables: list["Table"]) -> "Table":
         if not tables:
             raise ValueError("nothing to concat")
         names = tables[0].names
-        cols: Dict[str, ColumnData] = {}
+        cols: dict[str, ColumnData] = {}
         for n in names:
             parts = [t.columns[n] for t in tables]
             if isinstance(parts[0], StringColumn):

@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import concurrent.futures as cf
 import struct
-from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -22,12 +21,12 @@ from repro.core.schema import PhysicalType, Schema
 from repro.core.table import StringColumn, Table
 
 
-def _page_slices(n_rows: int, rows_per_page: int) -> List[Tuple[int, int]]:
+def _page_slices(n_rows: int, rows_per_page: int) -> list[tuple[int, int]]:
     return [(s, min(s + rows_per_page, n_rows))
             for s in range(0, n_rows, rows_per_page)]
 
 
-def _chunk_stats(values, physical: PhysicalType) -> Optional[dict]:
+def _chunk_stats(values, physical: PhysicalType) -> dict | None:
     if isinstance(values, StringColumn) or values.shape[0] == 0:
         return None
     if physical == PhysicalType.BOOLEAN:
@@ -59,8 +58,8 @@ class TabFileWriter:
         self.threads = max(1, threads)
         self._f = None
         self._offset = 0
-        self._rg_metas: List[RowGroupMeta] = []
-        self._schema: Optional[Schema] = None
+        self._rg_metas: list[RowGroupMeta] = []
+        self._schema: Schema | None = None
         self._num_rows = 0
         self._logical_nbytes = 0
 
@@ -86,13 +85,13 @@ class TabFileWriter:
                 results = list(pool.map(_encode_one_chunk, jobs))
         else:
             results = [_encode_one_chunk(j) for j in jobs]
-        chunk_metas: List[ChunkMeta] = []
+        chunk_metas: list[ChunkMeta] = []
         for fld, (ce, codec, stored, stats) in zip(self._schema.fields,
                                                    results):
             uncomp_pages = list(ce.pages)
             if ce.dict_page is not None:
                 uncomp_pages = [ce.dict_page] + uncomp_pages
-            page_metas: List[PageMeta] = []
+            page_metas: list[PageMeta] = []
             for enc_page, stored_payload in zip(uncomp_pages, stored):
                 self._f.write(stored_payload)
                 extra = enc_page.extra
@@ -125,17 +124,10 @@ class TabFileWriter:
 
     def finish(self) -> FileMeta:
         assert self._f is not None
-        config = self.config
         meta = FileMeta(
             schema=self._schema, num_rows=self._num_rows,
             row_groups=self._rg_metas, logical_nbytes=self._logical_nbytes,
-            writer_config={
-                "rows_per_rg": config.rows_per_rg,
-                "target_pages_per_chunk": config.target_pages_per_chunk,
-                "encodings": config.encodings.value,
-                "codec": config.compression.codec,
-                "min_gain": config.compression.min_gain,
-            })
+            writer_config=self.config.fingerprint())
         footer = meta.to_json_bytes()
         self._f.write(footer)
         self._f.write(struct.pack("<Q", len(footer)))

@@ -19,7 +19,7 @@ import dataclasses
 import queue
 import threading
 from queue import Empty as _QueueEmpty, Full as _QueueFull
-from typing import Iterator, Optional, Tuple
+from collections.abc import Iterator
 
 import numpy as np
 
@@ -104,7 +104,7 @@ class TabLoader:
 
     # -- iteration ----------------------------------------------------------------
 
-    def next_batch(self) -> Tuple[np.ndarray, np.ndarray]:
+    def next_batch(self) -> tuple[np.ndarray, np.ndarray]:
         """(inputs, labels), each (batch_per_shard, seq_len) int32."""
         recs = []
         for _ in range(self.batch_per_shard):
@@ -117,7 +117,7 @@ class TabLoader:
         batch = np.stack(recs)
         return batch[:, :-1], batch[:, 1:]
 
-    def __iter__(self) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+    def __iter__(self) -> Iterator[tuple[np.ndarray, np.ndarray]]:
         while True:
             yield self.next_batch()
 

@@ -11,7 +11,6 @@ friendly, like real subword corpora) and carry a doc_id column
 from __future__ import annotations
 
 import os
-from typing import List
 
 import numpy as np
 

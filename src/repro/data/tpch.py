@@ -13,7 +13,7 @@ Dates are int32 days since 1992-01-01.
 from __future__ import annotations
 
 import os
-from typing import Dict, Iterator, Optional, Tuple
+from collections.abc import Iterator
 
 import numpy as np
 
@@ -80,7 +80,7 @@ def orders_schema(include_strings: bool = True) -> Schema:
 
 def _gen_orders_chunk(rng: np.random.Generator, key_start: int, n: int,
                       include_strings: bool) -> Table:
-    cols: Dict[str, object] = {
+    cols: dict[str, object] = {
         "o_orderkey": np.arange(key_start, key_start + n, dtype=np.int64),
         "o_custkey": rng.integers(1, 150_000, n).astype(np.int32),
         "o_orderstatus": rng.integers(0, 3, n).astype(np.int32),
@@ -107,7 +107,7 @@ def _gen_lineitem_chunk(rng: np.random.Generator, orders: Table,
         if n_orders else np.zeros(0, np.int32)
     qty = rng.integers(1, 51, n).astype(np.float32)
     ship = (odate + rng.integers(1, 122, n)).astype(np.int32)
-    cols: Dict[str, object] = {
+    cols: dict[str, object] = {
         "l_orderkey": okey.astype(np.int64),
         "l_partkey": rng.integers(1, 200_000, n).astype(np.int32),
         "l_suppkey": rng.integers(1, 10_000, n).astype(np.int32),
@@ -133,7 +133,7 @@ def _gen_lineitem_chunk(rng: np.random.Generator, orders: Table,
 
 def generate_tables(sf: float = 0.01, seed: int = 0,
                     include_strings: bool = True
-                    ) -> Tuple[Table, Table]:
+                    ) -> tuple[Table, Table]:
     """In-memory generation (small SFs — tests and CI)."""
     rng = np.random.default_rng(seed)
     n_orders = max(1, int(ORDERS_ROWS_PER_SF * sf))
@@ -145,7 +145,7 @@ def generate_tables(sf: float = 0.01, seed: int = 0,
 def write_tpch(out_dir: str, sf: float, config: FileConfig, seed: int = 0,
                include_strings: bool = True, threads: int = 4,
                chunk_orders: int = 250_000
-               ) -> Dict[str, FileMeta]:
+               ) -> dict[str, FileMeta]:
     """Streamed generation to ``out_dir/{lineitem,orders}.tab``."""
     os.makedirs(out_dir, exist_ok=True)
     rng = np.random.default_rng(seed)

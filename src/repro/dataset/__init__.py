@@ -1,0 +1,32 @@
+"""Dataset layer: partitioned multi-file catalogs over TabFiles.
+
+Real analytical systems never scan one file — they scan partitioned
+datasets of many files with heterogeneous configs, where file-level
+pruning and parallel multi-file scheduling dominate end-to-end latency.
+This package turns N single-file scans into one planned, pruned, sharded
+multi-file query (DESIGN.md §5):
+
+  catalog   Dataset + JSON manifest (per-fragment row counts, zone maps,
+            partition values, FileConfig fingerprints); builders
+  planner   DatasetScanPlan: partition + zone-map file pruning, locality
+            ordering of surviving fragments
+  executor  sharded execution through the shared ScanService with a
+            bounded fragment window; DatasetRunReport
+  compact   online compaction: small/misconfigured fragments rewritten
+            to the tuned config behind an atomic manifest swap
+"""
+
+from repro.dataset.catalog import (Dataset, FragmentInfo, Partitioning,
+                                   write_dataset)
+from repro.dataset.compact import (CompactionPlan, CompactionReport,
+                                   compact_dataset, plan_compaction)
+from repro.dataset.executor import DatasetRunReport, run_dataset_scan
+from repro.dataset.planner import DatasetScanPlan, plan_dataset_scan
+
+__all__ = [
+    "Dataset", "FragmentInfo", "Partitioning", "write_dataset",
+    "DatasetScanPlan", "plan_dataset_scan",
+    "DatasetRunReport", "run_dataset_scan",
+    "CompactionPlan", "CompactionReport", "plan_compaction",
+    "compact_dataset",
+]

@@ -1,0 +1,347 @@
+"""Dataset catalog: many TabFiles behind one JSON manifest.
+
+A *dataset* is a directory of TabFile fragments plus a ``manifest.json``
+recording, per fragment: row count, stored bytes, per-column min/max zone
+maps (merged from the fragment's row-group footers — no data scan), the
+partition-key value/range, and the ``FileConfig`` fingerprint the
+fragment was written under.  The manifest is the unit of atomicity: every
+mutation (append, compaction) builds the new fragment files first, then
+swaps the manifest with one ``os.replace`` — readers holding the old
+manifest keep a consistent view until the swap lands.
+
+Partitioning:
+
+  none    fragments are contiguous row slices (``fragments=N``)
+  range   rows are bucketed by equal-count quantiles of a numeric key
+          column; each fragment records its [lo, hi] key range, which the
+          planner prunes like a file-level zone map
+  hash    rows are bucketed by a multiplicative hash of the key; a query
+          with an equality predicate computes ``Partitioning.bucket_of``
+          and prunes every other bucket
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+from repro.core.config import FileConfig
+from repro.core.metadata import FileMeta
+from repro.core.reader import read_footer
+from repro.core.scan import Scanner, open_scanner
+from repro.core.storage import DEFAULT_COALESCE_GAP
+from repro.core.table import StringColumn, Table
+from repro.core.writer import write_table
+
+MANIFEST_NAME = "manifest.json"
+MANIFEST_VERSION = 1
+
+_HASH_MULT = np.uint64(0x9E3779B97F4A7C15)   # Fibonacci hashing constant
+
+
+@dataclasses.dataclass
+class Partitioning:
+    """How a dataset's rows map to fragments."""
+
+    kind: str = "none"            # "none" | "hash" | "range"
+    column: str | None = None
+    num_buckets: int | None = None   # hash only
+
+    def __post_init__(self) -> None:
+        if self.kind not in ("none", "hash", "range"):
+            raise ValueError(f"unknown partitioning kind {self.kind!r}")
+        if self.kind != "none" and not self.column:
+            raise ValueError(f"{self.kind} partitioning needs a column")
+
+    def bucket_of(self, values) -> np.ndarray:
+        """Hash bucket for each key value (the pruning contract for
+        equality predicates: a query computes the bucket of its literal
+        and skips every other fragment).  Numeric keys only."""
+        assert self.kind == "hash" and self.num_buckets
+        arr = np.asarray(values)
+        if arr.dtype.kind not in "iuf" or isinstance(values, StringColumn):
+            raise TypeError("hash partitioning needs a numeric key "
+                            f"column, got dtype {arr.dtype}")
+        v = arr.astype(np.int64).view(np.uint64)
+        mixed = (v * _HASH_MULT) >> np.uint64(33)
+        return (mixed % np.uint64(self.num_buckets)).astype(np.int64)
+
+    def to_json(self) -> dict:
+        return {"kind": self.kind, "column": self.column,
+                "num_buckets": self.num_buckets}
+
+    @staticmethod
+    def from_json(o: dict) -> "Partitioning":
+        return Partitioning(o.get("kind", "none"), o.get("column"),
+                            o.get("num_buckets"))
+
+
+@dataclasses.dataclass
+class FragmentInfo:
+    """One TabFile of the dataset, as the manifest records it."""
+
+    path: str                     # relative to the dataset root
+    num_rows: int
+    stored_bytes: int
+    logical_nbytes: int
+    column_stats: dict            # name -> {"min":…, "max":…}
+    partition: dict | None        # see Partitioning docstring shapes
+    config: dict                  # FileConfig.fingerprint() provenance
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(o: dict) -> "FragmentInfo":
+        return FragmentInfo(
+            path=o["path"], num_rows=o["num_rows"],
+            stored_bytes=o["stored_bytes"],
+            logical_nbytes=o.get("logical_nbytes", 0),
+            column_stats=o.get("column_stats", {}),
+            partition=o.get("partition"), config=o.get("config", {}))
+
+
+def file_column_stats(meta: FileMeta) -> dict:
+    """File-level zone maps: per-column min/max merged over the footer's
+    row-group chunk stats (columns without stats are omitted — absent
+    stats never prune, same as the row-group contract)."""
+    out: dict = {}
+    for rg in meta.row_groups:
+        for chunk in rg.columns:
+            if chunk.stats is None:
+                continue
+            cur = out.get(chunk.name)
+            if cur is None:
+                out[chunk.name] = dict(chunk.stats)
+            else:
+                cur["min"] = min(cur["min"], chunk.stats["min"])
+                cur["max"] = max(cur["max"], chunk.stats["max"])
+    return out
+
+
+def _fragment_from_meta(rel_path: str, meta: FileMeta,
+                        partition: dict | None) -> FragmentInfo:
+    return FragmentInfo(
+        path=rel_path, num_rows=meta.num_rows,
+        stored_bytes=meta.stored_bytes,
+        logical_nbytes=meta.logical_nbytes,
+        column_stats=file_column_stats(meta),
+        partition=partition, config=dict(meta.writer_config))
+
+
+class Dataset:
+    """A manifest-backed collection of TabFile fragments."""
+
+    def __init__(self, root: str, partitioning: Partitioning | None = None,
+                 fragments: list[FragmentInfo] | None = None,
+                 generation: int = 0):
+        self.root = root
+        self.partitioning = partitioning or Partitioning()
+        self.fragments: list[FragmentInfo] = list(fragments or [])
+        self.generation = generation   # bumped by every manifest swap
+
+    # -- identity ----------------------------------------------------------
+
+    @property
+    def manifest_path(self) -> str:
+        return os.path.join(self.root, MANIFEST_NAME)
+
+    @property
+    def num_rows(self) -> int:
+        return sum(f.num_rows for f in self.fragments)
+
+    @property
+    def stored_bytes(self) -> int:
+        return sum(f.stored_bytes for f in self.fragments)
+
+    def fragment_path(self, frag: FragmentInfo) -> str:
+        return os.path.join(self.root, frag.path)
+
+    def describe(self) -> dict:
+        return {
+            "root": self.root,
+            "n_fragments": len(self.fragments),
+            "num_rows": self.num_rows,
+            "stored_bytes": self.stored_bytes,
+            "partitioning": self.partitioning.to_json(),
+            "generation": self.generation,
+        }
+
+    # -- manifest I/O ------------------------------------------------------
+
+    def to_json(self) -> dict:
+        return {
+            "version": MANIFEST_VERSION,
+            "generation": self.generation,
+            "partitioning": self.partitioning.to_json(),
+            "fragments": [f.to_json() for f in self.fragments],
+        }
+
+    def save(self) -> None:
+        """Atomic manifest swap: the new manifest is fully written to a
+        temp file in the same directory, then ``os.replace``d over the
+        live one — a concurrent reader sees either the old manifest or
+        the new one, never a torn write."""
+        os.makedirs(self.root, exist_ok=True)
+        tmp = self.manifest_path + f".tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump(self.to_json(), f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self.manifest_path)
+
+    @staticmethod
+    def load(root: str) -> "Dataset":
+        with open(os.path.join(root, MANIFEST_NAME)) as f:
+            o = json.load(f)
+        if o.get("version") != MANIFEST_VERSION:
+            raise ValueError(f"unsupported manifest version "
+                             f"{o.get('version')!r}")
+        return Dataset(
+            root=root,
+            partitioning=Partitioning.from_json(o.get("partitioning", {})),
+            fragments=[FragmentInfo.from_json(x)
+                       for x in o.get("fragments", [])],
+            generation=o.get("generation", 0))
+
+    # -- builders ----------------------------------------------------------
+
+    def next_fragment_name(self) -> str:
+        """Collision-free fragment file name: generation-tagged so
+        compaction's replacement files never overwrite live ones."""
+        taken = {f.path for f in self.fragments}
+        k = len(self.fragments)
+        while True:
+            name = f"part-{k:05d}.g{self.generation}.tab"
+            if name not in taken and not os.path.exists(
+                    os.path.join(self.root, name)):
+                return name
+            k += 1
+
+    def append_table(self, table: Table, config: FileConfig,
+                     partition: dict | None = None,
+                     threads: int = 1) -> FragmentInfo:
+        """Write ``table`` as one new fragment and swap the manifest.
+        The fragment file lands fully before the manifest references it,
+        so a crash between the two leaves the dataset unchanged (plus one
+        unreferenced file)."""
+        os.makedirs(self.root, exist_ok=True)
+        name = self.next_fragment_name()
+        meta = write_table(table, os.path.join(self.root, name), config,
+                           threads=threads)
+        frag = _fragment_from_meta(name, meta, partition)
+        self.fragments.append(frag)
+        self.generation += 1
+        self.save()
+        return frag
+
+    def adopt_file(self, path: str,
+                   partition: dict | None = None) -> FragmentInfo:
+        """Register an existing TabFile (inside the dataset root) as a
+        fragment, reading its footer for stats and provenance."""
+        rel = os.path.relpath(path, self.root)
+        frag = _fragment_from_meta(rel, read_footer(path), partition)
+        self.fragments.append(frag)
+        self.generation += 1
+        self.save()
+        return frag
+
+    # -- scan access -------------------------------------------------------
+
+    def open_fragment(self, frag: FragmentInfo | int,
+                      columns: list[str] | None = None,
+                      backend: str = "real", n_lanes: int = 1,
+                      decode_backend: str = "pallas",
+                      lane_bandwidth: float = 7e9, latency: float = 20e-6,
+                      use_plan: bool = True,
+                      coalesce_gap: int = DEFAULT_COALESCE_GAP) -> Scanner:
+        if isinstance(frag, int):
+            frag = self.fragments[frag]
+        return open_scanner(self.fragment_path(frag), columns=columns,
+                            backend=backend, n_lanes=n_lanes,
+                            decode_backend=decode_backend,
+                            lane_bandwidth=lane_bandwidth, latency=latency,
+                            use_plan=use_plan, coalesce_gap=coalesce_gap)
+
+
+# ---------------------------------------------------------------------------
+# dataset writer
+# ---------------------------------------------------------------------------
+
+
+def _take(table: Table, idx: np.ndarray) -> Table:
+    cols = {}
+    for name, col in table.columns.items():
+        cols[name] = (col.take(idx) if isinstance(col, StringColumn)
+                      else col[idx])
+    return Table(cols, table.schema)
+
+
+def _range_buckets(keys: np.ndarray, n: int) -> list[np.ndarray]:
+    """Equal-count range buckets: ascending key order split into n runs
+    (stable within a run, so row order inside a fragment is the sort
+    order — the locality the planner's fragment ordering preserves)."""
+    order = np.argsort(keys, kind="stable")
+    return [chunk for chunk in np.array_split(order, n)
+            if chunk.shape[0] > 0]
+
+
+def write_dataset(table: Table, root: str, config: FileConfig,
+                  partition_by: str | None = None, how: str = "range",
+                  fragments: int = 16, threads: int = 1) -> Dataset:
+    """Partition ``table`` into a new dataset at ``root``.
+
+    ``partition_by=None`` slices rows contiguously into ``fragments``
+    files.  ``how="range"`` buckets by equal-count quantiles of the key
+    (each fragment records its [lo, hi] key range); ``how="hash"``
+    buckets by ``Partitioning.bucket_of`` (each fragment records its
+    bucket id).  One manifest swap publishes all fragments at once.
+    """
+    os.makedirs(root, exist_ok=True)
+    n_frags = max(1, int(fragments))
+    if partition_by is not None and isinstance(table[partition_by],
+                                               StringColumn):
+        raise TypeError("partitioning needs a numeric key column; "
+                        f"{partition_by!r} is a string column")
+    if partition_by is None:
+        part = Partitioning()
+        per = max(1, -(-table.num_rows // n_frags))
+        parts: list[tuple[Table, dict | None]] = [
+            (table.slice(s, s + per), None)
+            for s in range(0, table.num_rows, per)]
+    elif how == "range":
+        part = Partitioning("range", partition_by)
+        keys = np.asarray(table[partition_by])
+        parts = []
+        for idx in _range_buckets(keys, n_frags):
+            sub = _take(table, idx)
+            ks = np.asarray(sub[partition_by])
+            parts.append((sub, {
+                "kind": "range", "column": partition_by,
+                "lo": ks.min().item(), "hi": ks.max().item()}))
+    elif how == "hash":
+        part = Partitioning("hash", partition_by, num_buckets=n_frags)
+        buckets = part.bucket_of(table[partition_by])
+        parts = []
+        for b in range(n_frags):
+            idx = np.flatnonzero(buckets == b)
+            if idx.shape[0] == 0:
+                continue
+            parts.append((_take(table, idx), {
+                "kind": "hash", "column": partition_by, "bucket": b,
+                "buckets": n_frags}))
+    else:
+        raise ValueError(f"unknown partitioning how={how!r}")
+
+    ds = Dataset(root, part)
+    for sub, pinfo in parts:
+        name = ds.next_fragment_name()
+        meta = write_table(sub, os.path.join(root, name), config,
+                           threads=threads)
+        ds.fragments.append(_fragment_from_meta(name, meta, pinfo))
+    ds.generation += 1
+    ds.save()
+    return ds

@@ -1,0 +1,269 @@
+"""Online dataset compaction: small/misconfigured fragments → tuned files.
+
+A dataset accumulates fragments written under whatever config the
+producer used (streaming appends are often tiny, CPU-era defaults are
+common).  Compaction detects fragments that are *small* (fewer rows than
+a fraction of the target row-group size — their scans are all pipeline
+head/tail) or *misconfigured* (footer ``FileConfig`` fingerprint differs
+from the target), merges mergeable neighbors, and rewrites them to the
+GPU-aware target config through the streaming rewriter (bounded memory).
+The target config comes from the operator or from ``core/autotune`` on a
+sample of the data.
+
+**Atomicity contract**: all replacement fragment files are fully written
+*before* the manifest is touched, then one ``Dataset.save()`` —
+``os.replace`` of the manifest — publishes them.  A reader (or a crash)
+at any point before the swap sees the old manifest over the old files,
+both still intact; old files are unlinked only after the swap lands.
+A failure mid-rewrite deletes the partial replacement files and leaves
+the dataset exactly as it was.
+
+Scope of "online": scans already *running* at swap time finish
+correctly — their scanners hold open fds, which POSIX unlink does not
+invalidate.  The unguarded window is a reader that loaded the old
+manifest but has not yet opened a replaced fragment: its open raises
+``FileNotFoundError`` after the swap.  Single-process serving (the
+ScanService model) never hits this mid-scan; multi-process deployments
+should pass ``keep_old=True`` and garbage-collect old generations once
+their readers drain.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+from repro.core.autotune import autotune
+from repro.core.config import FileConfig
+from repro.core.metadata import FileMeta
+from repro.core.reader import TabFileReader
+from repro.core.schema import Schema
+from repro.core.table import Table
+from repro.core.writer import TabFileWriter
+from repro.dataset.catalog import (Dataset, FragmentInfo,
+                                   _fragment_from_meta)
+
+
+@dataclasses.dataclass
+class CompactionPlan:
+    target_config: FileConfig
+    groups: list[list[int]]        # manifest indices merged per output
+    reasons: dict[int, str]        # candidate index -> why it was picked
+    notes: list[str] = dataclasses.field(default_factory=list)
+
+    @property
+    def n_inputs(self) -> int:
+        return sum(len(g) for g in self.groups)
+
+    @property
+    def n_outputs(self) -> int:
+        return len(self.groups)
+
+
+@dataclasses.dataclass
+class CompactionReport:
+    seconds: float
+    n_inputs: int
+    n_outputs: int
+    rows: int
+    src_stored_bytes: int
+    dst_stored_bytes: int
+    target_fingerprint: dict
+    reasons: dict[int, str]
+
+    @property
+    def size_ratio(self) -> float:
+        return self.dst_stored_bytes / max(1, self.src_stored_bytes)
+
+
+def _sample_table(dataset: Dataset, rows: int = 100_000) -> Table:
+    """A representative sample for the autotuner: the first row group(s)
+    of the dataset's largest fragment."""
+    frag = max(dataset.fragments, key=lambda f: f.num_rows)
+    reader = TabFileReader(dataset.fragment_path(frag))
+    tbl = reader.read_table(row_groups=[0])
+    return tbl.slice(0, min(rows, tbl.num_rows))
+
+
+def _partition_group_key(frag: FragmentInfo):
+    """Fragments may merge only within this identity: hash buckets must
+    never mix (bucket routing would break); range/unpartitioned
+    neighbors merge freely (their zone maps union)."""
+    p = frag.partition
+    if p is None:
+        return ("none",)
+    if p.get("kind") == "hash":
+        return ("hash", p.get("column"), p.get("bucket"))
+    return (p.get("kind"), p.get("column"))
+
+
+def _merged_partition(frags: list[FragmentInfo]) -> dict | None:
+    parts = [f.partition for f in frags]
+    if parts[0] is None:
+        return None
+    if parts[0].get("kind") == "range":
+        return {"kind": "range", "column": parts[0]["column"],
+                "lo": min(p["lo"] for p in parts),
+                "hi": max(p["hi"] for p in parts)}
+    return dict(parts[0])
+
+
+def plan_compaction(dataset: Dataset,
+                    target_config: FileConfig | None = None,
+                    small_fraction: float = 0.5,
+                    max_group_rows: int | None = None,
+                    sample_rows: int = 100_000,
+                    autotune_kw: dict | None = None) -> CompactionPlan:
+    """Decide what to rewrite.  A fragment is a candidate when its footer
+    config fingerprint differs from the target's, or when it holds fewer
+    than ``small_fraction * target.rows_per_rg`` rows.  Consecutive
+    candidates with a compatible partition identity merge into one
+    output, capped at ``max_group_rows`` (default 4× the target row-group
+    size) so compaction never collapses a partitioned dataset into one
+    unprunable file; each group is one streamed rewrite."""
+    notes = []
+    if target_config is None:
+        tune = autotune(_sample_table(dataset, sample_rows),
+                        **(autotune_kw or {}))
+        target_config = tune.config
+        notes.extend(tune.notes)
+    fp = target_config.fingerprint()
+    small_rows = int(small_fraction * target_config.rows_per_rg)
+    if max_group_rows is None:
+        max_group_rows = 4 * target_config.rows_per_rg
+
+    reasons: dict[int, str] = {}
+    for i, frag in enumerate(dataset.fragments):
+        if frag.config != fp:
+            reasons[i] = "misconfigured"
+        elif frag.num_rows < small_rows:
+            reasons[i] = "small"
+
+    groups: list[list[int]] = []
+    group_rows = 0
+    prev_key = None
+    for i in sorted(reasons):
+        key = _partition_group_key(dataset.fragments[i])
+        rows = dataset.fragments[i].num_rows
+        if (groups and prev_key == key and groups[-1][-1] == i - 1
+                and group_rows + rows <= max_group_rows):
+            groups[-1].append(i)
+            group_rows += rows
+        else:
+            groups.append([i])
+            group_rows = rows
+        prev_key = key
+    return CompactionPlan(target_config=target_config, groups=groups,
+                          reasons=reasons, notes=notes)
+
+
+def _merge_rewrite(paths: list[str], dst: str, config: FileConfig,
+                   threads: int) -> FileMeta:
+    """Stream several source fragments through one writer, re-bucketing
+    rows to the target ``rows_per_rg`` at bounded memory (the multi-file
+    generalization of core/rewriter.rewrite_file)."""
+    readers = [TabFileReader(p) for p in paths]
+    names = readers[0].meta.schema.names
+    schema = Schema([readers[0].meta.schema.field(n) for n in names])
+    writer = TabFileWriter(dst, config, threads=threads).begin(schema)
+    pending: list[Table] = []
+    pending_rows = 0
+
+    def flush(final: bool) -> None:
+        nonlocal pending, pending_rows
+        while pending_rows >= config.rows_per_rg or (final and pending_rows):
+            buf = pending[0] if len(pending) == 1 else Table.concat(pending)
+            n = min(config.rows_per_rg, buf.num_rows)
+            writer.write_row_group(buf.slice(0, n))
+            rest = buf.slice(n, buf.num_rows)
+            pending = [rest] if rest.num_rows > 0 else []
+            pending_rows = rest.num_rows
+
+    for reader in readers:
+        for rg_idx in range(len(reader.meta.row_groups)):
+            tbl = reader.read_table(columns=names, row_groups=[rg_idx])
+            pending.append(tbl)
+            pending_rows += tbl.num_rows
+            flush(final=False)
+    flush(final=True)
+    return writer.finish()
+
+
+def compact_dataset(dataset: Dataset,
+                    plan: CompactionPlan | None = None,
+                    target_config: FileConfig | None = None,
+                    threads: int = 4, keep_old: bool = False
+                    ) -> tuple[Dataset, CompactionReport]:
+    """Execute a compaction plan against ``dataset`` (mutated in place and
+    returned).  New fragment files are written first; one atomic manifest
+    swap publishes them; old files are unlinked after (unless
+    ``keep_old``)."""
+    t0 = time.perf_counter()
+    if plan is None:
+        plan = plan_compaction(dataset, target_config=target_config)
+    if not plan.groups:
+        report = CompactionReport(
+            seconds=time.perf_counter() - t0, n_inputs=0, n_outputs=0,
+            rows=0, src_stored_bytes=0, dst_stored_bytes=0,
+            target_fingerprint=plan.target_config.fingerprint(),
+            reasons={})
+        return dataset, report
+
+    gen = dataset.generation + 1
+    new_paths: list[str] = []
+    replacements: dict[int, FragmentInfo] = {}   # first index -> new frag
+    replaced: set[int] = set()
+    try:
+        for k, group in enumerate(plan.groups):
+            frags = [dataset.fragments[i] for i in group]
+            name = f"part-{k:05d}.g{gen}.tab"
+            dst = os.path.join(dataset.root, name)
+            srcs = [dataset.fragment_path(f) for f in frags]
+            # register dst BEFORE writing so a mid-write failure unlinks
+            # the partial output too, not just fully-written predecessors
+            new_paths.append(dst)
+            meta = _merge_rewrite(srcs, dst, plan.target_config,
+                                  threads=threads)
+            replacements[group[0]] = _fragment_from_meta(
+                name, meta, _merged_partition(frags))
+            replaced.update(group)
+    except BaseException:
+        # leave the dataset exactly as it was: manifest untouched, the
+        # partially-written replacement files removed
+        for p in new_paths:
+            try:
+                os.unlink(p)
+            except OSError:
+                pass
+        raise
+
+    old_files = [dataset.fragment_path(dataset.fragments[i])
+                 for i in sorted(replaced)]
+    src_stored = sum(dataset.fragments[i].stored_bytes
+                     for i in sorted(replaced))
+    rows = sum(dataset.fragments[i].num_rows for i in sorted(replaced))
+    new_fragments: list[FragmentInfo] = []
+    for i, frag in enumerate(dataset.fragments):
+        if i in replacements:
+            new_fragments.append(replacements[i])
+        elif i not in replaced:
+            new_fragments.append(frag)
+    dataset.fragments = new_fragments
+    dataset.generation = gen
+    dataset.save()                      # the atomic publish point
+    if not keep_old:
+        for p in old_files:
+            try:
+                os.unlink(p)
+            except OSError:
+                pass
+    report = CompactionReport(
+        seconds=time.perf_counter() - t0,
+        n_inputs=plan.n_inputs, n_outputs=plan.n_outputs, rows=rows,
+        src_stored_bytes=src_stored,
+        dst_stored_bytes=sum(f.stored_bytes
+                             for f in replacements.values()),
+        target_fingerprint=plan.target_config.fingerprint(),
+        reasons=dict(plan.reasons))
+    return dataset, report

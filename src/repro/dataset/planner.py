@@ -1,0 +1,111 @@
+"""Dataset scan planning: file-level pruning + locality ordering.
+
+Pruning reuses the zone-map stats contract of ``core/query.py`` /
+``TabFileReader.plan_row_groups`` unchanged: a predicate is a callable
+``(column_name, {"min":…, "max":…}) -> keep`` (e.g.
+``q6_rg_stats_predicate``).  The planner applies it one level up, to each
+fragment's *file-level* zone maps from the manifest, so a fragment whose
+whole key range misses the predicate is never opened, fetched, or
+planned — and the same callable then prunes row groups *inside* each
+surviving fragment during the scan.  Range-partition bounds are folded
+into the same contract (the partition [lo, hi] is consulted as a
+synthetic ``{"min": lo, "max": hi}`` stat for the partition column), so
+one predicate drives partition pruning and zone-map pruning alike.
+
+Surviving fragments are ordered for locality: range partitions ascend by
+key range (consumers see keys roughly sorted; adjacent fragments were
+written adjacently), everything else keeps manifest (write) order.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections.abc import Callable
+
+from repro.dataset.catalog import Dataset, FragmentInfo
+
+PredicateStats = Callable[[str, dict], bool]
+PartitionFilter = Callable[[dict | None], bool]
+
+
+@dataclasses.dataclass
+class DatasetScanPlan:
+    """Outcome of planning one dataset scan."""
+
+    dataset: Dataset
+    columns: list[str] | None
+    fragments: list[FragmentInfo]      # surviving, locality-ordered
+    indices: list[int]                 # manifest index of each survivor
+    pruned_partition: int = 0          # dropped by partition value/range
+    pruned_stats: int = 0              # dropped by file-level zone maps
+    predicate_stats: PredicateStats | None = None
+
+    @property
+    def files_total(self) -> int:
+        return len(self.dataset.fragments)
+
+    @property
+    def files_scanned(self) -> int:
+        return len(self.fragments)
+
+    @property
+    def files_pruned(self) -> int:
+        return self.pruned_partition + self.pruned_stats
+
+    def summary(self) -> str:
+        return (f"files={self.files_total};scanned={self.files_scanned};"
+                f"pruned_partition={self.pruned_partition};"
+                f"pruned_stats={self.pruned_stats}")
+
+
+def _partition_as_stats(partition: dict | None) -> tuple[str, dict] | None:
+    """A range partition's bounds as a synthetic zone-map stat."""
+    if partition and partition.get("kind") == "range":
+        return partition["column"], {"min": partition["lo"],
+                                     "max": partition["hi"]}
+    return None
+
+
+def plan_dataset_scan(dataset: Dataset,
+                      columns: list[str] | None = None,
+                      predicate_stats: PredicateStats | None = None,
+                      partition_filter: PartitionFilter | None = None
+                      ) -> DatasetScanPlan:
+    """Prune the manifest down to the fragments a scan must touch.
+
+    ``predicate_stats`` is the shared zone-map contract (applied to
+    range-partition bounds, then to every recorded file-level column
+    stat); ``partition_filter`` is an optional direct test on the raw
+    partition dict (e.g. hash-bucket equality: keep only
+    ``part["bucket"] == Partitioning.bucket_of(literal)``).  Both must be
+    conservative — keep on uncertainty — exactly like row-group stats.
+    """
+    survivors: list[tuple[int, FragmentInfo]] = []
+    pruned_partition = 0
+    pruned_stats = 0
+    for i, frag in enumerate(dataset.fragments):
+        if partition_filter is not None and not partition_filter(
+                frag.partition):
+            pruned_partition += 1
+            continue
+        part_stat = _partition_as_stats(frag.partition)
+        if (predicate_stats is not None and part_stat is not None
+                and not predicate_stats(*part_stat)):
+            pruned_partition += 1
+            continue
+        if predicate_stats is not None and not all(
+                predicate_stats(name, stats)
+                for name, stats in frag.column_stats.items()):
+            pruned_stats += 1
+            continue
+        survivors.append((i, frag))
+
+    if dataset.partitioning.kind == "range":
+        survivors.sort(key=lambda t: (t[1].partition or {}).get(
+            "lo", float("-inf")))
+    return DatasetScanPlan(
+        dataset=dataset, columns=columns,
+        fragments=[f for _, f in survivors],
+        indices=[i for i, _ in survivors],
+        pruned_partition=pruned_partition, pruned_stats=pruned_stats,
+        predicate_stats=predicate_stats)

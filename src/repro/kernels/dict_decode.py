@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import functools
 import threading
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -144,7 +143,7 @@ class CachedDictionary:
 _DICT_CACHE = ByteCappedLRU(64 * 1024 * 1024, lambda e: e.nbytes)
 
 
-def dict_cache_get(key: tuple) -> Optional[CachedDictionary]:
+def dict_cache_get(key: tuple) -> CachedDictionary | None:
     return _DICT_CACHE.get(key)
 
 

@@ -16,7 +16,7 @@ Dispatch rules (documented fallbacks, DESIGN.md §2):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from collections.abc import Sequence
 
 import jax.numpy as jnp
 import numpy as np
@@ -127,7 +127,7 @@ def decode_bss_group(payload: np.ndarray, stride: int) -> jnp.ndarray:
 
 
 def delta_group_arrays(mans: Sequence[dict], payloads: Sequence[bytes],
-                       n_blocks: int) -> Tuple[np.ndarray, ...]:
+                       n_blocks: int) -> tuple[np.ndarray, ...]:
     """Assemble the batched host arrays for a DELTA group.  ``n_blocks`` may
     exceed any page's true block count (class padding): padded miniblocks get
     width 0 / min_delta 0, which the kernel decodes as constant carry —
@@ -143,8 +143,8 @@ def delta_group_arrays(mans: Sequence[dict], payloads: Sequence[bytes],
     return payload, mb_off, mb_width, min_delta, first
 
 
-def rle_group_arrays(pages_runs: Sequence[Tuple[np.ndarray, np.ndarray]]
-                     ) -> Tuple[np.ndarray, np.ndarray]:
+def rle_group_arrays(pages_runs: Sequence[tuple[np.ndarray, np.ndarray]]
+                     ) -> tuple[np.ndarray, np.ndarray]:
     """(vals, counts) per page → padded (n_pages, R) int32 pair."""
     r_max = max(max((v.shape[0] for v, _ in pages_runs), default=1), 1)
     vals = _stack_pad([v for v, _ in pages_runs], r_max, np.int32)
@@ -256,8 +256,8 @@ _DEVICE_DECODERS = {
 # cascade decompression on device
 # ---------------------------------------------------------------------------
 
-def cascade_decompress_pages_grouped(raw_pages: List[Tuple[PageMeta, bytes]]
-                                     ) -> List[bytes]:
+def cascade_decompress_pages_grouped(raw_pages: list[tuple[PageMeta, bytes]]
+                                     ) -> list[bytes]:
     """One device launch decompressing pages that share a (value_width,
     count_width) class — the caller grouped them (either the DecodePlan's
     plan-time (vw, cw) groups or cascade_decompress_device's execute-time
@@ -280,8 +280,8 @@ def cascade_decompress_pages_grouped(raw_pages: List[Tuple[PageMeta, bytes]]
             for row, m, (pm, _) in zip(dec, mans, raw_pages)]
 
 
-def cascade_decompress_device(raw_pages: List[Tuple[PageMeta, bytes]]
-                              ) -> List[Tuple[PageMeta, bytes]]:
+def cascade_decompress_device(raw_pages: list[tuple[PageMeta, bytes]]
+                              ) -> list[tuple[PageMeta, bytes]]:
     """Decompress CASCADE page payloads on-device; returns bytes again so the
     per-encoding decoders above can run unchanged (in a fused deployment the
     words would stay resident in HBM).  Pages are grouped by their manifest
@@ -306,7 +306,7 @@ def cascade_decompress_device(raw_pages: List[Tuple[PageMeta, bytes]]
 
 def decode_chunk(chunk: ChunkMeta, field: Field, raw: bytes,
                  use_kernels: bool = True,
-                 payloads: Optional[Dict] = None) -> DecodeResult:
+                 payloads: dict | None = None) -> DecodeResult:
     """Decode one column chunk from its raw stored bytes.
 
     ``raw`` covers chunk.byte_range (dict page + data pages, possibly

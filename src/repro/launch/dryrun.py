@@ -22,7 +22,6 @@ import json              # noqa: E402
 import subprocess        # noqa: E402
 import sys               # noqa: E402
 import time              # noqa: E402
-from typing import Dict, Optional  # noqa: E402
 
 import jax               # noqa: E402
 import jax.numpy as jnp  # noqa: E402
@@ -131,9 +130,9 @@ def _prod(it):
 # ---------------------------------------------------------------------------
 
 def lower_cell(arch_name: str, shape_name: str, multi_pod: bool,
-               opt_overrides: Optional[dict] = None,
-               cfg_overrides: Optional[dict] = None,
-               arch_overrides: Optional[dict] = None):
+               opt_overrides: dict | None = None,
+               cfg_overrides: dict | None = None,
+               arch_overrides: dict | None = None):
     arch = get_arch(arch_name)
     if arch_overrides:
         arch = dataclasses.replace(arch, **arch_overrides)
@@ -215,14 +214,14 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
              out_dir: str = DEFAULT_OUT, collect_hlo: bool = True,
              opt_overrides=None, cfg_overrides=None,
              variant: str = "baseline",
-             arch_overrides: Optional[dict] = None) -> Dict:
+             arch_overrides: dict | None = None) -> dict:
     t0 = time.time()
     mesh_name = "multi_pod" if multi_pod else "single_pod"
     arch = get_arch(arch_name)
     if arch_overrides:
         arch = dataclasses.replace(arch, **arch_overrides)
     reason = skip_reason(arch, shape_name)
-    rec: Dict = {
+    rec: dict = {
         "arch": arch_name, "shape": shape_name, "mesh": mesh_name,
         "variant": variant,
     }
@@ -288,7 +287,7 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
     return rec
 
 
-def _write(rec: Dict, out_dir: str) -> None:
+def _write(rec: dict, out_dir: str) -> None:
     d = os.path.join(out_dir, rec["mesh"])
     os.makedirs(d, exist_ok=True)
     suffix = "" if rec.get("variant", "baseline") == "baseline" \

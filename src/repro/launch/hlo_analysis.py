@@ -28,7 +28,6 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, List, Optional, Tuple
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
@@ -76,8 +75,8 @@ class Op:
 class HloReport:
     dot_flops: float
     memory_bytes: float
-    bytes_by_kind: Dict[str, int]
-    count_by_kind: Dict[str, int]
+    bytes_by_kind: dict[str, int]
+    count_by_kind: dict[str, int]
     exact_loop_multipliers: bool
     n_computations: int
 
@@ -86,7 +85,7 @@ class HloReport:
         return sum(self.bytes_by_kind.values())
 
 
-def _shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+def _shape_dims(type_str: str) -> list[tuple[str, list[int]]]:
     out = []
     for dtype, dims in _SHAPE_RE.findall(type_str):
         if dtype not in _DTYPE_BYTES:
@@ -106,12 +105,12 @@ def _shape_bytes(type_str: str) -> int:
     return total
 
 
-def _split_computations(hlo: str) -> Tuple[Dict[str, List[Op]],
-                                           Optional[str]]:
-    comps: Dict[str, List[Op]] = {}
-    cur: Optional[str] = None
-    entry: Optional[str] = None
-    ops: List[Op] = []
+def _split_computations(hlo: str) -> tuple[dict[str, list[Op]],
+                                           str | None]:
+    comps: dict[str, list[Op]] = {}
+    cur: str | None = None
+    entry: str | None = None
+    ops: list[Op] = []
     hlo = _COMMENT_RE.sub("", hlo)
     for line in hlo.splitlines():
         s = line.strip()
@@ -142,10 +141,10 @@ def _split_computations(hlo: str) -> Tuple[Dict[str, List[Op]],
     return comps, entry
 
 
-def _trip_count(cond_ops: List[Op]) -> Optional[int]:
+def _trip_count(cond_ops: list[Op]) -> int | None:
     """Fallback when backend_config lacks known_trip_count: the canonical
     scan condition compares the counter against a constant bound."""
-    consts: List[int] = []
+    consts: list[int] = []
     for op in cond_ops:
         if op.opcode == "constant":
             cm = re.match(r"^(\d+)\)", op.rest)
@@ -159,7 +158,7 @@ _PARAM_IDX_RE = re.compile(r"^(\d+)\)")
 _CALLSITE_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
 
 
-def _fusion_param_charges(fops: List[Op]) -> Dict[int, int]:
+def _fusion_param_charges(fops: list[Op]) -> dict[int, int]:
     """Per-parameter byte charges for a fusion computation.
 
     A parameter consumed only by dynamic-slice ops is charged the sliced
@@ -167,7 +166,7 @@ def _fusion_param_charges(fops: List[Op]) -> Dict[int, int]:
     dynamic-update-slice is in-place (charged 0).  Everything else is
     charged its full size.
     """
-    charges: Dict[int, int] = {}
+    charges: dict[int, int] = {}
     params = {}
     for fop in fops:
         if fop.opcode == "parameter":
@@ -192,7 +191,7 @@ def _fusion_param_charges(fops: List[Op]) -> Dict[int, int]:
     return charges
 
 
-def _fusion_bytes(op: Op, fops: List[Op], symbols: Dict[str, str]) -> int:
+def _fusion_bytes(op: Op, fops: list[Op], symbols: dict[str, str]) -> int:
     """Traffic of one fusion call site under slice-aware semantics."""
     charges = _fusion_param_charges(fops)
     fsymbols = {f.name: f.type_str for f in fops}
@@ -218,9 +217,9 @@ def analyze_hlo(hlo: str) -> HloReport:
 
     # edges: parent -> (callee, multiplier_kind)
     sub_called = set()       # fusion/reducer computations: excluded
-    loop_trips: Dict[Tuple[str, str], int] = {}
-    cond_of: Dict[Tuple[str, str], str] = {}
-    edges: Dict[str, List[Tuple[str, int]]] = {name: [] for name in comps}
+    loop_trips: dict[tuple[str, str], int] = {}
+    cond_of: dict[tuple[str, str], str] = {}
+    edges: dict[str, list[tuple[str, int]]] = {name: [] for name in comps}
     for parent, ops in comps.items():
         for op in ops:
             for m in _CALLS_RE.finditer(op.rest):
@@ -250,7 +249,7 @@ def analyze_hlo(hlo: str) -> HloReport:
     else:
         called = {c for es in edges.values() for c, _ in es} | sub_called
         roots = [c for c in comps if c not in called]
-    mult: Dict[str, int] = {}
+    mult: dict[str, int] = {}
 
     def visit(name: str, m: int):
         if name in mult and mult[name] >= m:
@@ -336,8 +335,8 @@ def analyze_hlo(hlo: str) -> HloReport:
 # Backwards-compatible wrapper used by dryrun.py
 @dataclasses.dataclass
 class CollectiveReport:
-    bytes_by_kind: Dict[str, int]
-    count_by_kind: Dict[str, int]
+    bytes_by_kind: dict[str, int]
+    count_by_kind: dict[str, int]
     exact_loop_multipliers: bool
 
     @property

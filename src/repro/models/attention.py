@@ -15,7 +15,6 @@ Caches:
 from __future__ import annotations
 
 import functools
-from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +26,7 @@ from repro.parallel.sharding import constrain
 NEG_INF = -1e30
 
 
-def init_attn_params(rng, cfg: ModelConfig, dtype) -> Dict:
+def init_attn_params(rng, cfg: ModelConfig, dtype) -> dict:
     d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
     k1, k2, k3, k4 = jax.random.split(rng, 4)
     s = d ** -0.5
@@ -39,7 +38,7 @@ def init_attn_params(rng, cfg: ModelConfig, dtype) -> Dict:
     }
 
 
-def _project_qkv(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
+def _project_qkv(p: dict, x: jnp.ndarray, cfg: ModelConfig,
                  positions: jnp.ndarray):
     b, s, _ = x.shape
     h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
@@ -59,7 +58,7 @@ def blockwise_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                         causal: bool = True, window: int = 0,
                         cap: float = 0.0, q_offset: int = 0,
                         q_block: int = 512, kv_block: int = 1024,
-                        scale: Optional[float] = None,
+                        scale: float | None = None,
                         preferred: bool = False) -> jnp.ndarray:
     """q (B,Sq,H,dh), k (B,Skv,KV,dh), v (B,Skv,KV,dv) → (B,Sq,H,dv).
 
@@ -132,7 +131,7 @@ def blockwise_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     return out[:, :sq].astype(q.dtype)
 
 
-def attn_train(p: Dict, x: jnp.ndarray, positions: jnp.ndarray,
+def attn_train(p: dict, x: jnp.ndarray, positions: jnp.ndarray,
                cfg: ModelConfig, *, window: int = 0,
                bidirectional: bool = False) -> jnp.ndarray:
     b, s, _ = x.shape
@@ -163,7 +162,7 @@ def dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray,
     return q.astype(dtype) * scale.astype(dtype)
 
 
-def init_full_cache(b: int, s_max: int, cfg: ModelConfig, dtype) -> Dict:
+def init_full_cache(b: int, s_max: int, cfg: ModelConfig, dtype) -> dict:
     kv, dh = cfg.n_kv_heads, cfg.d_head
     if cfg.kv_cache_dtype == "int8":
         return {"k": jnp.zeros((b, s_max, kv, dh), jnp.int8),
@@ -174,17 +173,17 @@ def init_full_cache(b: int, s_max: int, cfg: ModelConfig, dtype) -> Dict:
             "v": jnp.zeros((b, s_max, kv, dh), dtype)}
 
 
-def init_window_cache(b: int, window: int, cfg: ModelConfig, dtype) -> Dict:
+def init_window_cache(b: int, window: int, cfg: ModelConfig, dtype) -> dict:
     kv, dh = cfg.n_kv_heads, cfg.d_head
     return {"k": jnp.zeros((b, window, kv, dh), dtype),
             "v": jnp.zeros((b, window, kv, dh), dtype),
             "pos": jnp.full((window,), -1, jnp.int32)}
 
 
-def attn_prefill(p: Dict, x: jnp.ndarray, positions: jnp.ndarray,
+def attn_prefill(p: dict, x: jnp.ndarray, positions: jnp.ndarray,
                  cfg: ModelConfig, *, window: int = 0,
-                 cache: Optional[Dict] = None
-                 ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+                 cache: dict | None = None
+                 ) -> tuple[jnp.ndarray, dict | None]:
     """Causal forward that also fills the cache (cache may be None)."""
     b, s, _ = x.shape
     q, k, v = _project_qkv(p, x, cfg, positions)
@@ -225,9 +224,9 @@ def attn_prefill(p: Dict, x: jnp.ndarray, positions: jnp.ndarray,
     return y.reshape(b, s, -1) @ p["wo"], new_cache
 
 
-def attn_decode(p: Dict, x: jnp.ndarray, pos: jnp.ndarray, cache: Dict,
+def attn_decode(p: dict, x: jnp.ndarray, pos: jnp.ndarray, cache: dict,
                 cfg: ModelConfig, *, window: int = 0
-                ) -> Tuple[jnp.ndarray, Dict]:
+                ) -> tuple[jnp.ndarray, dict]:
     """One-token decode against a full or window cache.
 
     x (B, 1, D); pos scalar int32 (absolute position of the new token).

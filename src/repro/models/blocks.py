@@ -16,7 +16,6 @@ Segment examples:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,14 +31,14 @@ from repro.parallel.sharding import constrain
 
 @dataclasses.dataclass(frozen=True)
 class Segment:
-    kinds: Tuple[str, ...]       # per-position within one step
+    kinds: tuple[str, ...]       # per-position within one step
     ffn: str                     # "dense" | "moe" | "none"
     steps: int
     shared_attn: bool = False    # apply the weight-shared attn block first
     d_ff: int = 0                # dense ffn width for this segment
 
 
-def layer_plan(cfg: ModelConfig) -> List[Segment]:
+def layer_plan(cfg: ModelConfig) -> list[Segment]:
     if cfg.shared_attn_every:
         per = cfg.shared_attn_every
         full_steps = cfg.n_layers // per
@@ -71,11 +70,11 @@ def layer_plan(cfg: ModelConfig) -> List[Segment]:
 # ---------------------------------------------------------------------------
 
 def init_block_params(rng, cfg: ModelConfig, kind: str, ffn: str,
-                      d_ff: int) -> Dict:
+                      d_ff: int) -> dict:
     dtype = dtype_of(cfg.param_dtype)
     d = cfg.d_model
     keys = jax.random.split(rng, 4)
-    p: Dict = {"norm1": jnp.zeros((d,), dtype)}
+    p: dict = {"norm1": jnp.zeros((d,), dtype)}
     if kind == "ssm":
         p["ssm"] = ssm_mod.init_ssm_params(keys[0], cfg, dtype)
     elif cfg.mla is not None:
@@ -103,13 +102,13 @@ def init_block_params(rng, cfg: ModelConfig, kind: str, ffn: str,
     return p
 
 
-def block_forward(bp: Dict, x: jnp.ndarray, cfg: ModelConfig, kind: str,
+def block_forward(bp: dict, x: jnp.ndarray, cfg: ModelConfig, kind: str,
                   ffn: str, positions: jnp.ndarray, *,
-                  mode: str = "train", cache: Optional[Dict] = None,
-                  pos: Optional[jnp.ndarray] = None,
+                  mode: str = "train", cache: dict | None = None,
+                  pos: jnp.ndarray | None = None,
                   bidirectional: bool = False,
-                  window_override: Optional[int] = None
-                  ) -> Tuple[jnp.ndarray, Optional[Dict], jnp.ndarray]:
+                  window_override: int | None = None
+                  ) -> tuple[jnp.ndarray, dict | None, jnp.ndarray]:
     """One block. Returns (x, new_cache_or_state, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     h = rms_norm(x, bp["norm1"])
@@ -170,7 +169,7 @@ def block_forward(bp: Dict, x: jnp.ndarray, cfg: ModelConfig, kind: str,
 # ---------------------------------------------------------------------------
 
 def init_block_cache(cfg: ModelConfig, kind: str, b: int, s_max: int,
-                     window_override: Optional[int] = None):
+                     window_override: int | None = None):
     dtype = dtype_of(cfg.compute_dtype)
     if kind == "ssm":
         return ssm_mod.init_ssm_state(b, cfg, dtype)
@@ -188,7 +187,7 @@ def init_block_cache(cfg: ModelConfig, kind: str, b: int, s_max: int,
 # segments (scanned stacks)
 # ---------------------------------------------------------------------------
 
-def init_segment_params(rng, cfg: ModelConfig, seg: Segment) -> Dict:
+def init_segment_params(rng, cfg: ModelConfig, seg: Segment) -> dict:
     """Stacked params: each leaf gains a leading (steps,) axis."""
     def one_step(r):
         ks = jax.random.split(r, len(seg.kinds))
@@ -210,13 +209,13 @@ def _remat_wrap(fn, cfg: ModelConfig):
     return jax.checkpoint(fn)
 
 
-def segment_forward(sp: Dict, x: jnp.ndarray, cfg: ModelConfig,
+def segment_forward(sp: dict, x: jnp.ndarray, cfg: ModelConfig,
                     seg: Segment, positions: jnp.ndarray, *,
                     mode: str = "train", caches=None,
-                    pos: Optional[jnp.ndarray] = None,
-                    shared_params: Optional[Dict] = None,
+                    pos: jnp.ndarray | None = None,
+                    shared_params: dict | None = None,
                     shared_caches=None, bidirectional: bool = False,
-                    shared_window: Optional[int] = None):
+                    shared_window: int | None = None):
     """Scan over the segment's steps.
 
     caches / shared_caches carry a leading (steps,) axis; the scan emits the

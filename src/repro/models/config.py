@@ -3,7 +3,6 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,7 +56,7 @@ class ModelConfig:
     d_head: int = 0              # default d_model // n_heads
 
     # layer pattern: cycled over layers. entries: "full" | "window" | "ssm"
-    block_pattern: Tuple[str, ...] = ("full",)
+    block_pattern: tuple[str, ...] = ("full",)
     window: int = 4096
     # hybrid (Zamba2): a weight-shared full-attention block applied every
     # shared_attn_every SSM layers
@@ -72,9 +71,9 @@ class ModelConfig:
     tie_embeddings: bool = True
     embed_scale: bool = False    # gemma2 scales embeddings by sqrt(d)
 
-    moe: Optional[MoEConfig] = None
-    mla: Optional[MLAConfig] = None
-    ssm: Optional[SSMConfig] = None
+    moe: MoEConfig | None = None
+    mla: MLAConfig | None = None
+    ssm: SSMConfig | None = None
     mtp: bool = False            # DeepSeek-V3 multi-token-prediction head
 
     # modality frontends are stubs: input_specs() provides embeddings
@@ -110,7 +109,7 @@ class ModelConfig:
     def layer_kind(self, i: int) -> str:
         return self.block_pattern[i % len(self.block_pattern)]
 
-    def layer_kinds(self) -> Tuple[str, ...]:
+    def layer_kinds(self) -> tuple[str, ...]:
         return tuple(self.layer_kind(i) for i in range(self.n_layers))
 
     def is_sub_quadratic(self) -> bool:

@@ -2,7 +2,6 @@
 
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -78,7 +77,7 @@ def embed(tokens: jnp.ndarray, table: jnp.ndarray,
 
 def chunked_cross_entropy(h: jnp.ndarray, table: jnp.ndarray,
                           labels: jnp.ndarray, config: ModelConfig,
-                          mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+                          mask: jnp.ndarray | None = None) -> jnp.ndarray:
     """Mean CE without materializing (B, S, V) logits.
 
     h (B, S, D); labels (B, S); logits computed per sequence chunk in fp32

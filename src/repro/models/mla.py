@@ -8,7 +8,6 @@ attention serveable.
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +18,7 @@ from repro.models.layers import apply_rope, rms_norm, rope_freqs
 from repro.parallel.sharding import constrain
 
 
-def init_mla_params(rng, cfg: ModelConfig, dtype) -> Dict:
+def init_mla_params(rng, cfg: ModelConfig, dtype) -> dict:
     m = cfg.mla
     d, h = cfg.d_model, cfg.n_heads
     qd = m.qk_nope_dim + m.qk_rope_dim
@@ -63,7 +62,7 @@ def _latents(p, x, cfg, positions):
     return ckv, apply_rope(kr, angles)
 
 
-def mla_train(p: Dict, x: jnp.ndarray, positions: jnp.ndarray,
+def mla_train(p: dict, x: jnp.ndarray, positions: jnp.ndarray,
               cfg: ModelConfig) -> jnp.ndarray:
     m = cfg.mla
     b, s, _ = x.shape
@@ -83,15 +82,15 @@ def mla_train(p: Dict, x: jnp.ndarray, positions: jnp.ndarray,
     return y.reshape(b, s, -1) @ p["wo"]
 
 
-def init_mla_cache(b: int, s_max: int, cfg: ModelConfig, dtype) -> Dict:
+def init_mla_cache(b: int, s_max: int, cfg: ModelConfig, dtype) -> dict:
     m = cfg.mla
     return {"ckv": jnp.zeros((b, s_max, m.kv_lora_rank), dtype),
             "krope": jnp.zeros((b, s_max, m.qk_rope_dim), dtype)}
 
 
-def mla_prefill(p: Dict, x: jnp.ndarray, positions: jnp.ndarray,
-                cfg: ModelConfig, cache: Optional[Dict] = None
-                ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+def mla_prefill(p: dict, x: jnp.ndarray, positions: jnp.ndarray,
+                cfg: ModelConfig, cache: dict | None = None
+                ) -> tuple[jnp.ndarray, dict | None]:
     y = mla_train(p, x, positions, cfg)
     new_cache = None
     if cache is not None:
@@ -106,8 +105,8 @@ def mla_prefill(p: Dict, x: jnp.ndarray, positions: jnp.ndarray,
     return y, new_cache
 
 
-def mla_decode(p: Dict, x: jnp.ndarray, pos: jnp.ndarray, cache: Dict,
-               cfg: ModelConfig) -> Tuple[jnp.ndarray, Dict]:
+def mla_decode(p: dict, x: jnp.ndarray, pos: jnp.ndarray, cache: dict,
+               cfg: ModelConfig) -> tuple[jnp.ndarray, dict]:
     """Absorbed decode: scores/context via the compressed latent cache."""
     m = cfg.mla
     b = x.shape[0]

@@ -9,7 +9,6 @@ Decode:   token (B,1) i32, pos () i32, caches pytree (stacked per segment).
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,15 +28,15 @@ SHARED_ATTN_DECODE_WINDOW = 4096   # hybrid long-context cache bound
 class Model:
     def __init__(self, cfg: ModelConfig):
         self.cfg = cfg
-        self.segments: List[Segment] = layer_plan(cfg)
+        self.segments: list[Segment] = layer_plan(cfg)
 
     # -- init -------------------------------------------------------------
 
-    def init(self, rng) -> Dict:
+    def init(self, rng) -> dict:
         cfg = self.cfg
         dtype = dtype_of(cfg.param_dtype)
         keys = jax.random.split(rng, len(self.segments) + 4)
-        params: Dict = {
+        params: dict = {
             "embed": (jax.random.normal(
                 keys[0], (cfg.vocab_size, cfg.d_model))
                 * cfg.d_model ** -0.5).astype(dtype),
@@ -58,7 +57,7 @@ class Model:
 
     # -- shared forward ----------------------------------------------------------
 
-    def _inputs(self, params: Dict, batch: Dict) -> jnp.ndarray:
+    def _inputs(self, params: dict, batch: dict) -> jnp.ndarray:
         cfg = self.cfg
         if cfg.frontend == "audio":
             return batch["frames"].astype(dtype_of(cfg.compute_dtype))
@@ -68,7 +67,7 @@ class Model:
             x = jnp.concatenate([img, x], axis=1)
         return constrain(x, "batch", None, None)
 
-    def _backbone(self, params: Dict, x: jnp.ndarray, *, mode: str,
+    def _backbone(self, params: dict, x: jnp.ndarray, *, mode: str,
                   caches=None, pos=None):
         cfg = self.cfg
         s = x.shape[1]
@@ -95,8 +94,8 @@ class Model:
 
     # -- training ------------------------------------------------------------------
 
-    def train_loss(self, params: Dict, batch: Dict
-                   ) -> Tuple[jnp.ndarray, Dict]:
+    def train_loss(self, params: dict, batch: dict
+                   ) -> tuple[jnp.ndarray, dict]:
         cfg = self.cfg
         x = self._inputs(params, batch)
         h, _, aux = self._backbone(params, x, mode="train")
@@ -132,7 +131,7 @@ class Model:
 
     # -- serving ---------------------------------------------------------------------
 
-    def init_caches(self, b: int, s_max: int) -> Dict:
+    def init_caches(self, b: int, s_max: int) -> dict:
         cfg = self.cfg
         caches = {"segments": [], "shared": []}
         for seg in self.segments:
@@ -154,24 +153,24 @@ class Model:
                 caches["shared"].append(None)
         return caches
 
-    def encode(self, params: Dict, batch: Dict) -> jnp.ndarray:
+    def encode(self, params: dict, batch: dict) -> jnp.ndarray:
         """Encoder forward (no cache) — prefill analogue for encoder-only
         archs and the backbone of the prefill dry-run cells."""
         x = self._inputs(params, batch)
         h, _, _ = self._backbone(params, x, mode="train")
         return h
 
-    def prefill(self, params: Dict, batch: Dict, caches: Dict
-                ) -> Tuple[jnp.ndarray, Dict]:
+    def prefill(self, params: dict, batch: dict, caches: dict
+                ) -> tuple[jnp.ndarray, dict]:
         x = self._inputs(params, batch)
         h, new_caches, _ = self._backbone(params, x, mode="prefill",
                                           caches=caches)
         logits = final_logits(h[:, -1:], params["embed"], self.cfg)
         return logits[:, 0], new_caches
 
-    def decode_step(self, params: Dict, token: jnp.ndarray,
-                    pos: jnp.ndarray, caches: Dict
-                    ) -> Tuple[jnp.ndarray, Dict]:
+    def decode_step(self, params: dict, token: jnp.ndarray,
+                    pos: jnp.ndarray, caches: dict
+                    ) -> tuple[jnp.ndarray, dict]:
         if self.cfg.encoder_only:
             raise ValueError("encoder-only archs have no decode step")
         x = embed(token, params["embed"], self.cfg)

@@ -10,7 +10,6 @@ and tokens on "batch", XLA emits the expected all_to_all pair.
 
 from __future__ import annotations
 
-from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -20,7 +19,7 @@ from repro.models.layers import act_fn
 from repro.parallel.sharding import constrain
 
 
-def init_moe_params(rng, cfg: ModelConfig, dtype) -> Dict:
+def init_moe_params(rng, cfg: ModelConfig, dtype) -> dict:
     e = cfg.moe
     d, f = cfg.d_model, e.d_expert
     keys = jax.random.split(rng, 7)
@@ -46,7 +45,7 @@ def init_moe_params(rng, cfg: ModelConfig, dtype) -> Dict:
     return p
 
 
-def _route(p: Dict, xf: jnp.ndarray, cfg: ModelConfig):
+def _route(p: dict, xf: jnp.ndarray, cfg: ModelConfig):
     e = cfg.moe
     logits = xf.astype(jnp.float32) @ p["router"]            # (T, E)
     probs = jax.nn.softmax(logits, axis=-1)
@@ -93,7 +92,7 @@ def _dispatch_compute_combine(xf, top_e, top_p, we1, we3, we2, cfg,
     return jnp.zeros((t, d), gathered.dtype).at[st].add(gathered * w)
 
 
-def _moe_shmap(p: Dict, x: jnp.ndarray, top_e, top_p, cfg: ModelConfig):
+def _moe_shmap(p: dict, x: jnp.ndarray, top_e, top_p, cfg: ModelConfig):
     """Explicit EP: experts sharded on "model", tokens model-replicated;
     combine = one psum over the model axis."""
     e = cfg.moe
@@ -123,8 +122,8 @@ def _moe_shmap(p: Dict, x: jnp.ndarray, top_e, top_p, cfg: ModelConfig):
               p["we1"], p["we3"], p["we2"])
 
 
-def moe_forward(p: Dict, x: jnp.ndarray, cfg: ModelConfig
-                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def moe_forward(p: dict, x: jnp.ndarray, cfg: ModelConfig
+                ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """x (B, S, D) → (y, aux_loss)."""
     e = cfg.moe
     b, s, d = x.shape

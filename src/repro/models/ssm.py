@@ -11,7 +11,6 @@ B/C are shared across heads per group (n_groups=1 here, like Mamba2-2.7B).
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +20,7 @@ from repro.models.layers import rms_norm
 from repro.parallel.sharding import constrain
 
 
-def init_ssm_params(rng, cfg: ModelConfig, dtype) -> Dict:
+def init_ssm_params(rng, cfg: ModelConfig, dtype) -> dict:
     s = cfg.ssm
     d = cfg.d_model
     di = s.d_inner(d)
@@ -55,8 +54,8 @@ def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
 
 def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
                 bb: jnp.ndarray, cc: jnp.ndarray, chunk: int,
-                init_state: Optional[jnp.ndarray] = None
-                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                init_state: jnp.ndarray | None = None
+                ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """SSD over one sequence batch.
 
     x  (B,S,H,P)   dt (B,S,H) post-softplus   a (H,) negative
@@ -121,7 +120,7 @@ def _split_proj(proj: jnp.ndarray, cfg: ModelConfig):
     return z, xbc, dt
 
 
-def init_ssm_state(b: int, cfg: ModelConfig, dtype) -> Dict:
+def init_ssm_state(b: int, cfg: ModelConfig, dtype) -> dict:
     s = cfg.ssm
     d = cfg.d_model
     di = s.d_inner(d)
@@ -133,9 +132,9 @@ def init_ssm_state(b: int, cfg: ModelConfig, dtype) -> Dict:
     }
 
 
-def ssm_forward(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
-                state: Optional[Dict] = None, return_state: bool = False
-                ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+def ssm_forward(p: dict, x: jnp.ndarray, cfg: ModelConfig,
+                state: dict | None = None, return_state: bool = False
+                ) -> tuple[jnp.ndarray, dict | None]:
     """Train (state=None) or prefill (return_state=True) over (B,S,D)."""
     s_cfg = cfg.ssm
     b, s, d = x.shape
@@ -165,8 +164,8 @@ def ssm_forward(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
     return out, new_state
 
 
-def ssm_decode(p: Dict, x: jnp.ndarray, state: Dict, cfg: ModelConfig
-               ) -> Tuple[jnp.ndarray, Dict]:
+def ssm_decode(p: dict, x: jnp.ndarray, state: dict, cfg: ModelConfig
+               ) -> tuple[jnp.ndarray, dict]:
     """One-token recurrent update. x (B,1,D)."""
     s_cfg = cfg.ssm
     b, _, d = x.shape

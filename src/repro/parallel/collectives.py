@@ -17,7 +17,6 @@ lever recorded in §Perf.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +30,7 @@ def psum_bf16(tree, axis):
         .astype(jnp.float32), tree)
 
 
-def psum_int8_ef(tree, axis, error: Optional[dict]) -> Tuple[dict, dict]:
+def psum_int8_ef(tree, axis, error: dict | None) -> tuple[dict, dict]:
     """int8 all-reduce with error feedback.
 
     Returns (reduced_tree_fp32, new_error_tree).  ``error`` holds last
@@ -58,7 +57,7 @@ def psum_int8_ef(tree, axis, error: Optional[dict]) -> Tuple[dict, dict]:
 
 
 def reduce_gradients(local_grads, axis: str, method: str,
-                     error: Optional[dict] = None):
+                     error: dict | None = None):
     """Dispatch used inside the shard_map'd manual-DP train step.
 
     Returns (mean_grads_fp32, new_error_or_None)."""

@@ -13,7 +13,7 @@ collected and all-gathered.
 from __future__ import annotations
 
 import functools
-from typing import Callable
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp

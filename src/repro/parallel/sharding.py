@@ -14,14 +14,13 @@ the same source.
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 
-def _ambient_axes() -> Tuple[str, ...]:
+def _ambient_axes() -> tuple[str, ...]:
     try:
         mesh = jax.sharding.get_abstract_mesh()
     except Exception:
@@ -31,8 +30,8 @@ def _ambient_axes() -> Tuple[str, ...]:
     return tuple(mesh.axis_names)
 
 
-def physical_axes(logical: Optional[str],
-                  mesh_axes: Tuple[str, ...]):
+def physical_axes(logical: str | None,
+                  mesh_axes: tuple[str, ...]):
     if logical is None:
         return None
     if logical == "batch":
@@ -45,7 +44,7 @@ def physical_axes(logical: Optional[str],
     raise ValueError(f"unknown logical axis {logical!r}")
 
 
-def spec(*logical, mesh_axes: Optional[Tuple[str, ...]] = None) -> P:
+def spec(*logical, mesh_axes: tuple[str, ...] | None = None) -> P:
     axes = mesh_axes if mesh_axes is not None else _ambient_axes()
     return P(*[physical_axes(l, axes) for l in logical])
 
@@ -89,7 +88,7 @@ def constrain(x: jnp.ndarray, *logical) -> jnp.ndarray:
 # parameter specs by path convention
 # ---------------------------------------------------------------------------
 
-def _leaf_logical(path: str, ndim: int, zero: bool) -> Tuple:
+def _leaf_logical(path: str, ndim: int, zero: bool) -> tuple:
     """Logical axes for a parameter, by naming convention.
 
     Scanned-layer stacks carry a leading L axis (never sharded).  The rules
@@ -134,7 +133,7 @@ def _axis_extent(p, sizes) -> int:
     return extent
 
 
-def fit_spec(shape, logical, mesh_axes: Tuple[str, ...],
+def fit_spec(shape, logical, mesh_axes: tuple[str, ...],
              mesh_sizes: dict) -> P:
     """Divisibility-aware spec: drop axes whose extent does not divide the
     dim; a dropped "model" axis is relocated to another divisible dim
@@ -158,8 +157,8 @@ def fit_spec(shape, logical, mesh_axes: Tuple[str, ...],
 
 
 def param_pspecs(params, zero: bool = False,
-                 mesh_axes: Optional[Tuple[str, ...]] = None,
-                 mesh_sizes: Optional[dict] = None):
+                 mesh_axes: tuple[str, ...] | None = None,
+                 mesh_sizes: dict | None = None):
     """PartitionSpec pytree mirroring a params pytree (by path rules)."""
     axes = mesh_axes if mesh_axes is not None else _ambient_axes()
     if mesh_sizes is None:

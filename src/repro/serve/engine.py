@@ -13,7 +13,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +26,7 @@ class Request:
     uid: int
     prompt: np.ndarray            # (L,) int32
     max_new_tokens: int = 32
-    eos_id: Optional[int] = None
+    eos_id: int | None = None
 
 
 @dataclasses.dataclass
@@ -60,7 +59,7 @@ class ServeEngine:
         return jax.random.categorical(
             k, logits / self.temperature, axis=-1).astype(jnp.int32)
 
-    def _run_bucket(self, requests: List[Request]) -> List[Completion]:
+    def _run_bucket(self, requests: list[Request]) -> list[Completion]:
         b = len(requests)
         lp = requests[0].prompt.shape[0]
         assert all(r.prompt.shape[0] == lp for r in requests)
@@ -97,12 +96,12 @@ class ServeEngine:
             completions.append(Completion(r.uid, toks, t_prefill, t_decode))
         return completions
 
-    def generate(self, requests: List[Request]) -> Dict[int, Completion]:
+    def generate(self, requests: list[Request]) -> dict[int, Completion]:
         """Length-bucketed batch scheduling."""
-        buckets: Dict[int, List[Request]] = {}
+        buckets: dict[int, list[Request]] = {}
         for r in requests:
             buckets.setdefault(r.prompt.shape[0], []).append(r)
-        results: Dict[int, Completion] = {}
+        results: dict[int, Completion] = {}
         for _, reqs in sorted(buckets.items()):
             for i in range(0, len(reqs), self.max_batch):
                 chunk = reqs[i:i + self.max_batch]
@@ -110,7 +109,7 @@ class ServeEngine:
                     results[c.uid] = c
         return results
 
-    def throughput_report(self, completions: Dict[int, Completion]) -> Dict:
+    def throughput_report(self, completions: dict[int, Completion]) -> dict:
         n_prompt = sum(c.tokens.shape[0] for c in completions.values())
         total_decode = sum(c.decode_seconds for c in completions.values())
         total_prefill = sum(c.prefill_seconds for c in completions.values())

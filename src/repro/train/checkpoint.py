@@ -25,7 +25,6 @@ import os
 import shutil
 import threading
 import time
-from typing import Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -33,7 +32,7 @@ import numpy as np
 _SEP = "||"
 
 
-def _flatten(tree) -> Dict[str, object]:
+def _flatten(tree) -> dict[str, object]:
     flat = {}
 
     def walk(node, path):
@@ -52,8 +51,8 @@ def _flatten(tree) -> Dict[str, object]:
     return flat
 
 
-def _unflatten(flat: Dict[str, object]):
-    root: Dict = {}
+def _unflatten(flat: dict[str, object]):
+    root: dict = {}
     for key, val in flat.items():
         parts = key.split(_SEP)
         if parts[-1] == "__none__":
@@ -81,12 +80,12 @@ class CheckpointManager:
         self.directory = directory
         self.keep = keep
         self.async_save = async_save
-        self._thread: Optional[threading.Thread] = None
+        self._thread: threading.Thread | None = None
         os.makedirs(directory, exist_ok=True)
 
     # -- save -----------------------------------------------------------------
 
-    def save(self, step: int, state, extra: Optional[dict] = None) -> str:
+    def save(self, step: int, state, extra: dict | None = None) -> str:
         """Snapshot to host, then write (async by default)."""
         flat = _flatten(state)
         host = {k: (None if v is None else np.asarray(v))
@@ -109,7 +108,7 @@ class CheckpointManager:
     def _path(self, step: int) -> str:
         return os.path.join(self.directory, f"step_{step:09d}")
 
-    def _write(self, step: int, host: Dict[str, np.ndarray],
+    def _write(self, step: int, host: dict[str, np.ndarray],
                extra: dict) -> None:
         path = self._path(step)
         tmp = path + ".tmp"
@@ -152,19 +151,19 @@ class CheckpointManager:
 
     # -- restore ----------------------------------------------------------------
 
-    def list_steps(self) -> List[int]:
+    def list_steps(self) -> list[int]:
         out = []
         for name in os.listdir(self.directory):
             if name.startswith("step_") and name.endswith(".COMMITTED"):
                 out.append(int(name[len("step_"):-len(".COMMITTED")]))
         return sorted(out)
 
-    def latest_step(self) -> Optional[int]:
+    def latest_step(self) -> int | None:
         steps = self.list_steps()
         return steps[-1] if steps else None
 
-    def restore(self, step: Optional[int] = None,
-                shardings=None) -> Tuple[Optional[object], Optional[dict]]:
+    def restore(self, step: int | None = None,
+                shardings=None) -> tuple[object | None, dict | None]:
         """Returns (state, extra).  ``shardings``: optional pytree of
         NamedSharding for elastic restore onto a different mesh."""
         if step is None:

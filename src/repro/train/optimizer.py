@@ -7,7 +7,6 @@ HBM is one of the §Perf memory-term levers for the 671B-class cells.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,7 +37,7 @@ def lr_at(step: jnp.ndarray, cfg: OptConfig) -> jnp.ndarray:
     return jnp.where(step < cfg.warmup_steps, warm, cfg.peak_lr * cos)
 
 
-def init_opt_state(params, cfg: OptConfig) -> Dict:
+def init_opt_state(params, cfg: OptConfig) -> dict:
     mdt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[
         cfg.moments_dtype]
     zeros = lambda p: jnp.zeros(p.shape, mdt)
@@ -54,8 +53,8 @@ def global_norm(tree) -> jnp.ndarray:
                         for x in jax.tree.leaves(tree)))
 
 
-def apply_adamw(params, grads, state: Dict, cfg: OptConfig
-                ) -> Tuple[Dict, Dict, Dict]:
+def apply_adamw(params, grads, state: dict, cfg: OptConfig
+                ) -> tuple[dict, dict, dict]:
     """Returns (new_params, new_state, metrics)."""
     step = state["step"] + 1
     gnorm = global_norm(grads)

@@ -17,7 +17,7 @@ from __future__ import annotations
 import dataclasses
 import statistics
 import time
-from typing import Callable, Dict, List, Optional
+from collections.abc import Callable
 
 import jax
 import numpy as np
@@ -40,7 +40,7 @@ class RunnerConfig:
     log_every: int = 10
     prefetch_depth: int = 2
     straggler_factor: float = 3.0
-    fail_at_step: Optional[int] = None     # simulate preemption once
+    fail_at_step: int | None = None     # simulate preemption once
 
 
 class TrainRunner:
@@ -56,7 +56,7 @@ class TrainRunner:
         self.step_fn = jax.jit(build_train_step(model, opt_cfg, grad_accum),
                                donate_argnums=(0,))
         self.seed = seed
-        self.history: List[Dict] = []
+        self.history: list[dict] = []
 
     def _init_or_restore(self):
         state, extra = self.ckpt.restore()
@@ -68,12 +68,12 @@ class TrainRunner:
                                  self.opt_cfg)
         return state, 0
 
-    def run(self, on_step: Optional[Callable] = None) -> Dict:
+    def run(self, on_step: Callable | None = None) -> dict:
         cfg = self.run_cfg
         state, step = self._init_or_restore()
         prefetch = PrefetchLoader(self.loader, depth=cfg.prefetch_depth)
         it = iter(prefetch)
-        durations: List[float] = []
+        durations: list[float] = []
         failed = False
         try:
             while step < cfg.total_steps:

@@ -19,7 +19,6 @@ and is the template for the wire-compressed deployment mode.
 from __future__ import annotations
 
 import functools
-from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,7 +31,7 @@ from repro.parallel.sharding import param_pspecs, spec
 from repro.train.optimizer import OptConfig, apply_adamw, init_opt_state
 
 
-def init_train_state(model: Model, rng, opt_cfg: OptConfig) -> Dict:
+def init_train_state(model: Model, rng, opt_cfg: OptConfig) -> dict:
     params = model.init(rng)
     return {"params": params, "opt": init_opt_state(params, opt_cfg)}
 
@@ -43,7 +42,7 @@ def abstract_train_state(model: Model, opt_cfg: OptConfig):
         lambda: init_train_state(model, jax.random.PRNGKey(0), opt_cfg))
 
 
-def _split_microbatches(batch: Dict, accum: int) -> Dict:
+def _split_microbatches(batch: dict, accum: int) -> dict:
     from repro.parallel.sharding import constrain
 
     def r(x):
@@ -170,7 +169,7 @@ def build_manual_dp_step(model: Model, opt_cfg: OptConfig, mesh,
 
 
 def init_manual_dp_state(model: Model, rng, opt_cfg: OptConfig,
-                         compression: str) -> Dict:
+                         compression: str) -> dict:
     state = init_train_state(model, rng, opt_cfg)
     if compression == "int8_ef":
         state["comp_error"] = jax.tree.map(

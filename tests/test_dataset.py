@@ -1,0 +1,340 @@
+"""Dataset layer (repro.dataset): manifest round-trip, partition and
+zone-map file pruning vs brute force, sharded execution determinism,
+append/compaction lifecycle, and compaction atomicity."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.config import ACCELERATOR_OPTIMIZED, CPU_DEFAULT
+from repro.core.query import (q6, q6_reference, q6_rg_stats_predicate, q12,
+                              q12_reference)
+from repro.core.reader import read_footer
+from repro.data import tpch
+from repro.dataset import (Dataset, compact_dataset, plan_compaction,
+                           plan_dataset_scan, run_dataset_scan,
+                           write_dataset)
+from repro.dataset.catalog import file_column_stats
+
+SIM_OPTS = {"backend": "sim", "decode_backend": "host"}
+TUNED = ACCELERATOR_OPTIMIZED.replace(rows_per_rg=1_500,
+                                      target_pages_per_chunk=4)
+
+
+@pytest.fixture(scope="module")
+def tables():
+    return tpch.generate_tables(sf=0.002, seed=42, include_strings=False)
+
+
+@pytest.fixture(scope="module")
+def range_ds(tables, tmp_path_factory):
+    """16 range fragments on l_shipdate — the FY1994 pruning shape."""
+    line, _ = tables
+    root = str(tmp_path_factory.mktemp("ds_range"))
+    return write_dataset(line, root, TUNED, partition_by="l_shipdate",
+                         how="range", fragments=16)
+
+
+def _np_cols(table):
+    return {n: np.asarray(table[n]) for n in table.names}
+
+
+# -- manifest ---------------------------------------------------------------
+
+def test_manifest_round_trip_identical_plan(range_ds):
+    loaded = Dataset.load(range_ds.root)
+    assert loaded.to_json() == range_ds.to_json()
+    p1 = plan_dataset_scan(range_ds,
+                           predicate_stats=q6_rg_stats_predicate)
+    p2 = plan_dataset_scan(loaded, predicate_stats=q6_rg_stats_predicate)
+    assert p1.indices == p2.indices
+    assert [f.path for f in p1.fragments] == [f.path for f in p2.fragments]
+    assert (p1.pruned_partition, p1.pruned_stats) == \
+        (p2.pruned_partition, p2.pruned_stats)
+
+
+def test_manifest_records_footer_truth(range_ds):
+    for frag in range_ds.fragments:
+        meta = read_footer(range_ds.fragment_path(frag))
+        assert frag.num_rows == meta.num_rows
+        assert frag.stored_bytes == meta.stored_bytes
+        assert frag.config == meta.writer_config
+        assert frag.column_stats == file_column_stats(meta)
+        part = frag.partition
+        ship = frag.column_stats["l_shipdate"]
+        assert part["lo"] == ship["min"] and part["hi"] == ship["max"]
+
+
+def test_append_table_swaps_manifest_atomically(tables, tmp_path):
+    line, _ = tables
+    ds = write_dataset(line.slice(0, 2_000), str(tmp_path), TUNED,
+                       fragments=2)
+    gen0 = ds.generation
+    ds.append_table(line.slice(2_000, 4_000), CPU_DEFAULT)
+    assert ds.generation == gen0 + 1
+    loaded = Dataset.load(ds.root)
+    assert len(loaded.fragments) == 3
+    assert loaded.num_rows == 4_000
+    # the appended fragment carries its own (different) config fingerprint
+    assert loaded.fragments[-1].config == CPU_DEFAULT.fingerprint()
+    # no stray temp manifest left behind
+    assert [f for f in os.listdir(ds.root) if ".tmp." in f] == []
+
+
+# -- pruning ----------------------------------------------------------------
+
+def test_range_pruning_matches_brute_force(range_ds):
+    plan = plan_dataset_scan(range_ds,
+                             predicate_stats=q6_rg_stats_predicate)
+    # brute force: re-derive file-level stats from every footer
+    expect = []
+    for i, frag in enumerate(range_ds.fragments):
+        stats = file_column_stats(
+            read_footer(range_ds.fragment_path(frag)))
+        if all(q6_rg_stats_predicate(n, s) for n, s in stats.items()):
+            expect.append(i)
+    assert sorted(plan.indices) == expect
+    # acceptance shape: FY1994 over 16 shipdate-range fragments prunes
+    # at least half the files
+    assert plan.files_total == 16
+    assert plan.files_pruned >= 8
+    assert plan.files_scanned == len(plan.fragments) >= 1
+
+
+def test_pruned_scan_bit_identical_to_full_scan(range_ds, tables):
+    line, _ = tables
+    pruned, rep = q6(range_ds, prune=True, open_opts=SIM_OPTS)
+    full, rep_full = q6(range_ds, prune=False, open_opts=SIM_OPTS)
+    assert pruned == full            # bit-identical, not just close
+    assert rep.files_pruned >= 8
+    assert rep_full.files_pruned == 0
+    assert rep_full.n_row_groups > rep.n_row_groups
+    ref = q6_reference(_np_cols(line))
+    assert pruned == pytest.approx(ref, rel=1e-4)
+
+
+def test_dataset_scan_deterministic_across_runs(range_ds):
+    a, _ = q6(range_ds, prune=True, open_opts=SIM_OPTS)
+    b, _ = q6(range_ds, prune=True, open_opts=SIM_OPTS)
+    assert a == b                    # plan-order reduce, not thread order
+
+
+def test_sharded_matches_sequential_fragment_loop(range_ds):
+    plan = plan_dataset_scan(range_ds,
+                             predicate_stats=q6_rg_stats_predicate)
+    sharded, _ = q6(range_ds, prune=True, open_opts=SIM_OPTS, window=4)
+    seq = None
+    for frag in plan.fragments:
+        sc = range_ds.open_fragment(frag, columns=plan.columns
+                                    or ["l_shipdate", "l_discount",
+                                        "l_quantity", "l_extendedprice"],
+                                    **SIM_OPTS)
+        acc, _ = q6(sc, prune=True)
+        seq = acc if seq is None else seq + acc
+    assert sharded == seq
+
+
+def test_zone_map_pruning_without_partitioning(tables, tmp_path):
+    """File-level zone maps prune even unpartitioned datasets when the
+    data arrives roughly ordered (contiguous slices of a sorted table)."""
+    line, _ = tables
+    order = np.argsort(np.asarray(line["l_shipdate"]), kind="stable")
+    cols = {n: (np.asarray(line[n])[order]) for n in line.names}
+    from repro.core.table import Table
+    sorted_line = Table(cols, line.schema)
+    ds = write_dataset(sorted_line, str(tmp_path), TUNED, fragments=8)
+    plan = plan_dataset_scan(ds, predicate_stats=q6_rg_stats_predicate)
+    assert plan.pruned_partition == 0      # no partition metadata
+    assert plan.pruned_stats >= 4          # zone maps carry the pruning
+    pruned, _ = q6(ds, prune=True, open_opts=SIM_OPTS)
+    full, _ = q6(ds, prune=False, open_opts=SIM_OPTS)
+    assert pruned == full
+
+
+def test_hash_partition_equality_pruning(tables, tmp_path):
+    line, _ = tables
+    ds = write_dataset(line, str(tmp_path), TUNED,
+                       partition_by="l_orderkey", how="hash", fragments=8)
+    assert ds.num_rows == line.num_rows    # no rows lost in bucketing
+    key = int(np.asarray(line["l_orderkey"])[17])
+    bucket = int(ds.partitioning.bucket_of([key])[0])
+    plan = plan_dataset_scan(
+        ds, partition_filter=lambda p: p is not None
+        and p.get("bucket") == bucket)
+    assert plan.files_scanned == 1
+    assert plan.pruned_partition == 7
+    # the key's rows all live in the surviving fragment
+    sc = ds.open_fragment(plan.fragments[0], columns=["l_orderkey"],
+                          decode_backend="host")
+    got = np.concatenate([np.asarray(c["l_orderkey"].array)
+                          for _, c in sc.scan()])
+    want = np.asarray(line["l_orderkey"])
+    assert (got == key).sum() == (want == key).sum() > 0
+
+
+# -- executor ---------------------------------------------------------------
+
+def test_run_dataset_scan_reports_merged_metrics(range_ds):
+    plan = plan_dataset_scan(range_ds, columns=["l_shipdate"],
+                             predicate_stats=q6_rg_stats_predicate)
+    accs, rep = run_dataset_scan(
+        plan, lambda acc, i, cols: (acc or 0) + cols["l_shipdate"].array
+        .shape[0], combine=None, window=2, open_opts=SIM_OPTS)
+    assert rep.files_total == 16
+    assert rep.files_scanned == len(plan.fragments)
+    assert rep.window == 2
+    assert len(accs) == len(plan.fragments)
+    assert rep.n_io_requests > 0
+    assert rep.n_row_groups == sum(r.metrics.n_row_groups
+                                   for r in rep.reports)
+    assert sum(a for a in accs if a) == sum(f.num_rows
+                                            for f in plan.fragments)
+    assert rep.wall_percentile(95) >= rep.wall_percentile(50) >= 0.0
+    assert "scanned=" in rep.summary()
+
+
+def test_run_dataset_scan_propagates_errors(range_ds):
+    plan = plan_dataset_scan(range_ds, columns=["l_shipdate"])
+
+    def boom(acc, i, cols):
+        raise RuntimeError("consume failed")
+
+    with pytest.raises(RuntimeError, match="consume failed"):
+        run_dataset_scan(plan, boom, window=3, open_opts=SIM_OPTS)
+
+
+def test_q12_over_datasets(tables, tmp_path):
+    line, orders = tables
+    lds = write_dataset(line, str(tmp_path / "l"), TUNED,
+                        partition_by="l_shipdate", how="range",
+                        fragments=6)
+    ods = write_dataset(orders, str(tmp_path / "o"), TUNED, fragments=3)
+    res, brep, prep = q12(lds, ods, open_opts=SIM_OPTS)
+    assert res == q12_reference(_np_cols(line), _np_cols(orders))
+    assert prep.files_scanned == 6 and brep.files_scanned == 3
+
+
+# -- compaction -------------------------------------------------------------
+
+@pytest.fixture
+def raw_ds(tables, tmp_path):
+    """Misconfigured ingest shape: 12 tiny CPU-default fragments."""
+    line, _ = tables
+    return write_dataset(line, str(tmp_path / "raw"),
+                         CPU_DEFAULT.replace(rows_per_rg=400),
+                         partition_by="l_shipdate", how="range",
+                         fragments=12)
+
+
+def test_plan_compaction_flags_misconfigured_and_small(raw_ds):
+    plan = plan_compaction(raw_ds, target_config=TUNED)
+    assert set(plan.reasons.values()) == {"misconfigured"}
+    assert plan.n_inputs == 12
+    assert plan.n_outputs < 12          # neighbors merged …
+    assert plan.n_outputs > 1           # … but capped, pruning survives
+    # a fragment already at the target config but tiny is "small"
+    tuned_tiny = write_dataset(
+        tpch.generate_tables(sf=0.0001, seed=3,
+                             include_strings=False)[0],
+        raw_ds.root + "_tiny", TUNED, fragments=1)
+    plan2 = plan_compaction(tuned_tiny, target_config=TUNED)
+    assert plan2.reasons == {0: "small"}
+
+
+def test_compaction_preserves_results_and_pruning(raw_ds, tables):
+    line, _ = tables
+    before, _ = q6(raw_ds, open_opts=SIM_OPTS)
+    old_paths = [raw_ds.fragment_path(f) for f in raw_ds.fragments]
+    ds, rep = compact_dataset(raw_ds, target_config=TUNED)
+    assert rep.n_inputs == 12 and rep.n_outputs == len(ds.fragments)
+    assert rep.rows == line.num_rows
+    for f in ds.fragments:
+        assert f.config == TUNED.fingerprint()
+    assert all(not os.path.exists(p) for p in old_paths)  # gc after swap
+    after, arep = q6(Dataset.load(ds.root), open_opts=SIM_OPTS)
+    ref = q6_reference(_np_cols(line))
+    # row-group boundaries moved, so accumulation order differs: equal to
+    # the oracle, not bitwise to the pre-compaction sum
+    assert after == pytest.approx(ref, rel=1e-4)
+    assert before == pytest.approx(ref, rel=1e-4)
+    assert arep.files_pruned > 0       # range metadata survived the merge
+
+
+def test_compaction_atomicity_on_failure(raw_ds, monkeypatch):
+    manifest_before = json.load(open(raw_ds.manifest_path))
+    files_before = sorted(os.listdir(raw_ds.root))
+    result_before, _ = q6(Dataset.load(raw_ds.root), open_opts=SIM_OPTS)
+
+    import repro.dataset.compact as compact_mod
+    calls = {"n": 0}
+    real = compact_mod._merge_rewrite
+
+    def flaky(paths, dst, config, threads):
+        calls["n"] += 1
+        if calls["n"] == 2:
+            raise OSError("disk full")
+        return real(paths, dst, config, threads)
+
+    monkeypatch.setattr(compact_mod, "_merge_rewrite", flaky)
+    with pytest.raises(OSError, match="disk full"):
+        compact_dataset(raw_ds, target_config=TUNED)
+    # the manifest never changed and the partial outputs were removed
+    assert json.load(open(raw_ds.manifest_path)) == manifest_before
+    assert sorted(os.listdir(raw_ds.root)) == files_before
+    result_after, _ = q6(Dataset.load(raw_ds.root), open_opts=SIM_OPTS)
+    assert result_after == result_before
+
+
+def test_compaction_noop_when_already_tuned(tables, tmp_path):
+    line, _ = tables
+    ds = write_dataset(line, str(tmp_path), TUNED,
+                       partition_by="l_shipdate", how="range", fragments=4)
+    gen = ds.generation
+    ds2, rep = compact_dataset(ds, target_config=TUNED)
+    assert rep.n_inputs == 0 and rep.n_outputs == 0
+    assert ds2.generation == gen       # no manifest swap on a no-op
+
+
+# -- review regressions ------------------------------------------------------
+
+def test_dataset_rejects_blocking_mode(range_ds):
+    with pytest.raises(ValueError, match="always sharded"):
+        q6(range_ds, overlapped=False, open_opts=SIM_OPTS)
+
+
+def test_partitioning_rejects_string_keys(tmp_path):
+    from repro.core.table import StringColumn, Table
+    cols = {"k": StringColumn.from_pylist(["a", "b", "c"]),
+            "v": np.arange(3, dtype=np.int32)}
+    t = Table(cols)
+    with pytest.raises(TypeError, match="numeric key"):
+        write_dataset(t, str(tmp_path / "s"), TUNED, partition_by="k",
+                      how="hash", fragments=2)
+    with pytest.raises(TypeError, match="numeric key"):
+        write_dataset(t, str(tmp_path / "s2"), TUNED, partition_by="k",
+                      how="range", fragments=2)
+
+
+def test_compaction_failure_removes_partial_output(raw_ds, monkeypatch):
+    """A rewrite that dies MID-WRITE (partial bytes on disk) must still
+    leave the dataset directory exactly as it was."""
+    files_before = sorted(os.listdir(raw_ds.root))
+
+    import repro.dataset.compact as compact_mod
+    real = compact_mod._merge_rewrite
+    calls = {"n": 0}
+
+    def mid_write_fault(paths, dst, config, threads):
+        calls["n"] += 1
+        if calls["n"] == 2:
+            with open(dst, "wb") as f:      # partial bytes hit the disk
+                f.write(b"TABF0001partial")
+            raise OSError("disk full mid-write")
+        return real(paths, dst, config, threads)
+
+    monkeypatch.setattr(compact_mod, "_merge_rewrite", mid_write_fault)
+    with pytest.raises(OSError, match="disk full"):
+        compact_dataset(raw_ds, target_config=TUNED)
+    assert sorted(os.listdir(raw_ds.root)) == files_before

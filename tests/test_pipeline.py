@@ -32,7 +32,7 @@ def tpch_files(tmp_path_factory):
 
 
 def _mixed_table(n=5_000, seed=0):
-    """Dict + delta + rle + bss + host-path columns, as in test_decode_plan."""
+    """dict + delta + rle + bss + host-path columns, as in test_decode_plan."""
     rng = np.random.default_rng(seed)
     return Table({
         "sorted32": np.cumsum(rng.integers(0, 5, n)).astype(np.int32),

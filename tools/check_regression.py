@@ -26,7 +26,8 @@ Usage:
         --baseline results/benchmarks/baselines \
         --current results/benchmarks \
         --report regression-report.md \
-        fig5_smoke.csv scan_plan_smoke.csv concurrent_smoke.csv
+        fig5_smoke.csv scan_plan_smoke.csv concurrent_smoke.csv \
+        dataset_smoke.csv
 
 Demo an injected regression (doubles one wall time, bumps one counter):
     python tools/check_regression.py --selftest
@@ -37,18 +38,17 @@ from __future__ import annotations
 import argparse
 import os
 import sys
-from typing import Dict, List, Tuple
 
 COUNT_KEYS = ("launches", "launches_per_rg", "requests", "io_requests",
               "groups")
 
 
-def parse_csv(path: str) -> "Dict[str, tuple]":
+def parse_csv(path: str) -> "dict[str, tuple]":
     """name → (us_per_call, {counter: value}, tags) from a benchmark CSV.
     ``tags`` are the bare (non key=value) derived tokens, e.g. ``sim`` /
     ``measured`` — ``sim`` rows are deterministic model times and are
     never machine-speed scaled."""
-    rows: Dict[str, tuple] = {}
+    rows: dict[str, tuple] = {}
     with open(path) as f:
         header = f.readline()
         if not header.startswith("name,"):
@@ -58,7 +58,7 @@ def parse_csv(path: str) -> "Dict[str, tuple]":
             if not line:
                 continue
             name, us, derived = line.split(",", 2)
-            counters: Dict[str, float] = {}
+            counters: dict[str, float] = {}
             tags = set()
             for token in derived.split(";"):
                 if "=" not in token:
@@ -78,7 +78,7 @@ def parse_csv(path: str) -> "Dict[str, tuple]":
 REFERENCE_ROW = "cpu_reference"
 
 
-def speed_scale(baseline: Dict, current: Dict) -> float:
+def speed_scale(baseline: dict, current: dict) -> float:
     """base_ref / cur_ref: multiplied into current wall times so a slower
     (or noisier) machine than the baseline's doesn't read as a regression
     of every row at once.  Clamped — a wildly different reference means
@@ -93,7 +93,7 @@ def speed_scale(baseline: Dict, current: Dict) -> float:
     return min(4.0, max(0.25, base_ref / cur_ref))
 
 
-def merge_min(a: Dict, b: Dict) -> Dict:
+def merge_min(a: dict, b: dict) -> dict:
     """Per-row minimum wall across two runs of the same suite (counters
     ride along from whichever run was faster; they are deterministic, so
     the choice cannot hide a counter regression).  Rows present in only
@@ -105,8 +105,8 @@ def merge_min(a: Dict, b: Dict) -> Dict:
     return out
 
 
-def compare(baseline: Dict, current: Dict, threshold: float, min_us: float,
-            scale: float = 1.0) -> Tuple[List[str], List[List[str]]]:
+def compare(baseline: dict, current: dict, threshold: float, min_us: float,
+            scale: float = 1.0) -> tuple[list[str], list[list[str]]]:
     """Returns (regressions, report_rows).
 
     A wall regression must hold in BOTH the raw and the machine-speed
@@ -114,8 +114,8 @@ def compare(baseline: Dict, current: Dict, threshold: float, min_us: float,
     exists to forgive machine differences, not to manufacture failures
     when the calibration lands in a different noise window than the rows.
     Deterministic ``sim``-tagged rows are never scaled."""
-    regressions: List[str] = []
-    table: List[List[str]] = []
+    regressions: list[str] = []
+    table: list[list[str]] = []
     for name, row in sorted(baseline.items()):
         base_us, base_counts = row[0], row[1]
         if name == REFERENCE_ROW:
@@ -163,8 +163,8 @@ def compare(baseline: Dict, current: Dict, threshold: float, min_us: float,
     return regressions, table
 
 
-def write_report(path: str, file_tables: Dict[str, List[List[str]]],
-                 regressions: List[str], threshold: float) -> None:
+def write_report(path: str, file_tables: dict[str, list[list[str]]],
+                 regressions: list[str], threshold: float) -> None:
     with open(path, "w") as f:
         f.write("# Benchmark regression gate\n\n")
         f.write(f"Wall-time threshold: +{threshold * 100:.0f}% · counter "
@@ -209,7 +209,7 @@ def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("files", nargs="*",
                     default=["fig5_smoke.csv", "scan_plan_smoke.csv",
-                             "concurrent_smoke.csv"])
+                             "concurrent_smoke.csv", "dataset_smoke.csv"])
     ap.add_argument("--baseline", default="results/benchmarks/baselines")
     ap.add_argument("--current", default="results/benchmarks")
     ap.add_argument("--current2", default=None,
@@ -232,9 +232,9 @@ def main() -> int:
         return selftest()
 
     files = args.files or ["fig5_smoke.csv", "scan_plan_smoke.csv",
-                           "concurrent_smoke.csv"]
-    all_regressions: List[str] = []
-    file_tables: Dict[str, List[List[str]]] = {}
+                           "concurrent_smoke.csv", "dataset_smoke.csv"]
+    all_regressions: list[str] = []
+    file_tables: dict[str, list[list[str]]] = {}
     for fname in files:
         base_path = os.path.join(args.baseline, fname)
         cur_path = os.path.join(args.current, fname)
