@@ -81,7 +81,8 @@ def _sharded(ds: Dataset, service: ScanService, prune: bool
     return wall, {"result": acc, "io_requests": rep.n_io_requests,
                   "launches": rep.n_kernel_launches,
                   "files": rep.files_total, "scanned": rep.files_scanned,
-                  "pruned": rep.files_pruned}
+                  "pruned": rep.files_pruned, "retries": rep.retries,
+                  "fragments_quarantined": rep.fragments_quarantined}
 
 
 def _emit_arm(name: str, wall: float, info: dict, seq_wall: float) -> None:
@@ -89,6 +90,8 @@ def _emit_arm(name: str, wall: float, info: dict, seq_wall: float) -> None:
          f"launches={info['launches']};io_requests={info['io_requests']};"
          f"files={info['files']};scanned={info['scanned']};"
          f"pruned={info['pruned']};"
+         f"retries={info.get('retries', 0)};"
+         f"fragments_quarantined={info.get('fragments_quarantined', 0)};"
          f"speedup_vs_seq={seq_wall / max(wall, 1e-12):.2f}x;measured")
 
 

@@ -23,6 +23,7 @@ Cascade frame layout (all 4-byte aligned):
 from __future__ import annotations
 
 import enum
+import os
 import zlib
 
 import numpy as np
@@ -56,6 +57,80 @@ def inflate_backend() -> str:
     ``zlib-ng``, or stdlib ``zlib``.  Logged in FetchStats/ScanMetrics so
     benchmark rows record which inflate path produced them."""
     return _INFLATE_BACKEND
+
+
+# -- integrity ---------------------------------------------------------------
+#
+# The writer stamps a CRC32 of every page's *stored* (post-compression)
+# bytes into PageMeta.extra["crc32"] and appends a footer CRC
+# (metadata/writer).  The scan path verifies at the decompress boundary —
+# before anything enters the arena, the dict cache, or the decompress
+# memo — so a flipped byte surfaces as a typed ChecksumError instead of
+# silently-wrong decoded values or a poisoned shared cache (DESIGN.md §6).
+# Checking the stored bytes (not the inflated ones) keeps the check
+# O(stored) and catches corruption whether it happened at rest or in
+# transit; gzip's own trailing CRC is backend-dependent (isal/zlib-ng may
+# differ in error type), so we never rely on it.
+
+
+class ChecksumError(ValueError):
+    """Stored bytes failed CRC32 verification.  Typed so the recovery
+    layers can tell corruption (retryable once — a torn/short read looks
+    identical to at-rest corruption until refetched) from logic errors.
+
+    Attributes: ``path`` (when known), ``where`` (page/footer/manifest
+    locator string), ``expected``, ``actual``."""
+
+    def __init__(self, where: str, expected: int, actual: int,
+                 path: str | None = None):
+        self.where = where
+        self.expected = expected
+        self.actual = actual
+        self.path = path
+        loc = f"{path}: {where}" if path else where
+        super().__init__(
+            f"{loc}: crc32 mismatch (expected {expected:#010x}, "
+            f"got {actual:#010x})")
+
+
+def page_crc(data) -> int:
+    """CRC32 over stored page bytes (the writer-side stamp)."""
+    return zlib.crc32(bytes(data) if isinstance(data, memoryview) else data)
+
+
+_VERIFY_CHECKSUMS = os.environ.get("REPRO_VERIFY_CHECKSUMS", "1") != "0"
+
+
+def verify_checksums() -> bool:
+    """Whether the scan path verifies page/footer CRCs (default on; the
+    one knob — env ``REPRO_VERIFY_CHECKSUMS=0`` or set_verify_checksums)."""
+    return _VERIFY_CHECKSUMS
+
+
+def set_verify_checksums(enabled: bool) -> bool:
+    """Flip verification; returns the previous value (for tests)."""
+    global _VERIFY_CHECKSUMS
+    prev = _VERIFY_CHECKSUMS
+    _VERIFY_CHECKSUMS = bool(enabled)
+    return prev
+
+
+def verify_page(data, pm, *, where: str = "page",
+                path: str | None = None) -> None:
+    """Verify ``data`` (stored page bytes) against ``pm.extra["crc32"]``.
+
+    No-op when verification is disabled or the page predates checksums
+    (no ``crc32`` stamp — legacy files stay readable).  Raises
+    ChecksumError on mismatch.  MUST be called before the bytes (or
+    anything derived from them) are inserted into a shared cache."""
+    if not _VERIFY_CHECKSUMS:
+        return
+    expected = pm.extra.get("crc32") if pm.extra else None
+    if expected is None:
+        return
+    actual = page_crc(data)
+    if actual != int(expected):
+        raise ChecksumError(where, int(expected), actual, path=path)
 
 
 class Codec(enum.IntEnum):

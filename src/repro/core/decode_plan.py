@@ -46,7 +46,8 @@ import numpy as np
 
 from repro.core import bitpack
 from repro.core.compression import (Codec, cascade_manifest,
-                                    chunk_decompress_memo, decompress)
+                                    chunk_decompress_memo, decompress,
+                                    verify_page)
 from repro.core.encodings import (Encoding, build_delta_manifest,
                                   decode_plain_page)
 from repro.core.metadata import ChunkMeta, FileMeta, PageMeta
@@ -480,13 +481,17 @@ class DecodePlanner:
             codec = Codec(chunk.codec)
             if chunk.dict_page is not None:
                 dp = chunk.dict_page
+                data = raw[dp.offset - off0:dp.offset - off0
+                           + dp.stored_size]
+                verify_page(data, dp, where=f"{name} dict@{dp.offset}")
                 ctx.payloads[(name, "dict")] = decompress(
-                    raw[dp.offset - off0:dp.offset - off0 + dp.stored_size],
-                    codec, dp.uncompressed_size)
+                    data, codec, dp.uncompressed_size)
             if codec == Codec.NONE:
                 for pi, pm in enumerate(chunk.pages):
-                    ctx.payloads[(name, pi)] = (raw, pm.offset - off0,
-                                                pm.stored_size)
+                    lo = pm.offset - off0
+                    verify_page(raw[lo:lo + pm.stored_size], pm,
+                                where=f"{name} page@{pm.offset}")
+                    ctx.payloads[(name, pi)] = (raw, lo, pm.stored_size)
 
     def _cascade_group_task(self, ctx: "ExecContext",
                             group: CascadeGroup) -> None:
@@ -498,7 +503,10 @@ class DecodePlanner:
             pm = chunk.pages[s.page_index]
             off0, _ = chunk.byte_range
             lo = pm.offset - off0
-            pages.append((pm, ctx.raws[s.column][lo:lo + pm.stored_size]))
+            data = ctx.raws[s.column][lo:lo + pm.stored_size]
+            verify_page(data, pm,
+                        where=f"{s.column} page@{pm.offset}")
+            pages.append((pm, data))
         if group.key is not None:
             datas = ops.cascade_decompress_pages_grouped(pages)
             for s, data in zip(group.slots, datas):
@@ -568,6 +576,42 @@ class DecodePlanner:
                 self._arena_pool.give(buf)
         return {name: ctx.out[name] for name in self.columns}
 
+    # -- fault recovery ------------------------------------------------------
+
+    def evict_rg(self, rg_index: int) -> int:
+        """Drop every shared-cache entry this planner could have populated
+        for ``rg_index`` (decompress memo + dictionary cache); returns the
+        eviction count.  The ScanService calls this before retrying a row
+        group whose decode failed — and for every delivered row group of a
+        permanently failed scan — so bytes derived from a bad read can
+        never be served to a later scan (checksum verification makes
+        poisoning impossible when ON; eviction keeps the invariant even
+        with verification off or for non-checksum failures)."""
+        rg = self.meta.row_groups[rg_index]
+        n = 0
+        memo = chunk_decompress_memo()
+        for name in self.columns:
+            chunk = rg.column(name)
+            key = self._memo_key(chunk, name)
+            if key is not None and memo.pop(key) is not None:
+                n += 1
+            if chunk.dict_page is not None:
+                dp_off = chunk.dict_page.offset
+                n += dict_decode.dict_cache_evict(
+                    lambda k, o=dp_off, nm=name: (k[0] == self.cache_token
+                                                  and k[1] == nm
+                                                  and k[2] == o))
+        return n
+
+    def evict_file(self) -> int:
+        """Drop every shared-cache entry keyed by this planner's file
+        token (all row groups, all columns)."""
+        token = self.cache_token
+        memo = chunk_decompress_memo()
+        n = memo.pop_matching(lambda k: k and k[0] == token)
+        n += dict_decode.dict_cache_evict(lambda k: k and k[0] == token)
+        return n
+
     # -- stages ------------------------------------------------------------
 
     def _memo_key(self, chunk, name: str) -> tuple | None:
@@ -583,19 +627,25 @@ class DecodePlanner:
     def _inflate_chunk_entry(chunk, raw) -> dict[object, object]:
         """Decompress every page of one chunk into the memo entry format:
         {page_index: payload, "dict": dictionary payload} — the shape both
-        the grouped decompress stage and ops.decode_chunk consume."""
+        the grouped decompress stage and ops.decode_chunk consume.
+
+        Every page's stored bytes are CRC-verified *here*, before the
+        entry is built — the caller inserts the result into the shared
+        decompress memo, so this is the cache-poisoning gate: corrupt
+        bytes raise ChecksumError and nothing reaches the memo."""
         codec = Codec(chunk.codec)
         off0, _ = chunk.byte_range
         entry: dict[object, object] = {}
         if chunk.dict_page is not None:
             dp = chunk.dict_page
-            entry["dict"] = decompress(
-                raw[dp.offset - off0:dp.offset - off0 + dp.stored_size],
-                codec, dp.uncompressed_size)
+            data = raw[dp.offset - off0:dp.offset - off0 + dp.stored_size]
+            verify_page(data, dp, where=f"{chunk.name} dict@{dp.offset}")
+            entry["dict"] = decompress(data, codec, dp.uncompressed_size)
         for pi, pm in enumerate(chunk.pages):
             lo = pm.offset - off0
-            entry[pi] = decompress(raw[lo:lo + pm.stored_size], codec,
-                                   pm.uncompressed_size)
+            data = raw[lo:lo + pm.stored_size]
+            verify_page(data, pm, where=f"{chunk.name} page@{pm.offset}")
+            entry[pi] = decompress(data, codec, pm.uncompressed_size)
         return entry
 
     def _fallback_payloads(self, chunk, name: str, raws

@@ -1,0 +1,251 @@
+"""Deterministic fault injection + the scan path's failure taxonomy.
+
+Production object stores and NVMe fleets exhibit a small, well-known
+fault menu: transient I/O errors, short/torn reads, flipped bits, and
+latency spikes.  This module makes every one of them *reproducible* so
+the recovery layers (storage retry — core/storage.py; scan retry
+budget/deadlines — core/scheduler.py; fragment quarantine —
+dataset/executor.py) are testable with exact replay (DESIGN.md §6):
+
+  FaultPlan      a seeded schedule.  Every decision is a pure hash of
+                 ``(seed, kind, offset, size, attempt)`` — NOT a
+                 sequential RNG draw — so concurrent readers observe the
+                 same faults regardless of thread interleaving, and the
+                 same seed replays the same failure sequence.
+  FaultyStorage  wraps any storage backend (Real/Simulated) and injects
+                 the plan's faults on ``fetch``/``fetch_batch``.
+
+``transient=True`` (the default) fires each fault only on a byte range's
+*first* attempt, so a bounded retry always heals it — the chaos-suite
+contract (bit-identical results, ``retries > 0``).  ``transient=False``
+makes faults permanent: every attempt fails, which must surface as a
+typed error or a quarantined fragment, never a wrong answer.
+
+The error taxonomy lives here so every layer classifies consistently:
+
+  retryable      OSError (incl. injected I/O errors and short reads),
+                 TimeoutError (incl. FetchTimeout), ChecksumError (a torn
+                 read looks identical to at-rest corruption until
+                 refetched — retry once through a fresh read),
+                 InjectedDecodeError (a decode worker dying transiently)
+  non-retryable  DeadlineExceeded (the budget itself), everything else
+                 (logic errors must propagate, not burn retries)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import struct
+import threading
+import time
+import zlib
+from collections import Counter
+from collections.abc import Sequence
+
+from repro.core.compression import ChecksumError
+
+
+# ---------------------------------------------------------------------------
+# taxonomy
+# ---------------------------------------------------------------------------
+
+class InjectedFault:
+    """Marker mixin: this exception came from a FaultPlan, not the OS."""
+
+
+class InjectedIOError(InjectedFault, OSError):
+    """Transient-class I/O error (models EIO/dropped connection)."""
+
+
+class InjectedDecodeError(InjectedFault, RuntimeError):
+    """A decode worker failed transiently (models a crashed/evicted
+    worker); the ScanService requeues the row group."""
+
+
+class ShortReadError(OSError):
+    """A read returned fewer bytes than requested (torn read / truncated
+    object).  OSError subclass → retryable."""
+
+    def __init__(self, offset: int, want: int, got: int):
+        self.offset, self.want, self.got = offset, want, got
+        super().__init__(f"short read @{offset}: wanted {want} bytes, "
+                         f"got {got}")
+
+
+class FetchTimeout(TimeoutError):
+    """A storage request exceeded its per-request timeout budget."""
+
+    def __init__(self, offset: int, size: int, elapsed: float,
+                 budget: float):
+        self.offset, self.size = offset, size
+        self.elapsed, self.budget = elapsed, budget
+        super().__init__(f"fetch @{offset} (+{size}) took {elapsed * 1e3:.1f}"
+                         f"ms > {budget * 1e3:.1f}ms budget")
+
+
+class DeadlineExceeded(TimeoutError):
+    """A scan/request deadline expired.  NOT retryable — the deadline is
+    the budget; retrying past it would defeat its purpose."""
+
+
+def is_retryable(exc: BaseException) -> bool:
+    """Classify per the module taxonomy (see module docstring)."""
+    if isinstance(exc, DeadlineExceeded):
+        return False
+    return isinstance(exc, (OSError, TimeoutError, ChecksumError,
+                            InjectedDecodeError))
+
+
+# ---------------------------------------------------------------------------
+# the seeded schedule
+# ---------------------------------------------------------------------------
+
+def _roll(seed: int, kind: str, *coords: int) -> float:
+    """Uniform [0, 1) as a pure function of (seed, kind, coords)."""
+    h = zlib.crc32(kind.encode(),
+                   zlib.crc32(struct.pack("<q", seed)))
+    for c in coords:
+        h = zlib.crc32(struct.pack("<q", c), h)
+    return h / 2**32
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """Seeded, deterministic fault schedule (rates are per-request
+    probabilities in [0, 1]).  Decisions depend only on
+    ``(seed, kind, offset, size, attempt)``, so the plan is replayable
+    and thread-interleaving-proof; per-range attempt numbers are the only
+    mutable state (lock-protected)."""
+
+    seed: int = 0
+    io_error: float = 0.0      # raise InjectedIOError before the read
+    short_read: float = 0.0    # truncate the returned bytes
+    bit_flip: float = 0.0      # flip one byte of the returned bytes
+    latency: float = 0.0       # sleep latency_seconds before the read
+    decode_error: float = 0.0  # raise InjectedDecodeError in decode
+    latency_seconds: float = 0.002
+    transient: bool = True     # faults fire only on attempt 0 per target
+
+    def __post_init__(self):
+        self._lock = threading.Lock()
+        self._attempts: dict[tuple, int] = {}
+        self.injected: Counter = Counter()
+
+    # -- replay helpers ----------------------------------------------------
+
+    def clone(self) -> "FaultPlan":
+        """A fresh plan with the same schedule (seed/rates) and zeroed
+        attempt state — replaying it reproduces the exact sequence."""
+        return FaultPlan(seed=self.seed, io_error=self.io_error,
+                         short_read=self.short_read, bit_flip=self.bit_flip,
+                         latency=self.latency,
+                         decode_error=self.decode_error,
+                         latency_seconds=self.latency_seconds,
+                         transient=self.transient)
+
+    def counters(self) -> dict[str, int]:
+        with self._lock:
+            return dict(self.injected)
+
+    def total_injected(self) -> int:
+        with self._lock:
+            return sum(self.injected.values())
+
+    # -- decision core -------------------------------------------------------
+
+    def _next_attempt(self, key: tuple) -> int:
+        with self._lock:
+            n = self._attempts.get(key, 0)
+            self._attempts[key] = n + 1
+            return n
+
+    def _fires(self, rate: float, kind: str, attempt: int,
+               *coords: int) -> bool:
+        if rate <= 0.0 or (self.transient and attempt > 0):
+            return False
+        if not _roll(self.seed, kind, *coords) < rate:
+            return False
+        with self._lock:
+            self.injected[kind] += 1
+        return True
+
+    # -- storage hooks (FaultyStorage calls these) ---------------------------
+
+    def read_attempt(self, offset: int, size: int) -> int:
+        return self._next_attempt(("r", offset, size))
+
+    def before_read(self, offset: int, size: int, attempt: int) -> None:
+        """Latency spike and/or I/O error for one request."""
+        if self._fires(self.latency, "latency", attempt, offset, size):
+            time.sleep(self.latency_seconds)
+        if self._fires(self.io_error, "io_error", attempt, offset, size):
+            raise InjectedIOError(5, f"injected EIO @{offset} (+{size})")
+
+    def corrupt(self, data: bytes, offset: int, size: int,
+                attempt: int) -> bytes:
+        """Short read and/or bit flip applied to one request's bytes."""
+        if len(data) and self._fires(self.short_read, "short_read",
+                                     attempt, offset, size):
+            keep = max(0, len(data) - 1
+                       - int(_roll(self.seed, "short_len", offset, size)
+                             * (len(data) // 2)))
+            data = data[:keep]
+        if len(data) and self._fires(self.bit_flip, "bit_flip",
+                                     attempt, offset, size):
+            pos = int(_roll(self.seed, "flip_pos", offset, size) * len(data))
+            b = bytearray(data)
+            b[pos] ^= 1 << int(_roll(self.seed, "flip_bit",
+                                     offset, size) * 8)
+            data = bytes(b)
+        return data
+
+    # -- decode hook (Scanner/ScanService call this) --------------------------
+
+    def maybe_decode_error(self, token: int) -> None:
+        """Deterministic transient decode failure for work unit ``token``
+        (e.g. a row-group index)."""
+        attempt = self._next_attempt(("d", token))
+        if self._fires(self.decode_error, "decode_error", attempt, token):
+            raise InjectedDecodeError(f"injected decode fault (rg {token}, "
+                                      f"attempt {attempt})")
+
+
+# ---------------------------------------------------------------------------
+# the storage wrapper
+# ---------------------------------------------------------------------------
+
+class FaultyStorage:
+    """Injects a FaultPlan's faults over any storage backend.  Everything
+    not intercepted (``stats``, ``kind``, model parameters, …) delegates
+    to the wrapped backend, so the wrapper is drop-in for Scanner/reader
+    code that duck-types storage."""
+
+    def __init__(self, inner, plan: FaultPlan):
+        self.inner = inner
+        self.plan = plan
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+    def close(self) -> None:
+        self.inner.close()
+
+    def fetch(self, offset: int, size: int) -> bytes:
+        attempt = self.plan.read_attempt(offset, size)
+        self.plan.before_read(offset, size, attempt)
+        data = self.inner.fetch(offset, size)
+        return self.plan.corrupt(data, offset, size, attempt)
+
+    def fetch_batch(self, requests: Sequence[tuple[int, int]]
+                    ) -> tuple[list[bytes], float]:
+        attempts = [self.plan.read_attempt(o, s) for o, s in requests]
+        for (o, s), a in zip(requests, attempts):
+            self.plan.before_read(o, s, a)
+        datas, dt = self.inner.fetch_batch(requests)
+        return [self.plan.corrupt(d, o, s, a)
+                for d, (o, s), a in zip(datas, requests, attempts)], dt
+
+
+def wrap_storage(storage, plan: FaultPlan | None):
+    """``storage`` under ``plan`` (identity when plan is None)."""
+    return storage if plan is None else FaultyStorage(storage, plan)

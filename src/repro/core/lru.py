@@ -49,6 +49,28 @@ class ByteCappedLRU:
                 self.bytes -= self._sizes.pop(k)
         return value
 
+    def pop(self, key) -> object | None:
+        """Remove and return ``key``'s value (None when absent).  The
+        fault-recovery path uses this to evict entries a failed or
+        retried scan populated, so stale/poisoned bytes cannot be served
+        to a later scan of the same file."""
+        with self._lock:
+            value = self._entries.pop(key, None)
+            if value is not None:
+                self.bytes -= self._sizes.pop(key, 0)
+            return value
+
+    def pop_matching(self, pred: Callable[[object], bool]) -> int:
+        """Evict every entry whose key satisfies ``pred``; returns the
+        eviction count.  Used to drop all entries keyed by a given file
+        token / row group when a scan fails permanently."""
+        with self._lock:
+            doomed = [k for k in self._entries if pred(k)]
+            for k in doomed:
+                del self._entries[k]
+                self.bytes -= self._sizes.pop(k, 0)
+            return len(doomed)
+
     def clear(self) -> None:
         with self._lock:
             self._entries.clear()

@@ -73,8 +73,9 @@ def default_decode_workers() -> int | None:
 
 
 class _MetricsProbe:
-    """Snapshots launch/request/plan counters around one run so RunReports
-    carry the DecodePlan launch economy (see ScanMetrics field docs)."""
+    """Snapshots launch/request/plan/fault counters around one run so
+    RunReports carry the DecodePlan launch economy and the recovery
+    accounting (see ScanMetrics field docs)."""
 
     def __init__(self, scanner: Scanner):
         self.scanner = scanner
@@ -82,6 +83,8 @@ class _MetricsProbe:
         self.requests0 = scanner.storage.stats.requests
         self.plan_s0 = (scanner.planner.plan_seconds
                         if scanner.planner else 0.0)
+        fc = getattr(scanner, "fault_counters", None)
+        self.faults0 = fc() if fc is not None else None
 
     def finish(self, m: ScanMetrics) -> None:
         m.n_kernel_launches = kernel_launch_count() - self.launches0
@@ -90,6 +93,12 @@ class _MetricsProbe:
         if self.scanner.planner is not None:
             m.plan_seconds = (self.scanner.planner.plan_seconds
                               - self.plan_s0)
+        if self.faults0 is not None:
+            now = self.scanner.fault_counters()
+            m.retries = now["retries"] - self.faults0["retries"]
+            m.checksum_failures = (now["checksum_failures"]
+                                   - self.faults0["checksum_failures"])
+            m.timeouts = now["timeouts"] - self.faults0["timeouts"]
 
 
 @dataclasses.dataclass
@@ -194,20 +203,30 @@ class RunReport:
 
     @property
     def launch_summary(self) -> str:
-        """Kernel-launch / I/O-request economy of this run (DecodePlan)."""
+        """Kernel-launch / I/O-request economy of this run (DecodePlan),
+        plus the fault-recovery counters (informational — check_regression
+        displays but never gates them: a chaos run's retries are expected,
+        not a regression)."""
         m = self.metrics
         return (f"launches={m.n_kernel_launches};"
                 f"io_requests={m.n_io_requests};"
-                f"plan_ms={m.plan_seconds * 1e3:.2f}")
+                f"plan_ms={m.plan_seconds * 1e3:.2f};"
+                f"retries={m.retries};"
+                f"checksum_failures={m.checksum_failures};"
+                f"timeouts={m.timeouts}")
 
     @property
     def stage_summary(self) -> str:
-        """Per-stage wall spans of this run (pipeline observability)."""
+        """Per-stage wall spans of this run (pipeline observability),
+        plus the fault-recovery counters (informational — never gated)."""
         w = self.stage_walls
         return (f"fetch_ms={w.get('fetch', 0.0) * 1e3:.2f};"
                 f"decode_ms={w.get('decode', 0.0) * 1e3:.2f};"
                 f"consume_ms={w.get('consume', 0.0) * 1e3:.2f};"
-                f"workers={self.decode_workers}")
+                f"workers={self.decode_workers};"
+                f"retries={self.metrics.retries};"
+                f"checksum_failures={self.metrics.checksum_failures};"
+                f"timeouts={self.metrics.timeouts}")
 
 
 def _account_rg(scanner: Scanner, m: ScanMetrics, i: int, cols: dict,
@@ -279,7 +298,8 @@ def run_overlapped(scanner: Scanner, consume: Consume | None = None,
                    row_groups: Sequence[int] | None = None,
                    predicate_stats=None, depth: int = 2,
                    decode_workers: int | None = None, service=None,
-                   priority: int = 0):
+                   priority: int = 0, retries: int = 3,
+                   deadline: float | None = None):
     """Overlapped scan: fetch ∥ decode ∥ in-order consume.
 
     ``depth`` bounds row groups in flight (fetched or decoded, not yet
@@ -291,21 +311,29 @@ def run_overlapped(scanner: Scanner, consume: Consume | None = None,
     (tests / dedicated pools).  ``priority`` is the ScanService strict
     service class (lower first; the dataset executor biases the pool
     toward earliest fragments) — ignored on the inline path.
+
+    ``retries`` is the scan's transient-failure budget (row groups
+    requeued for a fresh fetch + decode across the whole scan, DESIGN.md
+    §6); ``deadline`` is a whole-scan wall budget in seconds — once
+    exceeded the scan raises ``DeadlineExceeded`` (never retried).
     """
     if decode_workers is None:
         decode_workers = default_decode_workers()
     if decode_workers is not None and int(decode_workers) <= 0:
         return _run_overlapped_inline(scanner, consume, row_groups,
-                                      predicate_stats, depth)
+                                      predicate_stats, depth,
+                                      deadline=deadline)
     return _run_overlapped_service(scanner, consume, row_groups,
                                    predicate_stats, depth,
-                                   decode_workers, service, priority)
+                                   decode_workers, service, priority,
+                                   retries=retries, deadline=deadline)
 
 
 def _run_overlapped_service(scanner: Scanner, consume: Consume | None,
                             row_groups, predicate_stats, depth: int,
                             decode_workers: int | None, service,
-                            priority: int = 0):
+                            priority: int = 0, retries: int = 3,
+                            deadline: float | None = None):
     """Shared-pool path: submit to the ScanService, consume in order."""
     from repro.core.scheduler import scan_service
 
@@ -318,7 +346,8 @@ def _run_overlapped_service(scanner: Scanner, consume: Consume | None,
                         predicate_stats=predicate_stats, depth=depth,
                         workers_hint=hint,
                         label=getattr(scanner, "path", "scan"),
-                        priority=priority)
+                        priority=priority, retries=retries,
+                        deadline=deadline)
     acc = None
     consume_times: list[float] = []
     try:
@@ -347,7 +376,8 @@ def _run_overlapped_service(scanner: Scanner, consume: Consume | None,
 
 
 def _run_overlapped_inline(scanner: Scanner, consume: Consume | None,
-                           row_groups, predicate_stats, depth: int):
+                           row_groups, predicate_stats, depth: int,
+                           deadline: float | None = None):
     """The PR-1 executor: private fetch thread ∥ inline decode + consume.
     Kept behind ``decode_workers=0`` so file-layout comparisons can pin an
     executor without pool parallelism."""
@@ -385,6 +415,15 @@ def _run_overlapped_inline(scanner: Scanner, consume: Consume | None,
     decode_wall = 0.0
     try:
         for _ in range(len(plan)):
+            if (deadline is not None
+                    and time.perf_counter() - t0 > deadline):
+                from repro.core.faults import DeadlineExceeded
+                cf = getattr(scanner, "count_fault", None)
+                if cf is not None:
+                    cf(timeouts=1)
+                raise DeadlineExceeded(
+                    f"scan {getattr(scanner, 'path', '?')}: deadline "
+                    "exceeded")
             item = fetched.get()
             if item is None:
                 break               # fetch aborted

@@ -13,7 +13,8 @@ from collections.abc import Callable, Sequence
 
 import numpy as np
 
-from repro.core.compression import Codec, decompress
+from repro.core.compression import (ChecksumError, Codec, decompress,
+                                    page_crc, verify_checksums, verify_page)
 from repro.core.encodings import Encoding, decode_page
 from repro.core.metadata import MAGIC, ChunkMeta, FileMeta, RowGroupMeta
 from repro.core.schema import Field
@@ -21,6 +22,27 @@ from repro.core.storage import DEFAULT_COALESCE_GAP, fetch_ranges
 from repro.core.table import StringColumn, Table
 
 Fetch = Callable[[int, int], bytes]
+
+
+def _parse_footer_block(block: bytes, path: str) -> FileMeta:
+    """Parse a footer block ``json + LE32 crc32(json)``.  Crc-less legacy
+    footers (whole block is the json) stay readable; a block that is
+    neither raises ChecksumError — corrupt metadata must never yield
+    bogus page offsets."""
+    if len(block) >= 4:
+        body, tail = block[:-4], block[-4:]
+        expected = struct.unpack("<I", tail)[0]
+        if page_crc(body) == expected:
+            return FileMeta.from_json_bytes(body)
+        if verify_checksums():
+            # distinguish "legacy crc-less footer" from "corrupt footer":
+            # a legacy block is itself valid JSON end to end
+            try:
+                return FileMeta.from_json_bytes(block)
+            except Exception:
+                raise ChecksumError("footer", expected, page_crc(body),
+                                    path=path) from None
+    return FileMeta.from_json_bytes(block)
 
 
 def read_footer(path: str) -> FileMeta:
@@ -33,7 +55,7 @@ def read_footer(path: str) -> FileMeta:
         if tail[8:] != MAGIC:
             raise ValueError(f"{path}: bad trailing magic")
         f.seek(size - 16 - footer_len)
-        meta = FileMeta.from_json_bytes(f.read(footer_len))
+        meta = _parse_footer_block(f.read(footer_len), path)
         f.seek(0)
         if f.read(8) != MAGIC:
             raise ValueError(f"{path}: bad leading magic")
@@ -100,6 +122,8 @@ class TabFileReader:
 
         def payload(pm):
             data = raw[pm.offset - off0:pm.offset - off0 + pm.stored_size]
+            verify_page(data, pm, where=f"{chunk.name} page@{pm.offset}",
+                        path=self.path)
             return decompress(data, codec, pm.uncompressed_size)
 
         dict_payload = payload(chunk.dict_page) if chunk.dict_page else None

@@ -25,16 +25,20 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import threading
 import time
 from collections.abc import Iterator, Sequence
 
 import numpy as np
 
-from repro.core.compression import inflate_backend
+from repro.core.compression import ChecksumError, inflate_backend
 from repro.core.decode_plan import planner_for
+from repro.core.faults import (FaultPlan, InjectedDecodeError, is_retryable,
+                               wrap_storage)
 from repro.core.metadata import ChunkMeta
 from repro.core.reader import TabFileReader, read_footer
-from repro.core.storage import (DEFAULT_COALESCE_GAP, RealStorage,
+from repro.core.storage import (DEFAULT_COALESCE_GAP, DEFAULT_RETRY_POLICY,
+                                RealStorage, RetryingStorage, RetryPolicy,
                                 fetch_coalesced, open_storage)
 from repro.kernels import ops
 from repro.kernels.common import kernel_launch_count
@@ -74,6 +78,12 @@ class ScanMetrics:
         default_factory=list)
     decode_p2_start_per_rg: list[int] = dataclasses.field(
         default_factory=list)
+    # fault-recovery accounting (DESIGN.md §6): extra attempts spent at
+    # any layer (storage refetch, decode requeue), CRC failures observed
+    # (whether healed by refetch or propagated), and per-request timeouts.
+    retries: int = 0
+    checksum_failures: int = 0
+    timeouts: int = 0
     # informational: the gzip-inflate backend active for this process
     # (isal / zlib-ng / zlib — core/compression.py)
     inflate_backend: str = inflate_backend()
@@ -181,18 +191,59 @@ class Scanner:
     def __init__(self, path: str, columns: list[str] | None = None,
                  storage=None, decode_backend: str = "pallas",
                  use_plan: bool = True,
-                 coalesce_gap: int = DEFAULT_COALESCE_GAP):
+                 coalesce_gap: int = DEFAULT_COALESCE_GAP,
+                 retry: RetryPolicy | None = None,
+                 fault_plan: FaultPlan | None = None):
         self.path = path
         self.meta = read_footer(path)
         self.columns = columns if columns is not None \
             else self.meta.schema.names
-        self.storage = storage if storage is not None else RealStorage(path)
+        storage = storage if storage is not None else RealStorage(path)
+        # fault-recovery sandwich (DESIGN.md §6): the FaultPlan injects
+        # *under* the retry wrapper, so retries heal transient injections
+        # exactly as they would heal real storage faults.  Retries are on
+        # by default (DEFAULT_RETRY_POLICY); attempts=1 disables.
+        self.fault_plan = fault_plan
+        storage = wrap_storage(storage, fault_plan)
+        self.retry = retry if retry is not None else DEFAULT_RETRY_POLICY
+        if self.retry.attempts > 1 or self.retry.timeout is not None:
+            storage = RetryingStorage(storage, self.retry)
+        self.storage = storage
         assert decode_backend in ("pallas", "host")
         self.decode_backend = decode_backend
         self.coalesce_gap = coalesce_gap
         self.planner = planner_for(path, self.meta, self.columns,
                                    decode_backend) if use_plan else None
         self._reader = TabFileReader(path, fetch=self.storage.fetch)
+        # decode-layer fault accounting; storage-layer counts live in the
+        # RetryingStorage.  Lock-protected: the ScanService's decode
+        # workers increment concurrently.
+        self._fault_lock = threading.Lock()
+        self._decode_retries = 0
+        self._checksum_failures = 0
+        self._timeouts = 0
+
+    # -- fault accounting ----------------------------------------------------
+
+    def count_fault(self, *, retries: int = 0, checksum_failures: int = 0,
+                    timeouts: int = 0) -> None:
+        """Record decode-layer recovery events (scheduler requeues, CRC
+        failures, deadline-adjacent timeouts) against this scanner."""
+        with self._fault_lock:
+            self._decode_retries += retries
+            self._checksum_failures += checksum_failures
+            self._timeouts += timeouts
+
+    def fault_counters(self) -> dict[str, int]:
+        """Merged recovery counters: decode layer + storage retry layer."""
+        rs = getattr(self.storage, "retry_stats", None)
+        with self._fault_lock:
+            return {
+                "retries": self._decode_retries
+                + (rs.retries if rs else 0),
+                "checksum_failures": self._checksum_failures,
+                "timeouts": self._timeouts + (rs.timeouts if rs else 0),
+            }
 
     # -- planning -------------------------------------------------------------
 
@@ -242,25 +293,61 @@ class Scanner:
         if "decode_rg" in self.__dict__:
             from repro.core.scheduler import OpaqueDecodeJob
             return OpaqueDecodeJob(self, rg_index, raws)
+        if self.fault_plan is not None:
+            self.fault_plan.maybe_decode_error(rg_index)
         if self.planner is not None:
             return _PlannedDecodeJob(self, rg_index, raws)
         return _PerChunkDecodeJob(self, rg_index, raws)
 
+    def _decode_rg_once(self, rg_index: int, raws: dict[str, bytes]
+                        ) -> dict[str, ops.DecodeResult]:
+        if self.fault_plan is not None:
+            self.fault_plan.maybe_decode_error(rg_index)
+        if self.planner is not None:
+            return self.planner.execute(rg_index, raws)
+        out = {}
+        rg = self.meta.row_groups[rg_index]
+        for name in self.columns:
+            chunk = rg.column(name)
+            field = self.meta.schema.field(name)
+            out[name] = ops.decode_chunk(chunk, field, raws[name],
+                                         use_kernels=(self.decode_backend
+                                                      == "pallas"))
+        return out
+
+    def retry_decode(self, rg_index: int, e: BaseException) -> bool:
+        """Prepare a decode retry after failure ``e``: count it, evict
+        anything the failed attempt may have pushed into the shared
+        caches, and say whether the retry budget allows another try
+        (callers then refetch the raw bytes and decode again).  Shared by
+        the blocking path below and the ScanService requeue path."""
+        if isinstance(e, ChecksumError):
+            self.count_fault(checksum_failures=1)
+        if isinstance(e, TimeoutError):
+            self.count_fault(timeouts=1)
+        if not is_retryable(e):
+            return False
+        if self.planner is not None:
+            self.planner.evict_rg(rg_index)
+        return True
+
     def decode_rg(self, rg_index: int, raws: dict[str, bytes]
                   ) -> tuple[dict[str, ops.DecodeResult], float]:
         t0 = time.perf_counter()
-        if self.planner is not None:
-            out = self.planner.execute(rg_index, raws)
-        else:
-            out = {}
-            rg = self.meta.row_groups[rg_index]
-            for name in self.columns:
-                chunk = rg.column(name)
-                field = self.meta.schema.field(name)
-                res = ops.decode_chunk(chunk, field, raws[name],
-                                       use_kernels=(self.decode_backend
-                                                    == "pallas"))
-                out[name] = res
+        out = None
+        for attempt in range(max(1, self.retry.attempts)):
+            try:
+                out = self._decode_rg_once(rg_index, raws)
+                break
+            except (ChecksumError, InjectedDecodeError) as e:
+                # a CRC failure here may be transit corruption (torn DMA,
+                # injected flip): evict, refetch clean bytes, try again —
+                # but never more times than the storage retry budget
+                if (not self.retry_decode(rg_index, e)
+                        or attempt + 1 >= max(1, self.retry.attempts)):
+                    raise
+                self.count_fault(retries=1)
+                raws, _ = self.fetch_rg(rg_index)
         # flush async dispatch so decode time is honest
         for res in out.values():
             if res.on_device:
@@ -283,6 +370,7 @@ class Scanner:
         m = ScanMetrics(backend=getattr(self.storage, "kind", "real"))
         launches0 = kernel_launch_count()
         requests0 = self.storage.stats.requests
+        faults0 = self.fault_counters()
         plan_s0 = self.planner.plan_seconds if self.planner else 0.0
         acc = None
         for i in self.plan(predicate_stats, row_groups):
@@ -303,6 +391,11 @@ class Scanner:
                 acc = consume(acc, i, cols)
         m.n_kernel_launches = kernel_launch_count() - launches0
         m.n_io_requests = self.storage.stats.requests - requests0
+        faults = self.fault_counters()
+        m.retries = faults["retries"] - faults0["retries"]
+        m.checksum_failures = (faults["checksum_failures"]
+                               - faults0["checksum_failures"])
+        m.timeouts = faults["timeouts"] - faults0["timeouts"]
         if self.planner is not None:
             m.plan_seconds = self.planner.plan_seconds - plan_s0
         return acc, m
@@ -312,7 +405,10 @@ def open_scanner(path: str, columns=None, backend: str = "real",
                  n_lanes: int = 1, decode_backend: str = "pallas",
                  lane_bandwidth: float = 7e9, latency: float = 20e-6,
                  use_plan: bool = True,
-                 coalesce_gap: int = DEFAULT_COALESCE_GAP) -> Scanner:
+                 coalesce_gap: int = DEFAULT_COALESCE_GAP,
+                 retry: RetryPolicy | None = None,
+                 fault_plan: FaultPlan | None = None) -> Scanner:
     storage = open_storage(path, backend, n_lanes, lane_bandwidth, latency)
     return Scanner(path, columns, storage, decode_backend,
-                   use_plan=use_plan, coalesce_gap=coalesce_gap)
+                   use_plan=use_plan, coalesce_gap=coalesce_gap,
+                   retry=retry, fault_plan=fault_plan)

@@ -58,11 +58,15 @@ N while that scan is active.
 
 from __future__ import annotations
 
+import atexit
 import os
+import sys
 import threading
 import time
 from collections import deque
 from collections.abc import Callable, Sequence
+
+from repro.core.faults import DeadlineExceeded, is_retryable
 
 
 class ScanCancelled(RuntimeError):
@@ -120,7 +124,8 @@ class _RgJob:
     DecodeResults are safe to share)."""
 
     __slots__ = ("rg_index", "raws", "io_dt", "job", "pending",
-                 "phase", "chunk_times", "p2_start", "key", "subscribers")
+                 "phase", "chunk_times", "p2_start", "key", "subscribers",
+                 "failed")
 
     def __init__(self, seq_scan, seq: int, rg_index: int, raws,
                  io_dt: float, key):
@@ -135,6 +140,8 @@ class _RgJob:
                                   # item (the phase barrier, for the model)
         self.key = key            # sharing identity, None → not shareable
         self.subscribers: list[tuple] = [(seq_scan, seq)]
+        self.failed = False       # an item of this job raised; queued and
+                                  # in-flight siblings must stand down
 
     def live_scan(self):
         """First subscriber scan still interested in this job, or None."""
@@ -173,13 +180,23 @@ class _ScanState:
 
     def __init__(self, service: "ScanService", scanner, plan: list[int],
                  depth: int, workers_hint: int | None, label: str,
-                 priority: int = 0):
+                 priority: int = 0, retries: int = 3,
+                 deadline: float | None = None):
         self.scanner = scanner
         self.plan = plan
         self.depth = max(1, depth)
         self.workers_hint = workers_hint
         self.label = label
         self.priority = priority
+        # fault-recovery state (DESIGN.md §6): a transiently failed row
+        # group (decode worker died, refetchable corruption) is requeued
+        # for a fresh fetch+decode while budget lasts; ``refetch`` seqs
+        # keep holding their in-flight credit (released only on ack), so
+        # a retry can never over-subscribe the scan's depth bound.
+        self.retries_left = max(0, retries)
+        self.deadline = (None if deadline is None
+                         else time.monotonic() + deadline)
+        self.refetch: deque = deque()
         self.share_key = _share_key(scanner)
         self.shared_rgs = 0            # RGs satisfied by cooperative jobs
         self.workers_seen = 1          # max pool width while this scan ran
@@ -198,6 +215,10 @@ class _ScanState:
     @property
     def dead(self) -> bool:
         return self.error is not None or self.cancelled or self.finished
+
+    def past_deadline(self) -> bool:
+        return (self.deadline is not None
+                and time.monotonic() > self.deadline)
 
     def span(self, which: str) -> float:
         lo, hi = self.fetch_span if which == "fetch" else self.decode_span
@@ -236,6 +257,9 @@ class ScanHandle:
                 svc._finish_scan_locked(scan)
                 raise StopIteration
             while (self._next_seq not in scan.done and not scan.dead):
+                if scan.past_deadline():
+                    svc._deadline_fail_locked(scan)
+                    break
                 scan.done_cv.wait(timeout=0.1)
             if scan.error is not None or scan.cancelled:
                 err, cancelled = scan.error, scan.cancelled
@@ -251,10 +275,23 @@ class ScanHandle:
         return item
 
     def cancel(self) -> None:
-        with self._svc._lock:
-            if not self._scan.finished:
-                self._scan.cancelled = True
-                self._svc._finish_scan_locked(self._scan)
+        """Idempotent: safe to call any number of times, from ``close``,
+        ``__del__``, or interpreter-shutdown (atexit) paths — a finished
+        scan short-circuits without touching the service."""
+        scan = self._scan
+        if scan.finished:
+            return
+        try:
+            with self._svc._lock:
+                if not scan.finished:
+                    scan.cancelled = True
+                    self._svc._finish_scan_locked(scan)
+        except Exception:
+            # during interpreter finalization the service's threads and
+            # condition variables may already be torn down; the scan dies
+            # with the process, so there is nothing left to release
+            if not sys.is_finalizing():
+                raise
 
     # A handle abandoned before exhaustion would otherwise leak its scan
     # registration (round-robin slot, pinned decoded RGs, fetch credits)
@@ -334,13 +371,20 @@ class ScanService:
     def submit(self, scanner, row_groups: Sequence[int] | None = None,
                predicate_stats=None, depth: int = 2,
                workers_hint: int | None = None,
-               label: str = "scan", priority: int = 0) -> ScanHandle:
+               label: str = "scan", priority: int = 0,
+               retries: int = 3,
+               deadline: float | None = None) -> ScanHandle:
         """Register one scan; returns its in-order consume handle.
         ``priority`` selects the scan's strict service class (lower is
-        served first; round-robin within a class)."""
+        served first; round-robin within a class).  ``retries`` is the
+        scan's transient-failure budget (requeued row groups across the
+        whole scan); ``deadline`` is a whole-scan wall budget in seconds —
+        once exceeded the scan fails with DeadlineExceeded (never
+        retried)."""
         plan = list(scanner.plan(predicate_stats, row_groups))
         scan = _ScanState(self, scanner, plan, depth, workers_hint, label,
-                          priority=priority)
+                          priority=priority, retries=retries,
+                          deadline=deadline)
         with self._lock:
             if self._shutdown:
                 raise RuntimeError("ScanService is shut down")
@@ -446,16 +490,24 @@ class ScanService:
                        for off, scan in enumerate(cls[k:] + cls[:k]))
         return out
 
-    def _next_fetch_locked(self) -> tuple[_ScanState, int, bool] | None:
-        """Next (scan, seq, subscribed) to fetch, priority-ordered
-        round-robin across scans with fetch credit.  When an identical job
-        for that row group is already in flight (cooperative scans), the
-        scan subscribes to it instead — no fetch, no decode, the credit
-        stays held until the delivered RG is acked like any other."""
+    def _next_fetch_locked(self
+                           ) -> tuple[_ScanState, int, bool, bool] | None:
+        """Next (scan, seq, subscribed, is_retry) to fetch, priority-
+        ordered round-robin across scans with fetch credit.  When an
+        identical job for that row group is already in flight (cooperative
+        scans), the scan subscribes to it instead — no fetch, no decode,
+        the credit stays held until the delivered RG is acked like any
+        other.  ``refetch`` seqs (transient-failure requeues) are served
+        before new fetch-ahead, already hold their credit, and never
+        share — a retry exists to pull *fresh* bytes."""
         n = len(self._scans)
         for scan, off in self._service_order_locked(self._fetch_rr):
-            if (scan.dead or scan.credits <= 0
-                    or scan.next_fetch >= len(scan.plan)):
+            if scan.dead:
+                continue
+            if scan.refetch:
+                self._fetch_rr = (self._fetch_rr + off + 1) % max(1, n)
+                return scan, scan.refetch.popleft(), False, True
+            if scan.credits <= 0 or scan.next_fetch >= len(scan.plan):
                 continue
             self._fetch_rr = (self._fetch_rr + off + 1) % max(1, n)
             scan.credits -= 1
@@ -467,8 +519,8 @@ class ScanService:
                     job.subscribers.append((scan, seq))
                     scan.shared_rgs += 1
                     self.shared_rgs += 1
-                    return scan, seq, True
-            return scan, seq, False
+                    return scan, seq, True, False
+            return scan, seq, False, False
         return None
 
     def _fetch_loop(self) -> None:
@@ -480,14 +532,17 @@ class ScanService:
                 if got is None:
                     self._fetch_cv.wait(timeout=0.1)
                     continue
-            scan, seq, subscribed = got
+            scan, seq, subscribed, is_retry = got
             if subscribed:
+                continue
+            if scan.past_deadline():
+                self._deadline_fail(scan)
                 continue
             t0 = time.perf_counter()
             try:
                 raws, io_dt = scan.scanner.fetch_rg(scan.plan[seq])
             except BaseException as e:
-                self._fail_scan(scan, e)
+                self._handle_failure(e, [(scan, seq)], None)
                 continue
             t1 = time.perf_counter()
             with self._lock:
@@ -499,7 +554,9 @@ class ScanService:
                 self._win["io"] += t1 - t0
                 if scan.dead:
                     continue
-                key = (None if scan.share_key is None
+                # retried row groups never re-register for sharing: their
+                # purpose is fresh bytes decoded from scratch
+                key = (None if scan.share_key is None or is_retry
                        else (scan.share_key, scan.plan[seq]))
                 rgjob = _RgJob(scan, seq, scan.plan[seq], raws, io_dt, key)
                 if key is not None and key not in self._inflight:
@@ -529,8 +586,8 @@ class ScanService:
         for scan, off in self._service_order_locked(self._rr):
             while scan.ready:
                 item = scan.ready.popleft()
-                if item[1].live_scan() is None:
-                    continue         # no subscriber left — drop the item
+                if item[1].live_scan() is None or item[1].failed:
+                    continue   # no subscriber left / job failed — drop it
                 self._rr = (self._rr + off + 1) % max(1, n)
                 return scan, item
         return None
@@ -557,15 +614,23 @@ class ScanService:
                 prefer = None if delivered else scan
             except BaseException as e:  # noqa: BLE001 — isolated per scan
                 prefer = None
-                # a failing item poisons exactly the scans sharing its job
-                # (usually one); the pool and every other scan live on
-                for sub, _ in item[1].subscribers:
-                    self._fail_scan(sub, e)
+                # a failing item affects exactly the scans sharing its job
+                # (usually one); the pool and every other scan live on.
+                # Transient failures requeue the row group for a fresh
+                # fetch within each subscriber's retry budget; the rest
+                # fail their scan.
+                self._handle_failure(e, list(item[1].subscribers), item[1])
 
     def _run_item(self, scan: _ScanState, item: tuple) -> bool:
         """Execute one work item; returns True when it completed (and
         delivered) its whole row-group job."""
         kind, rgjob, fn = item
+        if rgjob.failed:
+            return False
+        live = rgjob.live_scan()
+        if live is not None and live.past_deadline():
+            raise DeadlineExceeded(
+                f"scan {live.label}: deadline exceeded")
         t0 = time.perf_counter()
         if kind == "open":
             rgjob.job = self._job_for(scan.scanner, rgjob.rg_index,
@@ -578,6 +643,8 @@ class ScanService:
             fn()
             self._note_item(scan, rgjob, t0)
             with self._lock:
+                if rgjob.failed:
+                    return False   # a sibling item failed concurrently
                 rgjob.pending -= 1
                 if rgjob.pending > 0:
                     return False
@@ -606,6 +673,8 @@ class ScanService:
     def _advance(self, scan: _ScanState, rgjob: _RgJob) -> bool:
         """Phase transition on the worker that drained the previous phase:
         1 → build+queue phase-2 items; 2 → finalize (join) and deliver."""
+        if rgjob.failed:
+            return False
         if rgjob.phase == 1:
             t0 = time.perf_counter()
             tasks = list(rgjob.job.phase2_tasks())
@@ -696,6 +765,79 @@ class ScanService:
             scan.done_cv.notify_all()
             self._fetch_cv.notify_all()
 
+    def _deadline_fail(self, scan: _ScanState) -> None:
+        with self._lock:
+            self._deadline_fail_locked(scan)
+
+    def _deadline_fail_locked(self, scan: _ScanState) -> None:
+        """Expire one scan's whole-scan deadline: counted as a timeout,
+        never retried (the deadline IS the budget)."""
+        if scan.dead:
+            return
+        cf = getattr(scan.scanner, "count_fault", None)
+        if cf is not None:
+            cf(timeouts=1)
+        self._fail_scan(scan, DeadlineExceeded(
+            f"scan {scan.label}: deadline exceeded"))
+
+    def _handle_failure(self, exc: BaseException,
+                        subscribers: list[tuple["_ScanState", int]],
+                        rgjob: "_RgJob | None") -> None:
+        """Route one failed fetch (``rgjob`` None) or decode item to its
+        subscriber scans (DESIGN.md §6).  Transient failures *requeue* the
+        row group for a fresh fetch + decode within the scan's retry
+        budget — evicting anything the failed attempt pushed into the
+        shared caches first, so a retry always decodes fresh bytes.
+        Everything else permanently fails that scan only: its shared-cache
+        entries are evicted (no poisoning), its queued items drop, and the
+        pool and every other scan live on."""
+        with self._lock:
+            if rgjob is not None:
+                if rgjob.failed:
+                    return   # a concurrent sibling item already routed it
+                rgjob.failed = True
+                if (rgjob.key is not None
+                        and self._inflight.get(rgjob.key) is rgjob):
+                    self._inflight.pop(rgjob.key)
+            for scan, seq in subscribers:
+                if scan.dead:
+                    continue
+                if scan.past_deadline():
+                    self._deadline_fail_locked(scan)
+                    continue
+                if isinstance(exc, DeadlineExceeded):
+                    # this scan's own deadline is fine (checked above): a
+                    # cooperative sibling's budget expired and killed the
+                    # shared job — not this scan's fault, requeue free
+                    retryable = True
+                else:
+                    retryable = is_retryable(exc)
+                    rd = getattr(scan.scanner, "retry_decode", None)
+                    if rd is not None:
+                        # counts checksum/timeout once and evicts this
+                        # RG's shared-cache entries (retry or not)
+                        retryable = rd(scan.plan[seq], exc) and retryable
+                if retryable and scan.retries_left > 0:
+                    scan.retries_left -= 1
+                    cf = getattr(scan.scanner, "count_fault", None)
+                    if cf is not None:
+                        cf(retries=1)
+                    # the seq keeps holding its in-flight credit (released
+                    # only on ack), so the retry cannot over-subscribe the
+                    # scan's depth bound
+                    scan.refetch.append(seq)
+                    continue
+                # permanent: drop every shared-cache entry this scan's
+                # planner may have populated, then fail it in isolation
+                planner = getattr(scan.scanner, "planner", None)
+                if planner is not None:
+                    try:
+                        planner.evict_file()
+                    except Exception:
+                        pass
+                self._fail_scan(scan, exc)
+            self._fetch_cv.notify_all()
+
     def _finish_scan_locked(self, scan: _ScanState) -> None:
         if scan.finished:
             return
@@ -733,10 +875,23 @@ def scan_service() -> ScanService:
 
 
 def shutdown_scan_service() -> None:
-    """Tear down the singleton (tests); the next scan_service() call
-    builds a fresh one."""
+    """Tear down the singleton (tests, atexit); idempotent — the next
+    scan_service() call builds a fresh one."""
     global _SERVICE
     with _SERVICE_LOCK:
         if _SERVICE is not None:
             _SERVICE.shutdown()
             _SERVICE = None
+
+
+@atexit.register
+def _shutdown_at_exit() -> None:
+    # Interpreter-shutdown net: tear the singleton down while its threads
+    # and condition variables are still joinable, so abandoned ScanHandles
+    # collected during final GC find a finished service instead of racing
+    # a half-torn-down interpreter (their cancel() additionally guards on
+    # sys.is_finalizing for handles that outlive even this hook).
+    try:
+        shutdown_scan_service()
+    except Exception:
+        pass

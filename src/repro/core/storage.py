@@ -250,6 +250,130 @@ class SimulatedStorage:
 Storage = object  # duck-typed: RealStorage | SimulatedStorage
 
 
+# ---------------------------------------------------------------------------
+# bounded retry with exponential backoff + jitter and per-request timeouts
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """How storage reads recover from transient faults (DESIGN.md §6).
+
+    ``attempts`` is the total try count (1 = no retry).  Backoff is
+    exponential from ``base_delay`` capped at ``max_delay``, with
+    *deterministic* jitter — a hash of (attempt, offset) — so fault-replay
+    tests see identical schedules.  ``timeout`` is a per-request budget:
+    ``os.pread`` cannot be interrupted mid-call, so the check is post-hoc
+    (a request that came back over budget counts as a timeout and is
+    retried/raised) — it bounds how long a latency spike's bytes are
+    trusted, which is the recoverable failure this layer owns; whole-scan
+    budgets are the scheduler's deadline (core/scheduler.py)."""
+
+    attempts: int = 3
+    base_delay: float = 0.001
+    max_delay: float = 0.050
+    jitter: float = 0.5
+    timeout: float | None = None
+
+    def delay(self, attempt: int, salt: int = 0) -> float:
+        import zlib
+        import struct as _struct
+        base = min(self.max_delay, self.base_delay * (2 ** attempt))
+        u = zlib.crc32(_struct.pack("<qq", attempt, salt)) / 2**32
+        return base * (1.0 + self.jitter * u)
+
+
+#: retries on by default: 3 tries heal any single-shot transient fault
+DEFAULT_RETRY_POLICY = RetryPolicy()
+
+NO_RETRY = RetryPolicy(attempts=1)
+
+
+@dataclasses.dataclass
+class RetryStats:
+    retries: int = 0      # extra attempts actually spent
+    timeouts: int = 0     # requests that exceeded the per-request budget
+    short_reads: int = 0  # truncated reads detected (then retried)
+
+
+class RetryingStorage:
+    """Bounded-retry wrapper over any storage backend.
+
+    ``fetch`` retries retryable failures (core/faults.py taxonomy) and
+    validates length — a short read is retried like an I/O error, never
+    returned.  ``fetch_batch`` tries the batch once; on any failure it
+    degrades to per-request retried fetches, so one bad request costs one
+    batch-shaped region its coalescing, not the scan its life.  Counters
+    land in ``retry_stats`` (ScanMetrics picks them up); everything else
+    delegates to the wrapped backend."""
+
+    def __init__(self, inner, policy: RetryPolicy | None = None):
+        self.inner = inner
+        self.policy = policy if policy is not None else DEFAULT_RETRY_POLICY
+        self.retry_stats = RetryStats()
+        self._retry_lock = threading.Lock()
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+    def close(self) -> None:
+        self.inner.close()
+
+    def _note(self, **deltas) -> None:
+        with self._retry_lock:
+            for k, v in deltas.items():
+                setattr(self.retry_stats, k,
+                        getattr(self.retry_stats, k) + v)
+
+    def _fetch_once(self, offset: int, size: int) -> bytes:
+        from repro.core.faults import FetchTimeout, ShortReadError
+        t0 = time.perf_counter()
+        data = self.inner.fetch(offset, size)
+        elapsed = time.perf_counter() - t0
+        if (self.policy.timeout is not None
+                and elapsed > self.policy.timeout):
+            self._note(timeouts=1)
+            raise FetchTimeout(offset, size, elapsed, self.policy.timeout)
+        if len(data) < size:
+            self._note(short_reads=1)
+            raise ShortReadError(offset, size, len(data))
+        return data
+
+    def fetch(self, offset: int, size: int) -> bytes:
+        from repro.core.faults import is_retryable
+        last: BaseException | None = None
+        for attempt in range(max(1, self.policy.attempts)):
+            if attempt:
+                self._note(retries=1)
+                time.sleep(self.policy.delay(attempt - 1, offset))
+            try:
+                return self._fetch_once(offset, size)
+            except BaseException as e:  # noqa: BLE001 — reclassified below
+                if not is_retryable(e):
+                    raise
+                last = e
+        raise last
+
+    def fetch_batch(self, requests: Sequence[tuple[int, int]]
+                    ) -> tuple[list[bytes], float]:
+        from repro.core.faults import is_retryable
+        try:
+            datas, dt = self.inner.fetch_batch(list(requests))
+            if all(len(d) == s for d, (_, s) in zip(datas, requests)):
+                return datas, dt
+            self._note(short_reads=1)
+        except BaseException as e:  # noqa: BLE001 — reclassified below
+            if not is_retryable(e):
+                raise
+        # degraded path: per-request retried fetches (wall-measured — the
+        # modeled batch time does not apply to a fault-recovery replay).
+        # The replay is itself one retry of the batch-shaped region, even
+        # when every per-request fetch then succeeds first try.
+        self._note(retries=1)
+        t0 = time.perf_counter()
+        out = [self.fetch(o, s) for o, s in requests]
+        return out, time.perf_counter() - t0
+
+
 def open_storage(path: str, backend: str = "real", n_lanes: int = 1,
                  lane_bandwidth: float = 7e9,
                  latency: float = 20e-6):

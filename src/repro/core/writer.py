@@ -12,7 +12,7 @@ import struct
 
 import numpy as np
 
-from repro.core.compression import Codec, maybe_compress_chunk
+from repro.core.compression import Codec, maybe_compress_chunk, page_crc
 from repro.core.config import FileConfig
 from repro.core.encodings import ChunkEncoding, select_chunk_encoding
 from repro.core.metadata import (MAGIC, ChunkMeta, FileMeta, PageMeta,
@@ -94,7 +94,10 @@ class TabFileWriter:
             page_metas: list[PageMeta] = []
             for enc_page, stored_payload in zip(uncomp_pages, stored):
                 self._f.write(stored_payload)
-                extra = enc_page.extra
+                # stamp a CRC32 of the *stored* bytes so the read path can
+                # verify before decompressing / caching (compression.py)
+                extra = dict(enc_page.extra,
+                             crc32=page_crc(stored_payload))
                 if codec == Codec.CASCADE:
                     # stamp the cascade frame's packed-run widths into the
                     # footer so the DecodePlanner can group the device
@@ -128,7 +131,11 @@ class TabFileWriter:
             schema=self._schema, num_rows=self._num_rows,
             row_groups=self._rg_metas, logical_nbytes=self._logical_nbytes,
             writer_config=self.config.fingerprint())
-        footer = meta.to_json_bytes()
+        footer_json = meta.to_json_bytes()
+        # footer block = json + LE32 crc32(json); footer_len covers both,
+        # so read_footer can verify the metadata before trusting any
+        # page offset in it (reader.py handles crc-less legacy footers)
+        footer = footer_json + struct.pack("<I", page_crc(footer_json))
         self._f.write(footer)
         self._f.write(struct.pack("<Q", len(footer)))
         self._f.write(MAGIC)

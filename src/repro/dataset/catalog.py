@@ -25,9 +25,12 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import re
+import shutil
 
 import numpy as np
 
+from repro.core.compression import ChecksumError, page_crc
 from repro.core.config import FileConfig
 from repro.core.metadata import FileMeta
 from repro.core.reader import read_footer
@@ -37,9 +40,20 @@ from repro.core.table import StringColumn, Table
 from repro.core.writer import write_table
 
 MANIFEST_NAME = "manifest.json"
+MANIFEST_PREV_NAME = "manifest.prev.json"   # last-known-good generation
 MANIFEST_VERSION = 1
 
+#: generation-tagged fragment file names: ``part-00003.g7.tab``
+_FRAGMENT_RE = re.compile(r"^part-\d+\.g(\d+)\.tab$")
+
 _HASH_MULT = np.uint64(0x9E3779B97F4A7C15)   # Fibonacci hashing constant
+
+
+def _manifest_crc(payload: dict) -> int:
+    """CRC32 over the canonical (sorted-key) JSON of a crc-less manifest
+    payload — whitespace/key-order independent, so a hand-reformatted
+    manifest still verifies."""
+    return page_crc(json.dumps(payload, sort_keys=True).encode())
 
 
 @dataclasses.dataclass
@@ -142,6 +156,9 @@ class Dataset:
         self.partitioning = partitioning or Partitioning()
         self.fragments: list[FragmentInfo] = list(fragments or [])
         self.generation = generation   # bumped by every manifest swap
+        #: set by ``load`` when the live manifest was corrupt and the
+        #: last-known-good generation was used instead
+        self.recovered_from: str | None = None
 
     # -- identity ----------------------------------------------------------
 
@@ -173,19 +190,30 @@ class Dataset:
     # -- manifest I/O ------------------------------------------------------
 
     def to_json(self) -> dict:
-        return {
+        payload = {
             "version": MANIFEST_VERSION,
             "generation": self.generation,
             "partitioning": self.partitioning.to_json(),
             "fragments": [f.to_json() for f in self.fragments],
         }
+        payload["crc32"] = _manifest_crc(payload)
+        return payload
+
+    @property
+    def manifest_prev_path(self) -> str:
+        return os.path.join(self.root, MANIFEST_PREV_NAME)
 
     def save(self) -> None:
         """Atomic manifest swap: the new manifest is fully written to a
         temp file in the same directory, then ``os.replace``d over the
         live one — a concurrent reader sees either the old manifest or
-        the new one, never a torn write."""
+        the new one, never a torn write.  Before the swap, the current
+        manifest is copied to ``manifest.prev.json`` so a corrupted swap
+        (torn disk write, bit rot) leaves a last-known-good generation
+        to recover from (DESIGN.md §6)."""
         os.makedirs(self.root, exist_ok=True)
+        if os.path.exists(self.manifest_path):
+            shutil.copyfile(self.manifest_path, self.manifest_prev_path)
         tmp = self.manifest_path + f".tmp.{os.getpid()}"
         with open(tmp, "w") as f:
             json.dump(self.to_json(), f, indent=1)
@@ -194,9 +222,13 @@ class Dataset:
         os.replace(tmp, self.manifest_path)
 
     @staticmethod
-    def load(root: str) -> "Dataset":
-        with open(os.path.join(root, MANIFEST_NAME)) as f:
+    def _parse_manifest(path: str, root: str) -> "Dataset":
+        with open(path) as f:
             o = json.load(f)
+        crc = o.pop("crc32", None)
+        if crc is not None and crc != _manifest_crc(o):
+            raise ChecksumError("manifest", crc, _manifest_crc(o),
+                                path=path)
         if o.get("version") != MANIFEST_VERSION:
             raise ValueError(f"unsupported manifest version "
                              f"{o.get('version')!r}")
@@ -206,6 +238,80 @@ class Dataset:
             fragments=[FragmentInfo.from_json(x)
                        for x in o.get("fragments", [])],
             generation=o.get("generation", 0))
+
+    @staticmethod
+    def load(root: str, recover: bool = True) -> "Dataset":
+        """Load the manifest, verifying its embedded CRC (manifests
+        written before checksumming load as legacy).  A corrupt or
+        unparseable manifest falls back to ``manifest.prev.json`` — the
+        last-known-good generation — when ``recover`` is on; with no
+        recovery candidate the original error propagates."""
+        path = os.path.join(root, MANIFEST_NAME)
+        try:
+            return Dataset._parse_manifest(path, root)
+        except (ChecksumError, json.JSONDecodeError, KeyError) as e:
+            prev = os.path.join(root, MANIFEST_PREV_NAME)
+            if not recover or not os.path.exists(prev):
+                raise
+            ds = Dataset._parse_manifest(prev, root)
+            ds.recovered_from = repr(e)
+            return ds
+
+    @staticmethod
+    def open(root: str, recover: bool = True,
+             sweep: bool = True) -> "Dataset":
+        """``load`` plus crash hygiene: validates every manifest-listed
+        fragment file exists (a manifest referencing a missing file is
+        corrupt — recovery kicks in), then sweeps orphaned temp files and
+        stale-generation fragments left by interrupted publications."""
+        ds = Dataset.load(root, recover=recover)
+        missing = [f.path for f in ds.fragments
+                   if not os.path.exists(ds.fragment_path(f))]
+        if missing:
+            prev = os.path.join(root, MANIFEST_PREV_NAME)
+            if recover and ds.recovered_from is None \
+                    and os.path.exists(prev):
+                ds = Dataset._parse_manifest(prev, root)
+                ds.recovered_from = f"missing fragments: {missing}"
+                missing = [f.path for f in ds.fragments
+                           if not os.path.exists(ds.fragment_path(f))]
+            if missing:
+                raise FileNotFoundError(
+                    f"dataset {root}: manifest references missing "
+                    f"fragment(s) {missing}")
+        if sweep:
+            ds.sweep_orphans()
+        return ds
+
+    def sweep_orphans(self) -> list[str]:
+        """Delete files a crashed publication left behind; returns the
+        deleted names.  Two classes are orphans: (1) any ``*.tmp*`` file
+        (interrupted ``os.replace`` staging), and (2) an *unreferenced*
+        generation-tagged fragment whose generation is **at or above**
+        the manifest's — a crashed append/compaction wrote it but never
+        published it.  Unreferenced fragments from *older* generations
+        are preserved: they are ``keep_old`` compaction inputs a reader
+        holding the previous manifest may still be scanning."""
+        removed: list[str] = []
+        try:
+            names = os.listdir(self.root)
+        except FileNotFoundError:
+            return removed
+        live = {f.path for f in self.fragments}
+        for name in sorted(names):
+            if name in (MANIFEST_NAME, MANIFEST_PREV_NAME) or name in live:
+                continue
+            m = _FRAGMENT_RE.match(name)
+            orphan = (".tmp" in name
+                      or (m is not None
+                          and int(m.group(1)) >= self.generation))
+            if orphan:
+                try:
+                    os.unlink(os.path.join(self.root, name))
+                    removed.append(name)
+                except OSError:
+                    pass    # best-effort hygiene; never fail an open
+        return removed
 
     # -- builders ----------------------------------------------------------
 
@@ -257,14 +363,16 @@ class Dataset:
                       decode_backend: str = "pallas",
                       lane_bandwidth: float = 7e9, latency: float = 20e-6,
                       use_plan: bool = True,
-                      coalesce_gap: int = DEFAULT_COALESCE_GAP) -> Scanner:
+                      coalesce_gap: int = DEFAULT_COALESCE_GAP,
+                      retry=None, fault_plan=None) -> Scanner:
         if isinstance(frag, int):
             frag = self.fragments[frag]
         return open_scanner(self.fragment_path(frag), columns=columns,
                             backend=backend, n_lanes=n_lanes,
                             decode_backend=decode_backend,
                             lane_bandwidth=lane_bandwidth, latency=latency,
-                            use_plan=use_plan, coalesce_gap=coalesce_gap)
+                            use_plan=use_plan, coalesce_gap=coalesce_gap,
+                            retry=retry, fault_plan=fault_plan)
 
 
 # ---------------------------------------------------------------------------

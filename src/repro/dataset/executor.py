@@ -13,6 +13,16 @@ contribute exact zeros) and repeated runs agree bitwise.
 ``prioritize="order"`` submits fragment k at ScanService priority k, the
 strict-priority hook that biases the shared pool toward the earliest
 unfinished fragment so window slots free in plan order.
+
+**Failure policy** (DESIGN.md §6).  Fragments are the executor's
+isolation unit: a fragment scan that fails after the inner layers'
+retries (storage backoff, ScanService requeue) is retried whole — a
+*fresh* scanner over fresh bytes, ``fragment_retries`` times — then
+**quarantined**.  ``on_error="strict"`` (default) raises a structured
+``FragmentError`` naming every quarantined fragment; ``"best_effort"``
+returns the partial result plus an explicit *gap manifest*
+(``DatasetRunReport.quarantined``) so a caller can never mistake a
+partial answer for a complete one.
 """
 
 from __future__ import annotations
@@ -25,6 +35,7 @@ from collections.abc import Callable
 
 import numpy as np
 
+from repro.core.faults import DeadlineExceeded, is_retryable
 from repro.core.overlap import Consume, RunReport, run_overlapped
 from repro.core.scan import Scanner
 from repro.dataset.planner import DatasetScanPlan
@@ -34,6 +45,22 @@ Combine = Callable[[object, object], object]
 
 #: keyword arguments forwarded to ``Dataset.open_fragment`` per fragment
 DEFAULT_OPEN_OPTS: dict = {"backend": "real", "decode_backend": "pallas"}
+
+
+class FragmentError(RuntimeError):
+    """One or more fragments failed permanently under ``on_error="strict"``.
+
+    ``failures`` is the structured report: one dict per quarantined
+    fragment with ``fragment`` (relative path), ``index`` (plan
+    position), ``attempts``, ``error`` and ``error_type``."""
+
+    def __init__(self, failures: list[dict]):
+        self.failures = list(failures)
+        names = ", ".join(f["fragment"] for f in self.failures)
+        first = self.failures[0]["error"] if self.failures else "?"
+        super().__init__(
+            f"{len(self.failures)} fragment(s) failed permanently: "
+            f"{names} (first: {first})")
 
 
 @dataclasses.dataclass
@@ -57,6 +84,24 @@ class DatasetRunReport:
     n_row_groups: int = 0
     stored_bytes: int = 0
     logical_bytes: int = 0
+    # fault-recovery accounting (DESIGN.md §6): per-fragment ScanMetrics
+    # counters summed, plus whole-fragment retry attempts; ``quarantined``
+    # is the best-effort gap manifest — one dict per fragment the result
+    # does NOT cover ({fragment, index, attempts, error, error_type})
+    retries: int = 0
+    checksum_failures: int = 0
+    timeouts: int = 0
+    quarantined: list[dict] = dataclasses.field(default_factory=list)
+
+    @property
+    def fragments_quarantined(self) -> int:
+        return len(self.quarantined)
+
+    @property
+    def complete(self) -> bool:
+        """Whether the result covers every planned fragment (False only
+        under ``on_error="best_effort"`` with quarantined fragments)."""
+        return not self.quarantined
 
     @property
     def files_pruned(self) -> int:
@@ -76,6 +121,10 @@ class DatasetRunReport:
                 f"launches={self.n_kernel_launches};"
                 f"io_requests={self.n_io_requests};"
                 f"shared_rgs={self.shared_rgs};"
+                f"retries={self.retries};"
+                f"checksum_failures={self.checksum_failures};"
+                f"timeouts={self.timeouts};"
+                f"fragments_quarantined={self.fragments_quarantined};"
                 f"frag_p50_us={self.wall_percentile(50) * 1e6:.0f};"
                 f"frag_p95_us={self.wall_percentile(95) * 1e6:.0f}")
 
@@ -85,7 +134,10 @@ def run_dataset_scan(plan: DatasetScanPlan, consume: Consume | None = None,
                      window: int = 4, depth: int = 2,
                      decode_workers: int | None = None, service=None,
                      prioritize: str | None = None,
-                     open_opts: dict | None = None):
+                     open_opts: dict | None = None,
+                     fragment_retries: int = 2,
+                     on_error: str = "strict",
+                     retries: int = 3, deadline: float | None = None):
     """Execute a planned dataset scan; returns ``(acc, DatasetRunReport)``.
 
     ``consume`` is the per-row-group reducer every fragment scan runs
@@ -95,9 +147,21 @@ def run_dataset_scan(plan: DatasetScanPlan, consume: Consume | None = None,
     many fragment scans are in flight; ``depth``/``decode_workers``/
     ``service`` are forwarded to each ``run_overlapped``.  ``open_opts``
     are ``Dataset.open_fragment`` keyword arguments (storage backend,
-    decode backend, …).  ``prioritize="order"`` submits fragment k at
-    service priority k.
+    decode backend, retry policy, fault plan, …).  ``prioritize="order"``
+    submits fragment k at service priority k.
+
+    Failure policy (module docstring): a fragment that still fails after
+    the inner retries is re-scanned whole with a fresh scanner up to
+    ``fragment_retries`` times, then quarantined.  ``on_error="strict"``
+    raises ``FragmentError``; ``"best_effort"`` returns the partial
+    result with the gap manifest in ``DatasetRunReport.quarantined``.
+    ``retries``/``deadline`` are each fragment scan's per-scan budget
+    (``run_overlapped`` contract); a ``DeadlineExceeded`` fragment is
+    never retried.
     """
+    if on_error not in ("strict", "best_effort"):
+        raise ValueError(f"on_error must be 'strict' or 'best_effort', "
+                         f"got {on_error!r}")
     opts = dict(DEFAULT_OPEN_OPTS, **(open_opts or {}))
     opts["columns"] = plan.columns
     n = len(plan.fragments)
@@ -114,17 +178,20 @@ def run_dataset_scan(plan: DatasetScanPlan, consume: Consume | None = None,
     reports: list[RunReport | None] = [None] * n
     walls: list[float] = [0.0] * n
     errors: list[BaseException] = []
+    quarantined: list[dict] = []
+    frag_retries = [0]            # whole-fragment re-scan attempts spent
     next_pos = [0]
     lock = threading.Lock()
     launches0 = kernel_launch_count()
 
-    def worker() -> None:
-        while True:
+    def scan_fragment(pos: int) -> None:
+        """One fragment through retry-then-quarantine."""
+        budget = 1 + max(0, fragment_retries)
+        failure: BaseException | None = None
+        for attempt in range(budget):
             with lock:
-                if errors or next_pos[0] >= n:
+                if errors:          # strict mode is already aborting
                     return
-                pos = next_pos[0]
-                next_pos[0] += 1
             try:
                 scanner: Scanner = plan.dataset.open_fragment(
                     plan.fragments[pos], **opts)
@@ -133,14 +200,38 @@ def run_dataset_scan(plan: DatasetScanPlan, consume: Consume | None = None,
                     scanner, consume,
                     predicate_stats=plan.predicate_stats, depth=depth,
                     decode_workers=decode_workers, service=svc,
-                    priority=pos if prioritize == "order" else 0)
+                    priority=pos if prioritize == "order" else 0,
+                    retries=retries, deadline=deadline)
                 walls[pos] = time.perf_counter() - t0
                 accs[pos] = acc
                 reports[pos] = report
-            except BaseException as e:  # noqa: BLE001 — re-raised below
-                with lock:
-                    errors.append(e)
+                if attempt:
+                    with lock:
+                        frag_retries[0] += attempt
                 return
+            except BaseException as e:  # noqa: BLE001 — classified below
+                failure = e
+                if (isinstance(e, DeadlineExceeded)
+                        or not is_retryable(e)):
+                    break           # budgets and logic errors never retry
+        entry = {"fragment": plan.fragments[pos].path, "index": pos,
+                 "attempts": min(attempt + 1, budget),
+                 "error": repr(failure),
+                 "error_type": type(failure).__name__}
+        with lock:
+            frag_retries[0] += min(attempt, budget - 1)
+            quarantined.append(entry)
+            if on_error == "strict":
+                errors.append(failure)
+
+    def worker() -> None:
+        while True:
+            with lock:
+                if errors or next_pos[0] >= n:
+                    return
+                pos = next_pos[0]
+                next_pos[0] += 1
+            scan_fragment(pos)
 
     t0 = time.perf_counter()
     threads = [threading.Thread(target=worker, daemon=True,
@@ -152,7 +243,11 @@ def run_dataset_scan(plan: DatasetScanPlan, consume: Consume | None = None,
         t.join()
     measured_wall = time.perf_counter() - t0
     if errors:
-        raise errors[0]
+        # structured report: every quarantined fragment, worst first; the
+        # original failure is chained for its traceback
+        raise FragmentError(sorted(quarantined,
+                                   key=lambda q: q["index"])) \
+            from errors[0]
 
     done = [r for r in reports if r is not None]
     rep = DatasetRunReport(
@@ -166,7 +261,11 @@ def run_dataset_scan(plan: DatasetScanPlan, consume: Consume | None = None,
         shared_rgs=sum(r.metrics.shared_rgs for r in done),
         n_row_groups=sum(r.metrics.n_row_groups for r in done),
         stored_bytes=sum(r.metrics.stored_bytes for r in done),
-        logical_bytes=sum(r.metrics.logical_bytes for r in done))
+        logical_bytes=sum(r.metrics.logical_bytes for r in done),
+        retries=(sum(r.metrics.retries for r in done) + frag_retries[0]),
+        checksum_failures=sum(r.metrics.checksum_failures for r in done),
+        timeouts=sum(r.metrics.timeouts for r in done),
+        quarantined=sorted(quarantined, key=lambda q: q["index"]))
     if combine is None:
         return list(accs), rep
     acc = functools.reduce(

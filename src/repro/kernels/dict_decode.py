@@ -151,6 +151,12 @@ def dict_cache_put(key: tuple, host_array) -> CachedDictionary:
     return _DICT_CACHE.put(key, CachedDictionary(host_array))
 
 
+def dict_cache_evict(pred) -> int:
+    """Evict entries whose key matches ``pred`` (fault recovery: drop
+    dictionaries a failed/retried scan may have decoded from bad bytes)."""
+    return _DICT_CACHE.pop_matching(pred)
+
+
 def dict_cache_stats() -> dict:
     return {"entries": len(_DICT_CACHE), "bytes": _DICT_CACHE.bytes,
             "hits": _DICT_CACHE.hits, "misses": _DICT_CACHE.misses}

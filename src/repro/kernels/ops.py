@@ -21,7 +21,8 @@ from collections.abc import Sequence
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.compression import Codec, cascade_manifest, decompress
+from repro.core.compression import (Codec, cascade_manifest, decompress,
+                                    verify_page)
 from repro.core.encodings import (Encoding, build_delta_manifest,
                                   decode_page, decode_plain_page)
 from repro.core.metadata import ChunkMeta, PageMeta
@@ -323,7 +324,9 @@ def decode_chunk(chunk: ChunkMeta, field: Field, raw: bytes,
     encoding = Encoding(chunk.encoding)
 
     def stored(pm):
-        return raw[pm.offset - off0:pm.offset - off0 + pm.stored_size]
+        data = raw[pm.offset - off0:pm.offset - off0 + pm.stored_size]
+        verify_page(data, pm, where=f"{chunk.name} page@{pm.offset}")
+        return data
 
     # --- decompression stage ------------------------------------------------
     if payloads is not None:

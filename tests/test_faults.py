@@ -1,0 +1,535 @@
+"""Failure model (DESIGN.md §6): deterministic fault injection, checksum
+verification, retry/backoff/deadlines, cache-poisoning invariants, and
+fragment quarantine.
+
+The acceptance contract these tests pin down:
+
+  * transient faults are retried and heal bit-identically (retries > 0)
+  * permanent corruption always surfaces as a typed ``ChecksumError`` or
+    a quarantined fragment — never a silently wrong answer
+  * a crash mid-compaction leaves the dataset readable at the prior
+    manifest generation
+"""
+
+import gc
+import json
+import os
+
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # deterministic fallback shim (hypothesis not installed)
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core.compression import (ChecksumError, chunk_decompress_memo,
+                                    set_verify_checksums)
+from repro.core.config import ACCELERATOR_OPTIMIZED
+from repro.core.faults import (DeadlineExceeded, FaultPlan, FetchTimeout,
+                               InjectedDecodeError, InjectedIOError,
+                               FaultyStorage, ShortReadError, is_retryable)
+from repro.core.overlap import run_overlapped
+from repro.core.reader import read_footer
+from repro.core.scan import open_scanner
+from repro.core.scheduler import ScanService
+from repro.core.storage import (NO_RETRY, RealStorage, RetryingStorage,
+                                RetryPolicy)
+from repro.core.table import Table
+from repro.dataset.catalog import Dataset, write_dataset
+from repro.dataset.executor import FragmentError, run_dataset_scan
+from repro.dataset.planner import plan_dataset_scan
+from repro.kernels.dict_decode import dict_cache_clear
+
+CFG = ACCELERATOR_OPTIMIZED.replace(rows_per_rg=1_500,
+                                    target_pages_per_chunk=2)
+
+
+def _clear_decoded_caches():
+    """Corruption tests must start cold: a shared-cache hit legitimately
+    never re-reads the corrupt bytes (verify-before-insert keeps the
+    caches clean), which is correct behavior but not the path under
+    test."""
+    chunk_decompress_memo().clear()
+    dict_cache_clear()
+
+
+def _table(n=9_000, seed=0):
+    rng = np.random.default_rng(seed)
+    return Table({"k": rng.integers(0, 50, n).astype(np.int64),
+                  "v": rng.normal(size=n).astype(np.float32)})
+
+
+@pytest.fixture()
+def tab_file(tmp_path):
+    from repro.core.writer import write_table
+    path = str(tmp_path / "t.tab")
+    write_table(_table(), path, CFG)
+    return path
+
+
+def _sum_consume(acc, rg, cols):
+    s = float(np.asarray(cols["v"].array[:cols["v"].n_values]).sum())
+    return (acc or 0.0) + s
+
+
+def _scan_sum(path, *, decode_workers=0, service=None, **open_kw):
+    sc = open_scanner(path, columns=["v"], **open_kw)
+    acc, report = run_overlapped(sc, _sum_consume,
+                                 decode_workers=decode_workers,
+                                 service=service)
+    return acc, report
+
+
+def _data_page_ranges(path, columns=None):
+    """[(offset, size)] of every data page of the selected columns."""
+    meta = read_footer(path)
+    out = []
+    for rg in meta.row_groups:
+        for chunk in rg.columns:
+            if columns is not None and chunk.name not in columns:
+                continue
+            for pg in chunk.pages:
+                out.append((pg.offset, pg.stored_size))
+    return out
+
+
+# -- taxonomy ---------------------------------------------------------------
+
+def test_retryable_taxonomy():
+    assert is_retryable(InjectedIOError(5, "eio"))
+    assert is_retryable(OSError(5, "eio"))
+    assert is_retryable(ShortReadError(0, 10, 3))
+    assert is_retryable(FetchTimeout(0, 10, 0.2, 0.1))
+    assert is_retryable(TimeoutError("t"))
+    assert is_retryable(ChecksumError("page", 1, 2))
+    assert is_retryable(InjectedDecodeError("boom"))
+    assert not is_retryable(DeadlineExceeded("budget"))
+    assert not is_retryable(RuntimeError("logic bug"))
+    assert not is_retryable(ValueError("logic bug"))
+
+
+# -- FaultPlan determinism --------------------------------------------------
+
+def test_fault_plan_replay_same_seed_same_schedule(tab_file):
+    """Same seed -> same failure sequence -> same counters, independent
+    of attempt bookkeeping left over from the first run (clone zeroes
+    it)."""
+    plan = FaultPlan(seed=11, io_error=0.4, bit_flip=0.3, short_read=0.2)
+    base = RealStorage(tab_file)
+    try:
+        reqs = [(o, s) for o, s in _data_page_ranges(tab_file)]
+        wrapped = FaultyStorage(base, plan)
+        got1 = []
+        for o, s in reqs:
+            try:
+                got1.append(wrapped.fetch(o, s))
+            except OSError as e:
+                got1.append(repr(e))
+        c1 = plan.counters()
+        assert sum(c1.values()) > 0    # the rates actually fired
+
+        replay = plan.clone()
+        wrapped2 = FaultyStorage(RealStorage(tab_file), replay)
+        got2 = []
+        for o, s in reqs:
+            try:
+                got2.append(wrapped2.fetch(o, s))
+            except OSError as e:
+                got2.append(repr(e))
+        assert replay.counters() == c1
+        assert got1 == got2            # byte-identical corruption too
+    finally:
+        base.close()
+
+
+def test_fault_plan_transient_fires_once_per_target(tab_file):
+    plan = FaultPlan(seed=3, io_error=1.0)      # every request, attempt 0
+    st_ = FaultyStorage(RealStorage(tab_file), plan)
+    with pytest.raises(InjectedIOError):
+        st_.fetch(0, 64)
+    assert st_.fetch(0, 64) == open(tab_file, "rb").read(64)
+    # permanent plans fire on every attempt
+    perm = FaultPlan(seed=3, io_error=1.0, transient=False)
+    st2 = FaultyStorage(RealStorage(tab_file), perm)
+    for _ in range(3):
+        with pytest.raises(InjectedIOError):
+            st2.fetch(0, 64)
+
+
+# -- storage retry layer ----------------------------------------------------
+
+def test_retrying_storage_heals_transient_io_error(tab_file):
+    plan = FaultPlan(seed=1, io_error=1.0)
+    st_ = RetryingStorage(FaultyStorage(RealStorage(tab_file), plan),
+                          RetryPolicy(attempts=3, base_delay=0.0))
+    assert st_.fetch(8, 32) == open(tab_file, "rb").read(40)[8:]
+    assert st_.retry_stats.retries >= 1
+
+
+def test_retrying_storage_short_read_never_returned(tab_file):
+    plan = FaultPlan(seed=2, short_read=1.0)
+    st_ = RetryingStorage(FaultyStorage(RealStorage(tab_file), plan),
+                          RetryPolicy(attempts=3, base_delay=0.0))
+    data = st_.fetch(0, 256)
+    assert len(data) == 256
+    assert st_.retry_stats.short_reads >= 1
+
+
+def test_retrying_storage_exhausts_on_permanent_fault(tab_file):
+    plan = FaultPlan(seed=1, io_error=1.0, transient=False)
+    st_ = RetryingStorage(FaultyStorage(RealStorage(tab_file), plan),
+                          RetryPolicy(attempts=3, base_delay=0.0))
+    with pytest.raises(InjectedIOError):
+        st_.fetch(8, 32)
+    assert st_.retry_stats.retries == 2     # budget fully spent
+
+
+def test_retrying_storage_timeout_budget(tab_file):
+    plan = FaultPlan(seed=4, latency=1.0, latency_seconds=0.05)
+    st_ = RetryingStorage(FaultyStorage(RealStorage(tab_file), plan),
+                          RetryPolicy(attempts=3, base_delay=0.0,
+                                      timeout=0.01))
+    # first attempt spikes over budget -> FetchTimeout -> retry heals
+    assert st_.fetch(0, 64) == open(tab_file, "rb").read(64)
+    assert st_.retry_stats.timeouts >= 1
+
+
+def test_retry_backoff_is_deterministic():
+    p = RetryPolicy(attempts=5, base_delay=0.001, max_delay=0.01)
+    sched = [p.delay(a, salt=1234) for a in range(4)]
+    assert sched == [p.delay(a, salt=1234) for a in range(4)]
+    assert all(d >= p.base_delay for d in sched)
+    assert max(sched) <= p.max_delay * (1.0 + p.jitter)
+
+
+# -- checksum verification --------------------------------------------------
+
+def test_bit_flip_on_disk_raises_checksum_error(tab_file):
+    acc0, _ = _scan_sum(tab_file)
+    off, size = _data_page_ranges(tab_file, columns=["v"])[0]
+    raw = open(tab_file, "rb").read()
+    b = bytearray(raw)
+    b[off + size // 2] ^= 0x10
+    open(tab_file, "wb").write(bytes(b))
+    _clear_decoded_caches()
+    with pytest.raises(ChecksumError):
+        _scan_sum(tab_file)
+    # restored bytes scan clean again (and the caches were never
+    # poisoned by the corrupt attempt — same path, same cache token)
+    open(tab_file, "wb").write(raw)
+    acc1, _ = _scan_sum(tab_file)
+    assert acc1 == acc0
+
+
+def test_corrupt_footer_raises_checksum_error(tab_file):
+    raw = open(tab_file, "rb").read()
+    b = bytearray(raw)
+    b[-20] ^= 0x01                       # inside footer json / its crc
+    open(tab_file, "wb").write(bytes(b))
+    _clear_decoded_caches()
+    with pytest.raises((ChecksumError, ValueError)):
+        read_footer(tab_file)
+
+
+def test_verification_knob_disables_checks(tab_file):
+    off, size = _data_page_ranges(tab_file, columns=["v"])[0]
+    b = bytearray(open(tab_file, "rb").read())
+    b[off + size // 2] ^= 0x10
+    open(tab_file, "wb").write(bytes(b))
+    _clear_decoded_caches()
+    prev = set_verify_checksums(False)
+    try:
+        _scan_sum(tab_file)              # may be garbage, must not raise
+    except ChecksumError:
+        pytest.fail("verification ran while disabled")
+    except Exception:
+        pass                             # decode of garbage may fail; fine
+    finally:
+        set_verify_checksums(prev)
+        _clear_decoded_caches()
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(min_value=1, max_value=4),
+       st.integers(min_value=0, max_value=2**31 - 1))
+def test_property_random_flips_never_silently_wrong(n_flips, seed):
+    """Flip N random bytes anywhere in the data pages: every scan either
+    raises ChecksumError or returns bit-identical results — never wrong
+    data (the zero-silent-wrong-answer acceptance criterion)."""
+    import tempfile
+    from repro.core.writer import write_table
+    with tempfile.TemporaryDirectory(prefix="prop_flip_") as root:
+        path = os.path.join(root, "p.tab")
+        write_table(_table(4_000, seed=1), path, CFG)
+        clean, _ = _scan_sum(path)
+        pages = _data_page_ranges(path)
+        raw = bytearray(open(path, "rb").read())
+        rng = np.random.default_rng(seed)
+        for _ in range(n_flips):
+            off, size = pages[int(rng.integers(0, len(pages)))]
+            pos = off + int(rng.integers(0, size))
+            raw[pos] ^= 1 << int(rng.integers(0, 8))
+        open(path, "wb").write(bytes(raw))
+        _clear_decoded_caches()
+        try:
+            acc, _ = _scan_sum(path)
+        except ChecksumError:
+            return                       # typed failure: acceptable
+        assert acc == clean, "corruption slipped through undetected"
+
+
+# -- transient faults heal bit-identically through the scan path ------------
+
+def test_transient_faults_heal_bit_identical_inline(tab_file):
+    acc0, _ = _scan_sum(tab_file)
+    _clear_decoded_caches()
+    plan = FaultPlan(seed=5, io_error=0.4, bit_flip=0.3, decode_error=0.3)
+    acc1, rep = _scan_sum(tab_file, fault_plan=plan)
+    assert acc1 == acc0
+    assert rep.metrics.retries > 0
+    assert plan.total_injected() > 0
+
+
+def test_transient_faults_heal_bit_identical_service(tab_file):
+    acc0, _ = _scan_sum(tab_file)
+    svc = ScanService(workers=2, adaptive=False)
+    try:
+        _clear_decoded_caches()
+        plan = FaultPlan(seed=6, io_error=0.4, bit_flip=0.3,
+                         decode_error=0.3)
+        acc1, rep = _scan_sum(tab_file, decode_workers=2, service=svc,
+                              fault_plan=plan)
+        assert acc1 == acc0
+        assert rep.metrics.retries > 0
+    finally:
+        svc.shutdown()
+
+
+def test_permanent_decode_fault_fails_scan_not_pool(tab_file, tmp_path):
+    """A permanently corrupt scan raises; a concurrent clean scan on the
+    same pool and a subsequent scan both stay correct (error isolation +
+    no cache poisoning)."""
+    from repro.core.writer import write_table
+    clean_path = str(tmp_path / "clean.tab")
+    write_table(_table(seed=9), clean_path, CFG)
+    clean0, _ = _scan_sum(clean_path)
+    acc0, _ = _scan_sum(tab_file)
+
+    off, size = _data_page_ranges(tab_file, columns=["v"])[0]
+    raw = open(tab_file, "rb").read()
+    b = bytearray(raw)
+    b[off + size // 2] ^= 0x40
+    open(tab_file, "wb").write(bytes(b))
+
+    svc = ScanService(workers=2, adaptive=False)
+    try:
+        _clear_decoded_caches()
+        with pytest.raises(ChecksumError):
+            _scan_sum(tab_file, decode_workers=2, service=svc)
+        acc_clean, _ = _scan_sum(clean_path, decode_workers=2, service=svc)
+        assert acc_clean == clean0
+        # the corrupt attempt must not have poisoned shared caches for
+        # this path: restore the bytes and rescan the same file
+        open(tab_file, "wb").write(raw)
+        acc1, _ = _scan_sum(tab_file, decode_workers=2, service=svc)
+        assert acc1 == acc0
+    finally:
+        svc.shutdown()
+
+
+def test_deadline_exceeded_is_typed_and_final(tab_file):
+    plan = FaultPlan(seed=7, latency=1.0, latency_seconds=0.02)
+    sc = open_scanner(tab_file, columns=["v"], fault_plan=plan)
+    with pytest.raises(DeadlineExceeded):
+        run_overlapped(sc, _sum_consume, decode_workers=0,
+                       deadline=1e-6)
+    svc = ScanService(workers=1, adaptive=False)
+    try:
+        sc2 = open_scanner(tab_file, columns=["v"], fault_plan=plan.clone())
+        with pytest.raises(DeadlineExceeded):
+            run_overlapped(sc2, _sum_consume, decode_workers=1,
+                           service=svc, deadline=1e-6)
+    finally:
+        svc.shutdown()
+
+
+# -- ScanHandle lifecycle ---------------------------------------------------
+
+def test_scan_handle_double_close_idempotent(tab_file):
+    svc = ScanService(workers=1, adaptive=False)
+    try:
+        sc = open_scanner(tab_file, columns=["v"])
+        h = svc.submit(sc)
+        next(h)
+        h.cancel()
+        h.cancel()                       # second close: no-op, no raise
+        h.close()
+        from repro.core.scheduler import ScanCancelled
+        with pytest.raises((StopIteration, ScanCancelled)):
+            next(h)
+    finally:
+        svc.shutdown()
+
+
+def test_abandoned_handle_gc_releases_depth_credits(tab_file):
+    """Dropping a handle mid-scan must not leak depth credits: after GC
+    the service accepts and completes a fresh scan of the same depth."""
+    svc = ScanService(workers=1, adaptive=False)
+    try:
+        for _ in range(3):               # would wedge by credit leak
+            sc = open_scanner(tab_file, columns=["v"])
+            h = svc.submit(sc, depth=1)
+            next(h)                      # mid-scan: credits held
+            del h, sc
+            gc.collect()
+        acc, _ = _scan_sum(tab_file, decode_workers=1, service=svc)
+        acc0, _ = _scan_sum(tab_file)
+        assert acc == acc0
+    finally:
+        svc.shutdown()
+
+
+# -- dataset layer: quarantine, manifest recovery, orphan sweep -------------
+
+def _mk_dataset(tmp_path, n=12_000):
+    return write_dataset(_table(n), str(tmp_path / "ds"), CFG,
+                         partition_by="k", how="range", fragments=4)
+
+
+def _ds_scan(ds, **kw):
+    plan = plan_dataset_scan(ds, columns=["v"])
+    kw.setdefault("combine", lambda a, b: a + b)
+    return run_dataset_scan(plan, _sum_consume, **kw)
+
+
+def _corrupt_fragment(ds, idx):
+    path = ds.fragment_path(ds.fragments[idx])
+    meta = read_footer(path)
+    chunk = next(c for c in meta.row_groups[0].columns if c.name == "v")
+    pg = chunk.pages[0]
+    b = bytearray(open(path, "rb").read())
+    b[pg.offset + pg.stored_size // 2] ^= 0xFF
+    open(path, "wb").write(bytes(b))
+    return path
+
+
+def test_dataset_transient_faults_heal(tmp_path):
+    ds = _mk_dataset(tmp_path)
+    acc0, rep0 = _ds_scan(ds)
+    assert rep0.retries == 0 and rep0.complete
+    _clear_decoded_caches()
+    plan = FaultPlan(seed=8, io_error=0.3, bit_flip=0.2, decode_error=0.1)
+    acc1, rep1 = _ds_scan(ds, open_opts={"fault_plan": plan})
+    assert acc1 == acc0
+    assert rep1.retries > 0 and rep1.fragments_quarantined == 0
+    for key in ("retries=", "checksum_failures=", "timeouts=",
+                "fragments_quarantined="):
+        assert key in rep1.summary()
+
+
+def test_dataset_strict_raises_structured_fragment_error(tmp_path):
+    ds = _mk_dataset(tmp_path)
+    _corrupt_fragment(ds, 1)
+    _clear_decoded_caches()
+    with pytest.raises(FragmentError) as ei:
+        _ds_scan(ds)
+    (failure,) = ei.value.failures
+    assert failure["index"] == 1
+    assert failure["fragment"] == ds.fragments[1].path
+    assert failure["error_type"] == "ChecksumError"
+    assert failure["attempts"] >= 1
+
+
+def test_dataset_best_effort_returns_gap_manifest(tmp_path):
+    ds = _mk_dataset(tmp_path)
+    accs_clean, _ = _ds_scan(ds, combine=None)
+    _corrupt_fragment(ds, 2)
+    _clear_decoded_caches()
+    accs, rep = _ds_scan(ds, combine=None, on_error="best_effort")
+    assert rep.fragments_quarantined == 1 and not rep.complete
+    assert rep.quarantined[0]["index"] == 2
+    assert accs[2] is None               # explicit gap, not a wrong value
+    for i in (0, 1, 3):
+        assert accs[i] == accs_clean[i]  # other fragments bit-identical
+
+
+def test_dataset_fragment_level_retry_heals(tmp_path):
+    """With the inner layers' retries disabled, a transient fault is
+    healed one level up: the whole fragment re-scans on fresh bytes."""
+    ds = _mk_dataset(tmp_path)
+    acc0, _ = _ds_scan(ds)
+    _clear_decoded_caches()
+    plan = FaultPlan(seed=9, io_error=1.0)    # every range, first attempt
+    acc1, rep = _ds_scan(ds, retries=0,
+                         open_opts={"fault_plan": plan,
+                                    "retry": NO_RETRY})
+    assert acc1 == acc0
+    assert rep.retries > 0                    # fragment-level attempts
+    assert rep.fragments_quarantined == 0
+
+
+def test_manifest_recovers_from_prev_generation(tmp_path):
+    ds = _mk_dataset(tmp_path)
+    gen0 = ds.generation
+    ds.generation += 1
+    ds.save()                            # writes manifest.prev.json
+    raw = open(ds.manifest_path).read()
+    open(ds.manifest_path, "w").write(raw[:len(raw) // 2])   # torn write
+    recovered = Dataset.open(ds.root)
+    assert recovered.recovered_from
+    assert recovered.generation == gen0
+    # valid JSON with a corrupted field -> crc mismatch -> same recovery
+    o = json.loads(raw)
+    o["generation"] = 999
+    open(ds.manifest_path, "w").write(json.dumps(o))
+    recovered = Dataset.load(ds.root)
+    assert recovered.recovered_from and recovered.generation == gen0
+    # without a recovery candidate the error is typed
+    os.remove(os.path.join(ds.root, "manifest.prev.json"))
+    with pytest.raises(ChecksumError):
+        Dataset.load(ds.root)
+
+
+def test_open_sweeps_orphans_keeps_old_generations(tmp_path):
+    ds = _mk_dataset(tmp_path)
+    gen = ds.generation
+    stale = os.path.join(ds.root, f"part-99999.g{gen}.tab")
+    tmp = os.path.join(ds.root, "manifest.json.tmp.777")
+    old = os.path.join(ds.root, "part-99998.g0.tab")
+    for p in (stale, tmp, old):
+        open(p, "wb").write(b"leftover")
+    swept = Dataset.open(ds.root)
+    names = set(os.listdir(ds.root))
+    assert os.path.basename(stale) not in names   # crashed publication
+    assert os.path.basename(tmp) not in names     # interrupted replace
+    assert os.path.basename(old) in names         # keep_old input: kept
+    assert {f.path for f in swept.fragments} <= names
+    acc0, _ = _ds_scan(ds)
+    acc1, _ = _ds_scan(swept)
+    assert acc1 == acc0
+
+
+def test_crash_mid_compaction_leaves_prior_generation_readable(tmp_path):
+    import repro.dataset.compact as compact_mod
+    ds = _mk_dataset(tmp_path)
+    acc0, _ = _ds_scan(ds)
+    gen0 = ds.generation
+    real_writer = compact_mod.TabFileWriter
+
+    class CrashingWriter(real_writer):
+        def __init__(self, *a, **kw):
+            raise RuntimeError("injected crash mid-compaction")
+
+    compact_mod.TabFileWriter = CrashingWriter
+    try:
+        with pytest.raises(RuntimeError, match="mid-compaction"):
+            compact_mod.compact_dataset(Dataset.load(ds.root))
+    finally:
+        compact_mod.TabFileWriter = real_writer
+    survivor = Dataset.open(ds.root)     # open sweeps any g{gen+1} orphans
+    assert survivor.generation == gen0
+    assert not any(".tmp" in n for n in os.listdir(ds.root))
+    _clear_decoded_caches()
+    acc1, _ = _ds_scan(survivor)
+    assert acc1 == acc0

@@ -1,0 +1,177 @@
+"""CI chaos gate: the scan path under deterministic fault injection.
+
+Runs the Q6/Q12 file scans and the dataset smoke shape twice — once
+clean, once under a fixed transient-only ``FaultPlan`` — and fails
+unless:
+
+  * every faulted run's result is **bit-identical** to its clean run
+    (transient faults must heal invisibly),
+  * the faulted runs actually recovered work (``retries > 0`` — a chaos
+    run that injected nothing gates nothing),
+  * no fragment was quarantined (transient faults never quarantine),
+  * checksum verification costs <= ``CHAOS_CRC_THRESHOLD`` (default 5%)
+    wall on the same scan measured min-of-rounds with verification
+    toggled off, plus a small absolute slack for tiny-SF scheduler noise.
+
+Everything is seeded: a failure here replays exactly with
+``FaultPlan(seed=CHAOS_SEED, ...)`` (tools/chaos_check.py --help).
+
+Usage:
+    PYTHONPATH=src JAX_PLATFORMS=cpu python tools/chaos_check.py
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import tempfile
+import time
+
+
+def _clear_decoded_caches():
+    from repro.core.compression import chunk_decompress_memo
+    from repro.kernels.dict_decode import dict_cache_clear
+    chunk_decompress_memo().clear()
+    dict_cache_clear()
+
+
+def _fault_plan(seed: int):
+    from repro.core.faults import FaultPlan
+    # transient-only: every fault heals on retry by construction
+    return FaultPlan(seed=seed, io_error=0.30, short_read=0.15,
+                     bit_flip=0.15, latency=0.05, decode_error=0.15,
+                     latency_seconds=0.001, transient=True)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sf", type=float,
+                    default=float(os.environ.get("CHAOS_SF", "0.005")))
+    ap.add_argument("--seed", type=int,
+                    default=int(os.environ.get("CHAOS_SEED", "20260808")))
+    ap.add_argument("--rounds", type=int,
+                    default=int(os.environ.get("CHAOS_ROUNDS", "3")))
+    ap.add_argument("--crc-threshold", type=float,
+                    default=float(os.environ.get("CHAOS_CRC_THRESHOLD",
+                                                 "0.05")))
+    ap.add_argument("--crc-slack-us", type=float, default=5_000.0,
+                    help="absolute wall slack for the CRC gate (tiny-SF "
+                         "scheduler noise floor)")
+    args = ap.parse_args()
+
+    from repro.core.config import ACCELERATOR_OPTIMIZED
+    from repro.core.compression import set_verify_checksums
+    from repro.core.query import Q12_ORDERS_COLUMNS, q6, q12
+    from repro.core.scan import open_scanner
+    from repro.data import tpch
+    from repro.dataset import write_dataset
+
+    failures: list[str] = []
+    cfg = ACCELERATOR_OPTIMIZED.replace(rows_per_rg=3_000,
+                                        target_pages_per_chunk=2)
+
+    with tempfile.TemporaryDirectory(prefix="chaos_") as root:
+        tpch.write_tpch(root, sf=args.sf, config=cfg, seed=1, threads=2)
+        lpath = os.path.join(root, "lineitem.tab")
+        opath = os.path.join(root, "orders.tab")
+        line, _ = tpch.generate_tables(sf=args.sf, seed=1,
+                                       include_strings=False)
+        ds = write_dataset(line, os.path.join(root, "ds"), cfg,
+                           partition_by="l_shipdate", how="range",
+                           fragments=4)
+
+        def open_l(plan=None):
+            return open_scanner(lpath, decode_backend="host",
+                                fault_plan=plan)
+
+        def open_o(plan=None):
+            return open_scanner(opath, columns=Q12_ORDERS_COLUMNS,
+                                decode_backend="host", fault_plan=plan)
+
+        # -- clean reference runs --------------------------------------
+        q6_clean, _ = q6(open_l(), overlapped=True, decode_workers=2)
+        q12_clean, _, _ = q12(open_l(), open_o(), decode_workers=2)
+        ds_clean, _ = q6(ds, prune=True, window=4,
+                         open_opts={"decode_backend": "host"})
+
+        # -- seeded chaos runs (transient-only) ------------------------
+        total_retries = 0
+        _clear_decoded_caches()
+        q6_chaos, rep6 = q6(open_l(_fault_plan(args.seed)),
+                            overlapped=True, decode_workers=2)
+        total_retries += rep6.metrics.retries
+        _clear_decoded_caches()
+        q12_chaos, repb, repp = q12(open_l(_fault_plan(args.seed + 1)),
+                                    open_o(_fault_plan(args.seed + 2)),
+                                    decode_workers=2)
+        total_retries += repb.metrics.retries + repp.metrics.retries
+        _clear_decoded_caches()
+        ds_chaos, repd = q6(
+            ds, prune=True, window=4,
+            open_opts={"decode_backend": "host",
+                       "fault_plan": _fault_plan(args.seed + 3)})
+        total_retries += repd.retries
+
+        if q6_chaos != q6_clean:
+            failures.append(f"q6 under chaos diverged: "
+                            f"{q6_chaos!r} != {q6_clean!r}")
+        if q12_chaos != q12_clean:
+            failures.append(f"q12 under chaos diverged: "
+                            f"{q12_chaos!r} != {q12_clean!r}")
+        if ds_chaos != ds_clean:
+            failures.append(f"dataset q6 under chaos diverged: "
+                            f"{ds_chaos!r} != {ds_clean!r}")
+        if total_retries <= 0:
+            failures.append("chaos run recovered nothing (retries == 0): "
+                            "the fault plan injected no observable work")
+        if repd.fragments_quarantined:
+            failures.append(f"transient faults quarantined "
+                            f"{repd.fragments_quarantined} fragment(s): "
+                            f"{repd.quarantined}")
+        print(f"[chaos] q6/q12/dataset bit-identical under seeded faults "
+              f"(retries={total_retries}, "
+              f"quarantined={repd.fragments_quarantined})")
+
+        # -- CRC verification overhead gate ----------------------------
+        def best_wall() -> float:
+            best = float("inf")
+            for _ in range(max(1, args.rounds)):
+                _clear_decoded_caches()
+                sc = open_l()
+                t0 = time.perf_counter()
+                q6(sc, overlapped=True, decode_workers=2)
+                best = min(best, time.perf_counter() - t0)
+            return best
+
+        on_wall = best_wall()
+        prev = set_verify_checksums(False)
+        try:
+            off_wall = best_wall()
+        finally:
+            set_verify_checksums(prev)
+        budget = off_wall * (1.0 + args.crc_threshold) \
+            + args.crc_slack_us * 1e-6
+        print(f"[chaos] crc overhead: verify-on {on_wall * 1e6:.0f}us vs "
+              f"verify-off {off_wall * 1e6:.0f}us "
+              f"(budget {budget * 1e6:.0f}us, min of {args.rounds} rounds)")
+        if on_wall > budget:
+            failures.append(
+                f"checksum verification exceeds its budget: "
+                f"{on_wall * 1e6:.0f}us > {budget * 1e6:.0f}us "
+                f"(verify-off {off_wall * 1e6:.0f}us "
+                f"+{args.crc_threshold * 100:.0f}% "
+                f"+{args.crc_slack_us:.0f}us slack)")
+
+    if failures:
+        print("[chaos] FAIL")
+        for f in failures:
+            print(" ", f)
+        return 1
+    print("[chaos] ok — transient faults heal bit-identically and "
+          "verification stays within budget")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -42,12 +42,20 @@ import sys
 COUNT_KEYS = ("launches", "launches_per_rg", "requests", "io_requests",
               "groups")
 
+#: fault-recovery counters (DESIGN.md §6): parsed and shown in the report
+#: but NEVER gated — a chaos run's retries are expected recovery work, not
+#: a regression, and their absence from older baselines must not trip the
+#: dropped-counter check either
+INFO_KEYS = ("retries", "checksum_failures", "timeouts",
+             "fragments_quarantined")
+
 
 def parse_csv(path: str) -> "dict[str, tuple]":
-    """name → (us_per_call, {counter: value}, tags) from a benchmark CSV.
-    ``tags`` are the bare (non key=value) derived tokens, e.g. ``sim`` /
-    ``measured`` — ``sim`` rows are deterministic model times and are
-    never machine-speed scaled."""
+    """name → (us_per_call, {counter: value}, tags, {info: value}) from a
+    benchmark CSV.  ``tags`` are the bare (non key=value) derived tokens,
+    e.g. ``sim`` / ``measured`` — ``sim`` rows are deterministic model
+    times and are never machine-speed scaled.  ``info`` holds the
+    INFO_KEYS counters (displayed, never gated)."""
     rows: dict[str, tuple] = {}
     with open(path) as f:
         header = f.readline()
@@ -59,6 +67,7 @@ def parse_csv(path: str) -> "dict[str, tuple]":
                 continue
             name, us, derived = line.split(",", 2)
             counters: dict[str, float] = {}
+            info: dict[str, float] = {}
             tags = set()
             for token in derived.split(";"):
                 if "=" not in token:
@@ -66,12 +75,12 @@ def parse_csv(path: str) -> "dict[str, tuple]":
                         tags.add(token)
                     continue
                 k, _, v = token.partition("=")
-                if k in COUNT_KEYS:
+                if k in COUNT_KEYS or k in INFO_KEYS:
                     try:
-                        counters[k] = float(v)
+                        (counters if k in COUNT_KEYS else info)[k] = float(v)
                     except ValueError:
                         pass
-            rows[name] = (float(us), counters, tags)
+            rows[name] = (float(us), counters, tags, info)
     return rows
 
 
@@ -153,6 +162,11 @@ def compare(baseline: dict, current: dict, threshold: float, min_us: float,
                     "fails)")
         counts = ";".join(f"{k}={cur_counts.get(k, float('nan')):g}"
                           for k in base_counts) or "—"
+        # informational fault-recovery counters ride along, never gated
+        cur_info = cur[3] if len(cur) > 3 else {}
+        info = ";".join(f"{k}={v:g}" for k, v in sorted(cur_info.items()))
+        if info:
+            counts = f"{counts};{info}" if counts != "—" else info
         table.append([name, f"{base_us:.1f}", f"{gated_us:.1f}",
                       counts, status])
     for name in sorted(set(current) - set(baseline)):
@@ -189,7 +203,10 @@ def selftest() -> int:
     """Inject a regression into a synthetic pair and assert the gate trips."""
     base = {"q6_overlapped": (1000.0, {"launches": 4.0}),
             "q12_overlapped": (2000.0, {"requests": 8.0})}
-    good = {"q6_overlapped": (1100.0, {"launches": 4.0}),
+    # info counters (retries, …) are informational: nonzero values in the
+    # current run must not gate
+    good = {"q6_overlapped": (1100.0, {"launches": 4.0}, {"measured"},
+                              {"retries": 5.0, "timeouts": 1.0}),
             "q12_overlapped": (1900.0, {"requests": 8.0})}
     bad = {"q6_overlapped": (2000.0, {"launches": 4.0}),      # 2x wall
            "q12_overlapped": (1900.0, {"requests": 9.0})}     # +1 request
