@@ -32,6 +32,7 @@ from repro.core.reader import TabFileReader
 from repro.core.rewriter import rewrite_file
 from repro.core.scan import open_scanner
 from repro.core.storage import SimulatedStorage
+from repro.kernels.common import kernel_launch_count
 
 CONFIGS = {
     "baseline": CPU_DEFAULT,
@@ -116,6 +117,27 @@ def run() -> None:
                 if row[0] not in best or row[1] < best[row[0]][0]:
                     best[row[0]] = (row[1], row[2])
 
+            if name == "optimized":
+                # fused late-materialization pair (DESIGN.md §7): pallas
+                # decode so the launch economy is visible — the CI gate
+                # pins fused launches strictly below unfused, and the
+                # fused row records its wall speedup over the unfused twin
+                for fused in (False, True):
+                    sc = open_scanner(lpath, columns=list(Q6_COLUMNS),
+                                      backend="sim", n_lanes=1,
+                                      decode_backend="pallas")
+                    l0 = kernel_launch_count()
+                    _, rep = q6(sc, overlapped=False, prune=False,
+                                fused=fused)
+                    launches = kernel_launch_count() - l0
+                    key = ("fig5_q6_optimized_pallas_fused" if fused
+                           else "fig5_q6_optimized_pallas_unfused")
+                    derived = (f"launches={launches};"
+                               f"io_requests={rep.metrics.n_io_requests};"
+                               f"{rep.stage_summary}")
+                    if key not in best or rep.modeled_wall < best[key][0]:
+                        best[key] = (rep.modeled_wall, derived)
+
             for workers in (0, 2):
                 lsc = open_scanner(lpath, columns=Q12_LINEITEM_COLUMNS,
                                    backend="sim", n_lanes=1,
@@ -142,6 +164,13 @@ def run() -> None:
                     f"fig5_q12_{name}_overlapped"):
             wall, derived = best[key]
             emit(key, wall * 1e6, derived)
+
+    uf_wall, uf_derived = best["fig5_q6_optimized_pallas_unfused"]
+    f_wall, f_derived = best["fig5_q6_optimized_pallas_fused"]
+    emit("fig5_q6_optimized_pallas_unfused", uf_wall * 1e6, uf_derived)
+    emit("fig5_q6_optimized_pallas_fused", f_wall * 1e6,
+         f"speedup_vs_unfused={uf_wall / max(f_wall, 1e-12):.2f}x;"
+         f"{f_derived}")
 
     cpu_s = min(_cpu_baseline_q6(base["lineitem_path"] + ".q_optimized")
                 for _ in range(rounds))   # same noise treatment as fig5 rows

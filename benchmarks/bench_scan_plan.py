@@ -20,6 +20,7 @@ from benchmarks.common import (BENCH_SF, emit, emit_cpu_reference,
                                ensure_tpch, timeit)
 from repro.core.compression import chunk_decompress_memo
 from repro.core.config import ACCELERATOR_OPTIMIZED, CompressionSpec
+from repro.core.query import Q6_COLUMNS, q6_fused_spec
 from repro.core.scan import Scanner, open_scanner
 from repro.core.storage import SimulatedStorage, coalesce_ranges
 from repro.kernels.common import kernel_launch_count
@@ -93,6 +94,24 @@ def run() -> None:
              dt * 1e6,
              f"launches_per_rg={launches};{arena}"
              "pallas-interpret;measured")
+
+    # -- fused late materialization (DESIGN.md §7): the Q6 predicate set
+    # decodes its aggregate operands *in-kernel*, so one row group costs
+    # the stage-A group launch plus exactly one fused launch — gated
+    # against the per-chunk and planned rows above
+    sc = Scanner(small["lineitem_path"], columns=list(Q6_COLUMNS),
+                 decode_backend="pallas", fused_spec=q6_fused_spec())
+    raws, _ = sc.fetch_rg(0)
+    sc.decode_rg(0, raws)              # warm jit (+ arena pool)
+    l0 = kernel_launch_count()
+    sc.decode_rg(0, raws)
+    launches = kernel_launch_count() - l0
+    dt = timeit(lambda: sc.decode_rg(0, raws),
+                repeats=max(3, int(os.environ.get("BENCH_ROUNDS", "3"))),
+                warmup=0, reduce="min")
+    emit("scan_plan_launches_fused", dt * 1e6,
+         f"launches_per_rg={launches};q6 predicate+agg;"
+         "pallas-interpret;measured")
 
     # -- chunk decompress memo: gzip revisit cost (ROADMAP lever) -----------
     gz = ensure_tpch(cfg.replace(compression=CompressionSpec(codec="gzip",

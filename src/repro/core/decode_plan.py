@@ -45,6 +45,7 @@ from collections.abc import Callable, Sequence
 import numpy as np
 
 from repro.core import bitpack
+from repro.core import fused as fused_mod
 from repro.core.compression import (Codec, cascade_manifest,
                                     chunk_decompress_memo, decompress,
                                     verify_page)
@@ -282,6 +283,10 @@ class ExecContext:
     out: dict[str, "ops.DecodeResult"] = dataclasses.field(
         default_factory=dict)
     leases: list[np.ndarray] = dataclasses.field(default_factory=list)
+    # late-materialization state (core/fused.py): the per-RG fused plan
+    # and the phase-3 result delivered under FUSED_KEY
+    fused_plan: object = None
+    fused_result: object = None
 
 
 # ---------------------------------------------------------------------------
@@ -298,11 +303,14 @@ class DecodePlanner:
 
     def __init__(self, meta: FileMeta, columns: Sequence[str],
                  backend: str = "pallas",
-                 cache_token: tuple | None = None):
+                 cache_token: tuple | None = None,
+                 fused_spec: "fused_mod.FusedSpec | None" = None):
         assert backend in ("pallas", "host")
         self.meta = meta
         self.columns = list(columns)
         self.backend = backend
+        self.fused_spec = fused_spec
+        self._fused_plans: dict[int, "fused_mod.FusedRGPlan"] = {}
         self._plans: dict[int, RowGroupPlan] = {}
         self.plans_built = 0
         self.plan_seconds = 0.0
@@ -328,9 +336,20 @@ class DecodePlanner:
             key_fn = (_pallas_page_keys if self.backend == "pallas"
                       else _host_page_keys)
             rg = self.meta.row_groups[rg_index]
+            # late materialization: under a fused-mode spec the late
+            # columns never enter the stage-A plan at all — their pages
+            # decode (or are skipped) inside the phase-3 fused item
+            late: frozenset = frozenset()
+            if (self.fused_spec is not None
+                    and self.fused_spec.mode == "fused"):
+                fp = self._fused_plan_locked(rg_index)
+                if fp.ok:
+                    late = frozenset(fp.late)
             groups: "OrderedDict[tuple, DecodeGroup]" = OrderedDict()
             grouped, fallback = [], []
             for name in self.columns:
+                if name in late:
+                    continue
                 chunk = rg.column(name)
                 field = self.meta.schema.field(name)
                 keys = key_fn(chunk, field)
@@ -354,6 +373,20 @@ class DecodePlanner:
             self.plans_built += 1
             self.plan_seconds += time.perf_counter() - t0
             return plan
+
+    def fused_plan_rg(self, rg_index: int) -> "fused_mod.FusedRGPlan":
+        fp = self._fused_plans.get(rg_index)
+        if fp is not None:
+            return fp
+        with self._plan_lock:
+            return self._fused_plan_locked(rg_index)
+
+    def _fused_plan_locked(self, rg_index: int) -> "fused_mod.FusedRGPlan":
+        fp = self._fused_plans.get(rg_index)
+        if fp is None:
+            fp = fused_mod.build_fused_rg_plan(self, rg_index)
+            self._fused_plans[rg_index] = fp
+        return fp
 
     def _plan_decompress_stage(self, plan: RowGroupPlan, rg) -> None:
         """Classify grouped columns for the decompress stage and group
@@ -430,16 +463,21 @@ class DecodePlanner:
             task()
         for task in self.decode_tasks(ctx):
             task()
+        for task in self.fused_tasks(ctx):
+            task()
         return self.finish_execute(ctx)
 
     def begin_execute(self, rg_index: int, raws: dict[str, bytes]
                       ) -> "ExecContext":
         plan = self.plan_rg(rg_index)
-        return ExecContext(
+        ctx = ExecContext(
             rg_index=rg_index, plan=plan,
             rg=self.meta.row_groups[rg_index], raws=raws,
             use_kernels=(self.backend == "pallas"),
             per_col_parts={name: {} for name in plan.grouped_columns})
+        if self.fused_spec is not None:
+            ctx.fused_plan = self.fused_plan_rg(rg_index)
+        return ctx
 
     def decompress_tasks(self, ctx: "ExecContext") -> list[Callable[[], None]]:
         """Phase-1 work items: decompressed page payloads for every grouped
@@ -457,7 +495,39 @@ class DecodePlanner:
         for group in ctx.plan.cascade_groups:
             tasks.append(functools.partial(self._cascade_group_task,
                                            ctx, group))
+        if (ctx.fused_plan is not None and ctx.fused_plan.ok
+                and self.fused_spec.mode == "fused"):
+            # fused-mode aggregate operands: stage their still-encoded
+            # page payloads now, CRC-verified — the ChecksumError-before-
+            # kernel gate for the fused path (tools/chaos_check.py)
+            for op in ctx.fused_plan.operands:
+                tasks.append(functools.partial(self._fused_payload_task,
+                                               ctx, op.name))
         return tasks
+
+    def _fused_payload_task(self, ctx: "ExecContext", name: str) -> None:
+        """Verified page payloads for one late fused operand (its column
+        is outside the stage-A plan, so neither the memo nor the raw-view
+        task covers it).  Operand eligibility restricts the codec to
+        NONE/GZIP (core/fused.py)."""
+        chunk = ctx.rg.column(name)
+        codec = Codec(chunk.codec)
+        if codec == Codec.GZIP:
+            self._inflate_column_task(ctx, name)
+            return
+        raw = ctx.raws[name]
+        off0, _ = chunk.byte_range
+        if chunk.dict_page is not None:
+            dp = chunk.dict_page
+            data = raw[dp.offset - off0:dp.offset - off0 + dp.stored_size]
+            verify_page(data, dp, where=f"{name} dict@{dp.offset}")
+            ctx.payloads[(name, "dict")] = decompress(
+                data, codec, dp.uncompressed_size)
+        for pi, pm in enumerate(chunk.pages):
+            lo = pm.offset - off0
+            verify_page(raw[lo:lo + pm.stored_size], pm,
+                        where=f"{name} page@{pm.offset}")
+            ctx.payloads[(name, pi)] = (raw, lo, pm.stored_size)
 
     def _inflate_column_task(self, ctx: "ExecContext", name: str) -> None:
         chunk = ctx.rg.column(name)
@@ -555,13 +625,26 @@ class DecodePlanner:
             chunk, field, ctx.raws[name], use_kernels=ctx.use_kernels,
             payloads=self._fallback_payloads(chunk, name, ctx.raws))
 
+    def fused_tasks(self, ctx: "ExecContext") -> list[Callable[[], None]]:
+        """Phase-3 work item (valid once every decode task drained): the
+        fused stage-B of a predicated scan — stage-A mask, zone/selection
+        page skips, ONE fused kernel launch (or the reference twin).
+        Empty for planners without a FusedSpec, so the scheduler's phase
+        accounting is untouched on the unfused path."""
+        if ctx.fused_plan is None:
+            return []
+        return [functools.partial(self._fused_task, ctx)]
+
+    def _fused_task(self, ctx: "ExecContext") -> None:
+        ctx.fused_result = fused_mod.run_fused(self, ctx)
+
     def finish_execute(self, ctx: "ExecContext"
                        ) -> dict[str, ops.DecodeResult]:
         """Join barrier: scatter group outputs back into per-column results,
         flush the device, return pooled arenas."""
         for name in ctx.plan.grouped_columns:
-            if name in ctx.demoted:
-                continue
+            if name in ctx.demoted or name in ctx.out:
+                continue      # phase 3 may have assembled stage-A columns
             chunk = ctx.rg.column(name)
             field = self.meta.schema.field(name)
             ctx.out[name] = self._assemble_column(
@@ -574,6 +657,13 @@ class DecodePlanner:
                     res.array.block_until_ready()
             for buf in ctx.leases:
                 self._arena_pool.give(buf)
+        if ctx.fused_result is not None:
+            # late columns were never materialized — deliver the stage-A
+            # columns that exist plus the fused result under FUSED_KEY
+            out = {name: ctx.out[name] for name in self.columns
+                   if name in ctx.out}
+            out[fused_mod.FUSED_KEY] = ctx.fused_result
+            return out
         return {name: ctx.out[name] for name in self.columns}
 
     # -- fault recovery ------------------------------------------------------
@@ -1007,7 +1097,9 @@ _PLANNER_CACHE_MAX = 64
 
 
 def planner_for(path: str, meta: FileMeta, columns: Sequence[str],
-                backend: str) -> DecodePlanner:
+                backend: str,
+                fused_spec: "fused_mod.FusedSpec | None" = None
+                ) -> DecodePlanner:
     # st_size + st_mtime_ns catch same-path rewrites whose footers would
     # otherwise collide (same rows / row groups / stored bytes) — a stale
     # plan would decode with the old file's page offsets.
@@ -1017,7 +1109,7 @@ def planner_for(path: str, meta: FileMeta, columns: Sequence[str],
     except OSError:
         stamp = ()
     key = (path, tuple(columns), backend, meta.num_rows,
-           len(meta.row_groups), meta.stored_bytes, stamp)
+           len(meta.row_groups), meta.stored_bytes, stamp, fused_spec)
     planner = _PLANNER_CACHE.get(key)
     if planner is not None:
         _PLANNER_CACHE.move_to_end(key)
@@ -1025,7 +1117,8 @@ def planner_for(path: str, meta: FileMeta, columns: Sequence[str],
     # cache_token omits the column selection: scanners over different
     # column subsets of one file share dictionary/decompress cache entries
     planner = DecodePlanner(meta, columns, backend,
-                            cache_token=(path, stamp, meta.stored_bytes))
+                            cache_token=(path, stamp, meta.stored_bytes),
+                            fused_spec=fused_spec)
     _PLANNER_CACHE[key] = planner
     while len(_PLANNER_CACHE) > _PLANNER_CACHE_MAX:
         _PLANNER_CACHE.popitem(last=False)

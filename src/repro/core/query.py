@@ -20,11 +20,14 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.fused import (FUSED_KEY, Compare, FusedSpec, Interval,
+                              SumProduct)
 from repro.core.overlap import RunReport, run_blocking, run_overlapped
 from repro.core.scan import Scanner
 from repro.kernels.filter_agg import TILE, filter_agg_q6
@@ -48,6 +51,15 @@ def _is_dataset(source) -> bool:
     return hasattr(source, "fragments") and hasattr(source, "partitioning")
 
 
+def _resolve_fused(fused: "bool | str | None") -> "bool | str":
+    """``fused=`` resolution shared by q6/q12: None defers to the
+    ``REPRO_FUSED`` env (the CI matrix leg), "reference" selects the
+    unfused bit-identity twin (full materialization, canonical reduce)."""
+    if fused is None:
+        return os.environ.get("REPRO_FUSED", "0") == "1"
+    return fused
+
+
 # ---------------------------------------------------------------------------
 # Q6 — SELECT sum(l_extendedprice*l_discount) WHERE shipdate in FY1994
 #       AND discount BETWEEN 0.05 AND 0.07 AND quantity < 24
@@ -66,6 +78,35 @@ def q6_rg_stats_predicate(name: str, stats: dict) -> bool:
     if name == "l_shipdate":
         return stats["min"] < D_1995_01_01 and stats["max"] >= D_1994_01_01
     return True
+
+
+def q6_fused_spec(mode: str = "fused") -> FusedSpec:
+    """Q6 as a FusedSpec: shipdate interval stays in stage A (DELTA-coded
+    → not kernel-fusable), discount/quantity intervals and the
+    price×discount aggregate fuse into one stage-B launch per row group
+    (constants cast to float32 in-kernel — same bits as ``_q6_jnp``)."""
+    return FusedSpec(
+        predicates=(Interval("l_shipdate", lo=D_1994_01_01,
+                             hi=D_1995_01_01),
+                    Interval("l_discount", lo=0.05, hi=0.07, hi_incl=True),
+                    Interval("l_quantity", hi=24.0)),
+        agg=SumProduct("l_extendedprice", "l_discount"),
+        mode=mode)
+
+
+def _q6_consume_fused(use_kernel: bool):
+    """Sums the canonical per-RG fused partials in plan order.  Falls back
+    to the legacy consume when a row group arrives without a fused result
+    (use_plan=False scanners, instance-patched decode paths)."""
+    legacy = _q6_consume(use_kernel)
+
+    def consume(acc, rg_index, cols):
+        res = cols.get(FUSED_KEY)
+        if res is None:
+            return legacy(acc, rg_index, cols)
+        return res.partial if acc is None else acc + res.partial
+
+    return consume
 
 
 def _q6_consume(use_kernel: bool):
@@ -97,7 +138,8 @@ def _q6_consume(use_kernel: bool):
 def q6(scanner: Scanner, overlapped: bool = True, use_kernel: bool = False,
        prune: bool = True, prepare_plan: bool = False, depth: int = 2,
        decode_workers: int | None = None, service=None,
-       window: int = 4, open_opts: dict | None = None
+       window: int = 4, open_opts: dict | None = None,
+       fused: "bool | str | None" = None
        ) -> tuple[float, RunReport]:
     """Run Q6 over the scanner's stream — or over a whole **Dataset**
     (file-level pruning + sharded fragment scans; returns a
@@ -111,7 +153,15 @@ def q6(scanner: Scanner, overlapped: bool = True, use_kernel: bool = False,
     concurrency bound; ``Dataset.open_fragment`` storage options);
     dataset runs are always sharded (``overlapped=False`` raises) and
     ``prepare_plan`` is a no-op for them (per-fragment decode plans are
-    cached on first scan)."""
+    cached on first scan).  ``fused`` selects late materialization
+    (``True``/``"reference"``; ``None`` defers to ``REPRO_FUSED``):
+    the decode plan stages predicate columns first and runs the
+    filter+aggregate inside the scan (core/fused.py)."""
+    fused = _resolve_fused(fused)
+    spec = q6_fused_spec("reference" if fused == "reference"
+                         else "fused") if fused else None
+    consume = (_q6_consume_fused(use_kernel) if spec is not None
+               else _q6_consume(use_kernel))
     if _is_dataset(scanner):
         if not overlapped:
             raise ValueError("dataset runs are always sharded/overlapped; "
@@ -121,11 +171,16 @@ def q6(scanner: Scanner, overlapped: bool = True, use_kernel: bool = False,
         plan = plan_dataset_scan(
             scanner, columns=list(Q6_COLUMNS),
             predicate_stats=q6_rg_stats_predicate if prune else None)
+        if spec is not None:
+            open_opts = dict(open_opts or {}, fused_spec=spec)
         acc, report = run_dataset_scan(
-            plan, _q6_consume(use_kernel), lambda a, b: a + b,
+            plan, consume, lambda a, b: a + b,
             window=window, depth=depth, decode_workers=decode_workers,
             service=service, open_opts=open_opts)
         return (acc or 0.0), report
+    if spec is not None and scanner.planner is not None \
+            and scanner.fused_spec != spec:
+        scanner.enable_fused(spec)
     if prepare_plan:
         scanner.prepare_plans(
             predicate_stats=q6_rg_stats_predicate if prune else None)
@@ -135,7 +190,7 @@ def q6(scanner: Scanner, overlapped: bool = True, use_kernel: bool = False,
                                    service=service)
     else:
         runner = run_blocking
-    acc, report = runner(scanner, _q6_consume(use_kernel),
+    acc, report = runner(scanner, consume,
                          predicate_stats=(q6_rg_stats_predicate
                                           if prune else None))
     return (acc or 0.0), report
@@ -179,20 +234,69 @@ def _q12_probe(skeys, sprio, okey, mode, ship, commit, receipt):
     return jnp.stack(out)
 
 
+def q12_fused_spec(mode: str = "fused") -> FusedSpec:
+    """Q12's probe side as a selection-mode FusedSpec: every predicate and
+    compare column evaluates in stage A, and the emit-only ``l_orderkey``
+    is materialized late — only for row groups where any row survives the
+    receipt-window + shipmode + date-ordering filter."""
+    return FusedSpec(
+        predicates=(Interval("l_receiptdate", lo=D_1994_01_01,
+                             hi=D_1995_01_01),
+                    Interval("l_shipmode",
+                             in_set=(SHIPMODE_MAIL, SHIPMODE_SHIP))),
+        compares=(Compare("l_commitdate", "l_receiptdate"),
+                  Compare("l_shipdate", "l_commitdate")),
+        emit=("l_orderkey", "l_shipmode"),
+        mode=mode)
+
+
+@jax.jit
+def _q12_probe_selected(skeys, sprio, okey, mode):
+    """Join probe over pre-selected rows (the fused path's selection
+    vector already applied).  Padding rows carry okey=-1 (no order key
+    matches) and mode=0 (neither shipmode), so they count nothing."""
+    pos = jnp.clip(jnp.searchsorted(skeys, okey), 0, skeys.shape[0] - 1)
+    hit = skeys[pos] == okey
+    prio = sprio[pos]
+    urgent = (prio <= 1) & hit
+    other = (prio > 1) & hit
+    out = []
+    for m in (SHIPMODE_MAIL, SHIPMODE_SHIP):
+        sel = mode == m
+        out.append(jnp.sum((urgent & sel).astype(jnp.int32)))
+        out.append(jnp.sum((other & sel).astype(jnp.int32)))
+    return jnp.stack(out)
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, int(n) - 1).bit_length()
+
+
 def q12(lineitem_scanner: Scanner, orders_scanner: Scanner,
         overlapped: bool = True, prepare_plan: bool = False,
         depth: int = 2, decode_workers: int | None = None,
-        service=None, window: int = 4, open_opts: dict | None = None
+        service=None, window: int = 4, open_opts: dict | None = None,
+        fused: "bool | str | None" = None
         ) -> tuple[dict[str, int], RunReport, RunReport]:
     """Q12 over scanners — or over Datasets (either side independently):
     the build side streams every orders fragment, the probe side shards
     lineitem fragments through the ScanService, and per-fragment counts
     reduce in plan order.  Dataset sides are always sharded
-    (``overlapped=False`` raises) and skip ``prepare_plan``."""
+    (``overlapped=False`` raises) and skip ``prepare_plan``.  ``fused``
+    (``True``/``"reference"``/``None``→``REPRO_FUSED``) runs the probe
+    side with late materialization: ``l_orderkey`` only materializes for
+    row groups with surviving rows (core/fused.py)."""
     if not overlapped and (_is_dataset(lineitem_scanner)
                            or _is_dataset(orders_scanner)):
         raise ValueError("dataset runs are always sharded/overlapped; "
                          "open fragment Scanners for a blocking run")
+    fused = _resolve_fused(fused)
+    lspec = q12_fused_spec("reference" if fused == "reference"
+                           else "fused") if fused else None
+    if lspec is not None and not _is_dataset(lineitem_scanner) \
+            and lineitem_scanner.planner is not None \
+            and lineitem_scanner.fused_spec != lspec:
+        lineitem_scanner.enable_fused(lspec)
     if prepare_plan and not _is_dataset(lineitem_scanner):
         lineitem_scanner.prepare_plans()
     if prepare_plan and not _is_dataset(orders_scanner):
@@ -228,6 +332,26 @@ def q12(lineitem_scanner: Scanner, orders_scanner: Scanner,
     skeys, sprio = keys[order], prio[order]
 
     def probe_consume(acc, rg_index, cols):
+        fres = cols.get(FUSED_KEY) if lspec is not None else None
+        if fres is not None:
+            # fused path: the selection already applied every predicate —
+            # probe only the surviving (okey, shipmode) pairs, padded to a
+            # pow2 (okey=-1 / mode=0 rows count nothing)
+            okey = fres.gathered["l_orderkey"]
+            shipmode = fres.gathered["l_shipmode"]
+            n = int(okey.shape[0])
+            if n == 0:
+                part = jnp.zeros(4, jnp.int32)
+            else:
+                cap = max(32, _next_pow2(n))
+                ok = np.full(cap, -1, dtype=np.int64)
+                ok[:n] = okey
+                md = np.zeros(cap, dtype=np.int64)
+                md[:n] = shipmode
+                part = _q12_probe_selected(
+                    skeys, sprio, jnp.asarray(ok.astype(np.int32)),
+                    jnp.asarray(md.astype(np.int32)))
+            return part if acc is None else acc + part
         part = _q12_probe(
             skeys, sprio,
             _dev(cols["l_orderkey"].array).astype(jnp.int32),
@@ -242,10 +366,13 @@ def q12(lineitem_scanner: Scanner, orders_scanner: Scanner,
         from repro.dataset.planner import plan_dataset_scan
         lplan = plan_dataset_scan(lineitem_scanner,
                                   columns=list(Q12_LINEITEM_COLUMNS))
+        l_open_opts = open_opts
+        if lspec is not None:
+            l_open_opts = dict(open_opts or {}, fused_spec=lspec)
         counts, probe_report = run_dataset_scan(
             lplan, probe_consume, lambda a, b: a + b,
             window=window, depth=depth, decode_workers=decode_workers,
-            service=service, open_opts=open_opts)
+            service=service, open_opts=l_open_opts)
     else:
         counts, probe_report = runner(lineitem_scanner, probe_consume)
     counts = np.asarray(counts)

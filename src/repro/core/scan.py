@@ -133,6 +133,11 @@ class DecodeJob:
     def phase2_tasks(self) -> list:
         return []
 
+    def phase3_tasks(self) -> list:
+        """Late-materialization items (fused stage-B, core/fused.py) —
+        valid once phase 2 fully drains; empty on unfused scans."""
+        return []
+
     def finalize(self) -> dict[str, ops.DecodeResult]:
         raise NotImplementedError
 
@@ -149,6 +154,9 @@ class _PlannedDecodeJob(DecodeJob):
 
     def phase2_tasks(self):
         return self.planner.decode_tasks(self.ctx)
+
+    def phase3_tasks(self):
+        return self.planner.fused_tasks(self.ctx)
 
     def finalize(self):
         out = self.planner.finish_execute(self.ctx)
@@ -193,7 +201,8 @@ class Scanner:
                  use_plan: bool = True,
                  coalesce_gap: int = DEFAULT_COALESCE_GAP,
                  retry: RetryPolicy | None = None,
-                 fault_plan: FaultPlan | None = None):
+                 fault_plan: FaultPlan | None = None,
+                 fused_spec=None):
         self.path = path
         self.meta = read_footer(path)
         self.columns = columns if columns is not None \
@@ -212,8 +221,13 @@ class Scanner:
         assert decode_backend in ("pallas", "host")
         self.decode_backend = decode_backend
         self.coalesce_gap = coalesce_gap
+        if fused_spec is not None and not use_plan:
+            raise ValueError("fused scans require use_plan=True")
+        self.fused_spec = fused_spec
         self.planner = planner_for(path, self.meta, self.columns,
-                                   decode_backend) if use_plan else None
+                                   decode_backend,
+                                   fused_spec=fused_spec) \
+            if use_plan else None
         self._reader = TabFileReader(path, fetch=self.storage.fetch)
         # decode-layer fault accounting; storage-layer counts live in the
         # RetryingStorage.  Lock-protected: the ScanService's decode
@@ -222,6 +236,15 @@ class Scanner:
         self._decode_retries = 0
         self._checksum_failures = 0
         self._timeouts = 0
+
+    def enable_fused(self, spec) -> None:
+        """Attach a FusedSpec to an already-open scanner (rebinds the
+        planner — fused and unfused scans never share stage-A plans)."""
+        if self.planner is None:
+            raise ValueError("fused scans require use_plan=True")
+        self.fused_spec = spec
+        self.planner = planner_for(self.path, self.meta, self.columns,
+                                   self.decode_backend, fused_spec=spec)
 
     # -- fault accounting ----------------------------------------------------
 
@@ -407,8 +430,10 @@ def open_scanner(path: str, columns=None, backend: str = "real",
                  use_plan: bool = True,
                  coalesce_gap: int = DEFAULT_COALESCE_GAP,
                  retry: RetryPolicy | None = None,
-                 fault_plan: FaultPlan | None = None) -> Scanner:
+                 fault_plan: FaultPlan | None = None,
+                 fused_spec=None) -> Scanner:
     storage = open_storage(path, backend, n_lanes, lane_bandwidth, latency)
     return Scanner(path, columns, storage, decode_backend,
                    use_plan=use_plan, coalesce_gap=coalesce_gap,
-                   retry=retry, fault_plan=fault_plan)
+                   retry=retry, fault_plan=fault_plan,
+                   fused_spec=fused_spec)

@@ -134,7 +134,7 @@ class _RgJob:
         self.io_dt = io_dt
         self.job = None           # built by the "open" item
         self.pending = 0          # outstanding items of the current phase
-        self.phase = 0            # 0=open, 1, 2
+        self.phase = 0            # 0=open, 1, 2, 3 (fused stage-B)
         self.chunk_times: list[float] = []
         self.p2_start = 0         # chunk_times index of the first phase-2
                                   # item (the phase barrier, for the model)
@@ -172,7 +172,8 @@ def _share_key(scanner) -> tuple | None:
             getattr(storage, "n_lanes", None),
             getattr(storage, "lane_bandwidth", None),
             getattr(storage, "latency", None),
-            getattr(scanner, "coalesce_gap", None))
+            getattr(scanner, "coalesce_gap", None),
+            getattr(scanner, "fused_spec", None))
 
 
 class _ScanState:
@@ -672,7 +673,9 @@ class ScanService:
 
     def _advance(self, scan: _ScanState, rgjob: _RgJob) -> bool:
         """Phase transition on the worker that drained the previous phase:
-        1 → build+queue phase-2 items; 2 → finalize (join) and deliver."""
+        1 → build+queue phase-2 items; 2 → queue fused phase-3 items when
+        the job has any (late materialization); else finalize (join) and
+        deliver."""
         if rgjob.failed:
             return False
         if rgjob.phase == 1:
@@ -682,6 +685,20 @@ class ScanService:
             self._note_item(scan, rgjob, t0)
             rgjob.p2_start = len(rgjob.chunk_times)
             return self._enqueue_phase(scan, rgjob, tasks)
+        if rgjob.phase == 2:
+            getter = getattr(rgjob.job, "phase3_tasks", None)
+            tasks = list(getter()) if getter is not None else []
+            rgjob.phase = 3
+            if tasks:
+                # the fused stage needs every phase-2 column decoded; the
+                # modeled schedule treats the whole decode as one serial
+                # span for such jobs (p2_start = 0 — conservative)
+                t0 = time.perf_counter()
+                self._note_item(scan, rgjob, t0)
+                rgjob.p2_start = 0
+                return self._enqueue_phase(scan, rgjob, tasks)
+            # empty: fall straight through to finalize with NO extra
+            # chunk-time item, so unfused accounting is untouched
         t0 = time.perf_counter()
         cols = rgjob.job.finalize()
         self._note_item(scan, rgjob, t0)

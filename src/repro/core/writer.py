@@ -37,6 +37,28 @@ def _chunk_stats(values, physical: PhysicalType) -> dict | None:
     return {"min": int(lo), "max": int(hi)}
 
 
+def _page_stats(values, physical: PhysicalType,
+                slices) -> "list[tuple] | None":
+    """Per-page (vmin, vmax) zone maps for numeric columns — the fused
+    scan path (core/fused.py) uses these to skip whole pages before any
+    arena byte is materialized.  Strings/booleans carry none."""
+    if isinstance(values, StringColumn) or values.shape[0] == 0:
+        return None
+    if physical == PhysicalType.BOOLEAN:
+        return None
+    as_float = physical in (PhysicalType.FLOAT, PhysicalType.DOUBLE)
+    out = []
+    for s, e in slices:
+        v = values[s:e]
+        if v.shape[0] == 0:
+            out.append(None)
+        elif as_float:
+            out.append((float(v.min()), float(v.max())))
+        else:
+            out.append((int(v.min()), int(v.max())))
+    return out
+
+
 def _encode_one_chunk(args):
     """Worker: encode + codec-gate one column chunk (thread-pool friendly —
     numpy/zlib release the GIL on the heavy parts)."""
@@ -48,7 +70,8 @@ def _encode_one_chunk(args):
     codec, stored, _, _ = maybe_compress_chunk(
         payloads, config.compression.codec, config.compression.min_gain,
         config.compression.level)
-    return ce, codec, stored, _chunk_stats(values, field.physical)
+    return (ce, codec, stored, _chunk_stats(values, field.physical),
+            _page_stats(values, field.physical, slices))
 
 
 class TabFileWriter:
@@ -86,18 +109,30 @@ class TabFileWriter:
         else:
             results = [_encode_one_chunk(j) for j in jobs]
         chunk_metas: list[ChunkMeta] = []
-        for fld, (ce, codec, stored, stats) in zip(self._schema.fields,
-                                                   results):
+        for fld, (ce, codec, stored, stats, pstats) in zip(
+                self._schema.fields, results):
             uncomp_pages = list(ce.pages)
+            n_dict = 0
             if ce.dict_page is not None:
                 uncomp_pages = [ce.dict_page] + uncomp_pages
+                n_dict = 1
+            # per-page zone maps line up 1:1 with the row slices; encoders
+            # that merge or split pages (none today) would break the zip,
+            # so only stamp when the counts agree
+            stamp_pages = (pstats is not None
+                           and len(ce.pages) == len(pstats))
             page_metas: list[PageMeta] = []
-            for enc_page, stored_payload in zip(uncomp_pages, stored):
+            for page_i, (enc_page, stored_payload) in enumerate(
+                    zip(uncomp_pages, stored)):
                 self._f.write(stored_payload)
                 # stamp a CRC32 of the *stored* bytes so the read path can
                 # verify before decompressing / caching (compression.py)
                 extra = dict(enc_page.extra,
                              crc32=page_crc(stored_payload))
+                if stamp_pages and page_i >= n_dict:
+                    ps = pstats[page_i - n_dict]
+                    if ps is not None:
+                        extra = dict(extra, vmin=ps[0], vmax=ps[1])
                 if codec == Codec.CASCADE:
                     # stamp the cascade frame's packed-run widths into the
                     # footer so the DecodePlanner can group the device

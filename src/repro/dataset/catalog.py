@@ -364,7 +364,8 @@ class Dataset:
                       lane_bandwidth: float = 7e9, latency: float = 20e-6,
                       use_plan: bool = True,
                       coalesce_gap: int = DEFAULT_COALESCE_GAP,
-                      retry=None, fault_plan=None) -> Scanner:
+                      retry=None, fault_plan=None,
+                      fused_spec=None) -> Scanner:
         if isinstance(frag, int):
             frag = self.fragments[frag]
         return open_scanner(self.fragment_path(frag), columns=columns,
@@ -372,7 +373,8 @@ class Dataset:
                             decode_backend=decode_backend,
                             lane_bandwidth=lane_bandwidth, latency=latency,
                             use_plan=use_plan, coalesce_gap=coalesce_gap,
-                            retry=retry, fault_plan=fault_plan)
+                            retry=retry, fault_plan=fault_plan,
+                            fused_spec=fused_spec)
 
 
 # ---------------------------------------------------------------------------

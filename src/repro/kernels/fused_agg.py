@@ -1,0 +1,185 @@
+"""Pallas kernel: fused decode→filter→aggregate over page blocks.
+
+The late-materialization path (core/fused.py, DESIGN.md §7) collapses the
+stage-B half of a predicated scan into ONE pallas launch per row group:
+every kernel-fusable operand column — dictionary-coded (codes unpacked and
+gathered in-kernel) or PLAIN 32-bit (bitcast in-kernel) — rides into the
+same call together with the stage-A selection mask, and each grid step
+emits one per-page float32 partial of ``sum(where(mask, left*right, 0))``.
+The selected values never touch HBM as a materialized column.
+
+Bit-identity contract: the arithmetic after in-kernel decode is the
+shared traced expression ``mask_and_reduce`` below.  The unfused
+reference twin (``reference_page_reduce``) evaluates the *same* function
+on the same (1, P) page block of fully-decoded values, so both paths
+lower to the same jaxpr on the same values and the per-page partials are
+bitwise identical — the CI bit-identity step pins this forever.
+
+Operand config (static, hashable) — one tuple per operand, in order:
+    (kind, width, vdtype, lo, hi, lo_incl, hi_incl, in_set, role)
+kind   : 'dict' (bit-transposed codes + dictionary gather) | 'plain'
+         (uint32 words bitcast to vdtype)
+width  : dict code bit width (0 for plain)
+vdtype : 'float32' | 'int32' — decoded value dtype
+lo/hi  : optional interval predicate bounds applied to this operand
+in_set : optional tuple of allowed values (OR of equality tests)
+role   : '' | 'left' | 'right' | 'both' — the aggregate product factors
+         ('both' when the same column is squared: left == right)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import (count_launch, interpret_default,
+                                  unpack_words_static)
+
+
+def mask_and_reduce(mask, vals_list, cfg):
+    """The canonical page-block reduce — shared bit-for-bit by the fused
+    kernel body and the unfused reference twin.
+
+    mask: (P,) bool — stage-A predicate AND validity; vals_list: one (P,)
+    decoded value array per cfg operand.  Returns the float32 scalar
+    partial for this page.  Lanes with mask False contribute exactly +0.0
+    (``where`` selects, it never propagates the discarded product), which
+    is what lets zone/selection-skipped pages be backfilled with literal
+    0.0 on the fused side without breaking identity.
+    """
+    left = right = None
+    for op, vals in zip(cfg, vals_list):
+        _, _, vdtype, lo, hi, lo_incl, hi_incl, in_set, role = op
+        cast = np.dtype(vdtype).type
+        if lo is not None:
+            mask = mask & (vals >= cast(lo) if lo_incl else vals > cast(lo))
+        if hi is not None:
+            mask = mask & (vals <= cast(hi) if hi_incl else vals < cast(hi))
+        if in_set is not None:
+            member = None
+            for allowed in in_set:
+                eq = vals == cast(allowed)
+                member = eq if member is None else (member | eq)
+            mask = mask & member
+        if role == "left":
+            left = vals
+        elif role == "right":
+            right = vals
+        elif role == "both":
+            left = right = vals
+    prod = left * right
+    if prod.dtype != jnp.float32:
+        prod = prod.astype(jnp.float32)
+    return jnp.sum(jnp.where(mask, prod, jnp.float32(0)))
+
+
+def apply_predicates(mask, vals, op):
+    """Interval/set predicate of one cfg operand over decoded values —
+    the same compares ``mask_and_reduce`` folds in, exposed for the
+    stage-A mask build (host-side numpy arrays work too: the expressions
+    are pure comparisons, exact in any backend)."""
+    _, _, vdtype, lo, hi, lo_incl, hi_incl, in_set, _ = op
+    cast = np.dtype(vdtype).type
+    if lo is not None:
+        mask = mask & (vals >= cast(lo) if lo_incl else vals > cast(lo))
+    if hi is not None:
+        mask = mask & (vals <= cast(hi) if hi_incl else vals < cast(hi))
+    if in_set is not None:
+        member = None
+        for allowed in in_set:
+            eq = vals == cast(allowed)
+            member = eq if member is None else (member | eq)
+        mask = mask & member
+    return mask
+
+
+def _kernel(*refs, cfg):
+    """refs = mask_ref, then per operand: words_ref [, dict_ref], out_ref.
+
+    Blocks carry B pages: mask (B, P), dict words (B, W), plain words
+    (B, P), out (B, 1).  The per-page arithmetic is ``mask_and_reduce``
+    vmapped over the page axis — bitwise identical to applying it to
+    each (1, P) page block (XLA's row-wise reduce accumulates in the
+    same order as the 1D reduce; pinned by tests/test_fused.py)."""
+    mask_ref, out_ref = refs[0], refs[-1]
+    mask = mask_ref[...] != 0                       # (B, P)
+    vals_list = []
+    i = 1
+    for op in cfg:
+        kind, width, vdtype = op[0], op[1], op[2]
+        words = refs[i][...]
+        i += 1
+        if kind == "dict":
+            codes = jax.vmap(
+                lambda w, width=width: unpack_words_static(w, width)
+            )(words).astype(jnp.int32)
+            d = refs[i][:]
+            i += 1
+            codes = jnp.clip(codes, 0, d.shape[0] - 1)
+            vals_list.append(d[codes])
+        else:
+            target = jnp.float32 if vdtype == "float32" else jnp.int32
+            vals_list.append(jax.lax.bitcast_convert_type(words, target))
+    out_ref[...] = jax.vmap(
+        lambda m, *vs: mask_and_reduce(m, list(vs), cfg)
+    )(mask, *vals_list)[:, None]
+
+
+def fused_page_agg(mask, arrays, *, cfg, interpret: bool | None = None):
+    """One launch: decode + filter + aggregate every page of a row group.
+
+    mask: (n_pages, P) uint8 — stage-A predicate AND validity per lane.
+    arrays: flat operand inputs matching ``cfg`` in order — for a 'dict'
+    operand a (n_pages, W) uint32 words array then its (D,) dictionary;
+    for a 'plain' operand a (n_pages, P) uint32 words array.  For dict
+    operands W must be (P // 32) * width.
+
+    Returns (n_pages,) float32 canonical per-page partials.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    count_launch()
+    return _fused_page_agg_jit(mask, *arrays, cfg=cfg, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
+def _fused_page_agg_jit(mask, *arrays, cfg, interpret: bool):
+    n_pages, p = mask.shape
+    # Interpret mode pays a fixed emulation cost *per grid step*, so
+    # under interpretation the whole row group rides in one
+    # (n_pages, P) block; on a real accelerator the per-page (1, P)
+    # grid keeps each block VMEM-sized.  Same kernel body either way.
+    b = n_pages if interpret else 1
+    in_specs = [pl.BlockSpec((b, p), lambda i: (i, 0))]
+    i = 0
+    for op in cfg:
+        w = arrays[i].shape[1]
+        in_specs.append(pl.BlockSpec((b, w), lambda i: (i, 0)))
+        i += 1
+        if op[0] == "dict":
+            d = arrays[i].shape[0]
+            in_specs.append(pl.BlockSpec((d,), lambda i: (0,)))
+            i += 1
+    out = pl.pallas_call(
+        functools.partial(_kernel, cfg=cfg),
+        grid=(n_pages // b,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((b, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pages, 1), jnp.float32),
+        interpret=interpret,
+    )(mask, *arrays)
+    return out[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def reference_page_reduce(mask_row, *vals_rows, cfg):
+    """The unfused twin of one fused grid step: identical expression over
+    one (1, P) page block of already-materialized values.  Used by the
+    reference execution mode and the host decode backend, so every layer
+    produces the same canonical bits as the pallas kernel."""
+    return mask_and_reduce(mask_row[0, :] != 0,
+                           [v[0, :] for v in vals_rows], cfg)

@@ -1,8 +1,10 @@
 """CI chaos gate: the scan path under deterministic fault injection.
 
 Runs the Q6/Q12 file scans and the dataset smoke shape twice — once
-clean, once under a fixed transient-only ``FaultPlan`` — and fails
-unless:
+clean, once under a fixed transient-only ``FaultPlan`` — and repeats
+the sweep over the fused late-materialization path (DESIGN.md §7),
+where checksums must trip *before* corrupt bytes can reach a fused
+kernel.  Fails unless:
 
   * every faulted run's result is **bit-identical** to its clean run
     (transient faults must heal invisibly),
@@ -24,6 +26,7 @@ from __future__ import annotations
 
 import argparse
 import os
+import struct
 import sys
 import tempfile
 import time
@@ -132,6 +135,56 @@ def main() -> int:
         print(f"[chaos] q6/q12/dataset bit-identical under seeded faults "
               f"(retries={total_retries}, "
               f"quarantined={repd.fragments_quarantined})")
+
+        # -- fused path under the same seeded fault sweep (§7) ---------
+        # Checksums are verified *before* any payload feeds a fused
+        # kernel (_fused_payload_task), so an injected bit flip raises
+        # ChecksumError, heals under retry, and the fused result stays
+        # bit-identical to the clean fused run.
+        q6f_clean, _ = q6(open_l(), overlapped=True, decode_workers=2,
+                          fused=True)
+        q12f_clean, _, _ = q12(open_l(), open_o(), decode_workers=2,
+                               fused=True)
+        dsf_clean, _ = q6(ds, prune=True, window=4, fused=True,
+                          open_opts={"decode_backend": "host"})
+
+        fused_retries = 0
+        _clear_decoded_caches()
+        q6f_chaos, rep6f = q6(open_l(_fault_plan(args.seed + 4)),
+                              overlapped=True, decode_workers=2,
+                              fused=True)
+        fused_retries += rep6f.metrics.retries
+        crc_hits = rep6f.metrics.checksum_failures
+        _clear_decoded_caches()
+        q12f_chaos, repbf, reppf = q12(open_l(_fault_plan(args.seed + 5)),
+                                       open_o(_fault_plan(args.seed + 6)),
+                                       decode_workers=2, fused=True)
+        fused_retries += repbf.metrics.retries + reppf.metrics.retries
+        _clear_decoded_caches()
+        dsf_chaos, repdf = q6(
+            ds, prune=True, window=4, fused=True,
+            open_opts={"decode_backend": "host",
+                       "fault_plan": _fault_plan(args.seed + 7)})
+        fused_retries += repdf.retries
+
+        if struct.pack("<d", q6f_chaos) != struct.pack("<d", q6f_clean):
+            failures.append(f"fused q6 under chaos diverged: "
+                            f"{q6f_chaos!r} != {q6f_clean!r}")
+        if q12f_chaos != q12f_clean:
+            failures.append(f"fused q12 under chaos diverged: "
+                            f"{q12f_chaos!r} != {q12f_clean!r}")
+        if dsf_chaos != dsf_clean:
+            failures.append(f"fused dataset q6 under chaos diverged: "
+                            f"{dsf_chaos!r} != {dsf_clean!r}")
+        if fused_retries <= 0:
+            failures.append("fused chaos legs recovered nothing "
+                            "(retries == 0)")
+        if repdf.fragments_quarantined:
+            failures.append(f"fused transient faults quarantined "
+                            f"{repdf.fragments_quarantined} fragment(s)")
+        print(f"[chaos] fused q6/q12/dataset bit-identical under seeded "
+              f"faults (retries={fused_retries}, crc_failures={crc_hits}, "
+              f"quarantined={repdf.fragments_quarantined})")
 
         # -- CRC verification overhead gate ----------------------------
         def best_wall() -> float:

@@ -1,0 +1,125 @@
+"""CI bit-identity gate: fused (late materialization) vs unfused.
+
+Builds a tiny TPC-H snapshot and diffs the fused execution against the
+reference twin — the unfused path that fully materializes every column
+and evaluates the *same* canonical per-page reduce (DESIGN.md §7) — on
+both decode backends:
+
+  * Q6: the float64 totals must match **bit for bit** (``struct.pack``
+    hex compare, not a tolerance), on pallas and host backends.
+  * Q12: the per-shipmode count dicts must be exactly equal across
+    fused / reference / legacy-unfused, and match the numpy oracle.
+  * Launch economy: the fused Q6 scan must issue strictly fewer kernel
+    launches than the unfused scan (the whole point of fusing).
+  * Both results must agree with the row-at-a-time numpy oracle within
+    float tolerance (bit-identity is *within* the canonical tiling;
+    the legacy unfused consume tiles differently by design).
+
+Exit status is nonzero on any mismatch, with the differing bits printed.
+
+Usage:
+    PYTHONPATH=src JAX_PLATFORMS=cpu python tools/check_fused_identity.py
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import struct
+import sys
+import tempfile
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sf", type=float,
+                    default=float(os.environ.get("FUSED_SF", "0.004")))
+    ap.add_argument("--seed", type=int, default=21)
+    args = ap.parse_args()
+
+    import numpy as np
+
+    from repro.core.config import ACCELERATOR_OPTIMIZED
+    from repro.core.query import (Q12_LINEITEM_COLUMNS, Q12_ORDERS_COLUMNS,
+                                  Q6_COLUMNS, q6, q6_reference, q12,
+                                  q12_reference)
+    from repro.core.scan import open_scanner
+    from repro.data import tpch
+    from repro.kernels.common import kernel_launch_count
+
+    failures: list[str] = []
+    cfg = ACCELERATOR_OPTIMIZED.replace(rows_per_rg=8_000,
+                                        target_pages_per_chunk=10)
+
+    with tempfile.TemporaryDirectory(prefix="fused_id_") as root:
+        metas = tpch.write_tpch(root, sf=args.sf, config=cfg,
+                                seed=args.seed)
+        lpath = os.path.join(root, "lineitem.tab")
+        opath = os.path.join(root, "orders.tab")
+        line, orders = tpch.generate_tables(sf=args.sf, seed=args.seed)
+        n_rg = len(metas["lineitem"].row_groups)
+
+        oracle6 = q6_reference(
+            {c: np.asarray(line[c]) for c in Q6_COLUMNS})
+
+        for backend in ("pallas", "host"):
+            def scan6(fused, backend=backend):
+                sc = open_scanner(lpath, Q6_COLUMNS,
+                                  decode_backend=backend)
+                n0 = kernel_launch_count()
+                got, _ = q6(sc, fused=fused)
+                return got, kernel_launch_count() - n0
+
+            got_f, lf = scan6(True)
+            got_r, lr = scan6("reference")
+            got_u, lu = scan6(False)
+            bits_f = struct.pack("<d", got_f).hex()
+            bits_r = struct.pack("<d", got_r).hex()
+            if bits_f != bits_r:
+                failures.append(
+                    f"[{backend}] q6 fused vs reference NOT bit-identical: "
+                    f"{bits_f} != {bits_r} ({got_f!r} vs {got_r!r})")
+            for name, val in (("fused", got_f), ("unfused", got_u)):
+                if abs(val - oracle6) > 1e-4 * max(1.0, abs(oracle6)):
+                    failures.append(f"[{backend}] q6 {name} vs oracle: "
+                                    f"{val!r} != {oracle6!r}")
+            if backend == "pallas" and lf >= lu:
+                failures.append(
+                    f"[pallas] fused q6 did not save launches: "
+                    f"fused={lf} >= unfused={lu} over {n_rg} row groups")
+            print(f"[fused-id] [{backend}] q6 bits fused={bits_f} "
+                  f"ref={bits_r} launches fused={lf} ref={lr} "
+                  f"unfused={lu} n_rg={n_rg}")
+
+        oracle12 = q12_reference(
+            {c: np.asarray(line[c]) for c in Q12_LINEITEM_COLUMNS},
+            {c: np.asarray(orders[c]) for c in Q12_ORDERS_COLUMNS})
+        for backend in ("pallas", "host"):
+            def run12(fused, backend=backend):
+                lsc = open_scanner(lpath, Q12_LINEITEM_COLUMNS,
+                                   decode_backend=backend)
+                osc = open_scanner(opath, Q12_ORDERS_COLUMNS,
+                                   decode_backend=backend)
+                got, _, _ = q12(lsc, osc, fused=fused)
+                return got
+            got_f, got_r, got_u = run12(True), run12("reference"), run12(False)
+            if not (got_f == got_r == got_u == oracle12):
+                failures.append(
+                    f"[{backend}] q12 mismatch: fused={got_f} ref={got_r} "
+                    f"unfused={got_u} oracle={oracle12}")
+            print(f"[fused-id] [{backend}] q12 fused == reference == "
+                  f"unfused == oracle: "
+                  f"{got_f == got_r == got_u == oracle12}")
+
+    if failures:
+        print("[fused-id] FAIL")
+        for f in failures:
+            print(" ", f)
+        return 1
+    print("[fused-id] ok — fused and unfused agree bit for bit, with "
+          "strictly fewer launches on the fused path")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -16,7 +16,10 @@ economy regresses:
     ``io_requests=``, ``groups=``) — these are deterministic, so the gate
     on them is exact (an increase of even one launch fails);
   * **coverage**: a row present in the baseline but missing from the
-    current run (a silently-dropped measurement reads as a pass otherwise).
+    current run (a silently-dropped measurement reads as a pass otherwise);
+  * **fused launch economy**: inside the current run itself, the fused
+    late-materialization Q6 row must carry strictly fewer ``launches=``
+    than its unfused twin (``FUSED_PAIRS`` — deterministic, gated exact).
 
 Writes a markdown comparison table (``--report``) for upload as a CI
 artifact and exits non-zero on any regression.
@@ -85,6 +88,41 @@ def parse_csv(path: str) -> "dict[str, tuple]":
 
 
 REFERENCE_ROW = "cpu_reference"
+
+#: cross-row invariants inside ONE current run (not vs the baseline):
+#: the fused late-materialization row must launch strictly fewer kernels
+#: than its unfused twin — that economy is the whole point of fusing
+#: (DESIGN.md §7), and it is deterministic, so the gate is exact.
+FUSED_PAIRS = (
+    ("fig5_q6_optimized_pallas_fused", "fig5_q6_optimized_pallas_unfused"),
+)
+
+
+def fused_launch_rules(rows: dict) -> list[str]:
+    """Regressions from the fused-vs-unfused cross-row launch invariant.
+    Pairs where neither row is present are skipped (other CSVs); a
+    half-present pair is itself a failure — a silently dropped fused row
+    would otherwise disable the gate."""
+    regs: list[str] = []
+    for fused_name, unfused_name in FUSED_PAIRS:
+        have_f, have_u = fused_name in rows, unfused_name in rows
+        if not have_f and not have_u:
+            continue
+        if not (have_f and have_u):
+            missing = unfused_name if have_f else fused_name
+            regs.append(f"{missing}: missing from current run "
+                        "(fused/unfused rows gate as a pair)")
+            continue
+        lf = rows[fused_name][1].get("launches")
+        lu = rows[unfused_name][1].get("launches")
+        if lf is None or lu is None:
+            regs.append(f"{fused_name}: fused/unfused rows must both "
+                        "carry a launches= counter")
+        elif lf >= lu:
+            regs.append(f"{fused_name}: launches={lf:g} not strictly "
+                        f"below unfused ({lu:g}) — the fused path must "
+                        "save launches")
+    return regs
 
 
 def speed_scale(baseline: dict, current: dict) -> float:
@@ -217,8 +255,26 @@ def selftest() -> int:
     for r in bad_regs:
         print(" ", r)
     assert not ok_regs and len(bad_regs) == 2
+    # fused cross-row invariant: strictly fewer launches than unfused
+    pair_ok = {"fig5_q6_optimized_pallas_fused": (500.0, {"launches": 8.0}),
+               "fig5_q6_optimized_pallas_unfused":
+                   (900.0, {"launches": 12.0})}
+    pair_bad = {"fig5_q6_optimized_pallas_fused":
+                    (500.0, {"launches": 12.0}),
+                "fig5_q6_optimized_pallas_unfused":
+                    (900.0, {"launches": 12.0})}
+    pair_half = {"fig5_q6_optimized_pallas_fused":
+                     (500.0, {"launches": 8.0})}
+    assert not fused_launch_rules(pair_ok)
+    assert not fused_launch_rules({})          # other CSVs: no pair, no gate
+    bad_pair_regs = fused_launch_rules(pair_bad)
+    half_regs = fused_launch_rules(pair_half)
+    print("fused pair (launches not saved) ->")
+    for r in bad_pair_regs + half_regs:
+        print(" ", r)
+    assert len(bad_pair_regs) == 1 and len(half_regs) == 1
     print("selftest ok: gate passes clean runs and trips on injected "
-          "wall/counter regressions")
+          "wall/counter regressions and fused launch-economy violations")
     return 0
 
 
@@ -275,6 +331,7 @@ def main() -> int:
                   f"{scale:.3f} (cpu_reference rows)")
         regs, table = compare(base_rows, cur_rows, args.threshold,
                               args.min_us, scale)
+        regs.extend(fused_launch_rules(cur_rows))
         all_regressions.extend(f"{fname}: {r}" for r in regs)
         file_tables[fname] = table
     if args.report:
