@@ -34,6 +34,7 @@ def main() -> None:
         ("bench_scan_plan", "scan_plan"),   # DecodePlan launch/IO economy
         ("bench_concurrent", "concurrent"),  # ScanService N-scan sharing
         ("bench_dataset", "dataset"),       # dataset pruning + sharding
+        ("bench_distributed", "distributed"),  # devices × storage backends
         ("bench_rewriter", "sec5"),         # §5: rewriter overhead
         ("bench_kernels", "kernels"),       # §3: per-encoding decode bw
         ("roofline", "roofline"),           # §Roofline from dry-run JSONs
@@ -41,7 +42,8 @@ def main() -> None:
     if args.smoke:
         suites = [s for s in suites
                   if s[0] in ("bench_queries", "bench_scan_plan",
-                              "bench_concurrent", "bench_dataset")]
+                              "bench_concurrent", "bench_dataset",
+                              "bench_distributed")]
     if args.only:
         keep = set(args.only.split(","))
         suites = [s for s in suites if s[0] in keep]

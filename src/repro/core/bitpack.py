@@ -8,7 +8,7 @@ This is the FastLanes-style interleaved ("bit-transposed") order rather than
 Parquet's sequential little-endian order: unpacking becomes ``w`` independent
 shift/mask/or steps over full vector lanes, which maps directly onto the TPU
 VPU (and is the layout the Pallas kernels consume).  The choice of bit order
-inside an encoding is writer-private in our container (DESIGN.md §8.3).
+inside an encoding is writer-private in our container (DESIGN.md §9.2).
 
 Widths up to 64 are supported on the host path (int64 deltas); the device
 kernels consume widths ≤ 32.

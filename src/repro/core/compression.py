@@ -4,7 +4,7 @@ Codecs:
   none     identity
   gzip     zlib/DEFLATE — the paper's host-ecosystem codec.  LZ77
            back-references are byte-serial and have no TPU analogue
-           (DESIGN.md §8.2), so gzip pages are decompressed on the host
+           (DESIGN.md §9.1), so gzip pages are decompressed on the host
            before device upload — exactly the cost Insight 4 avoids paying
            when the codec does not actually shrink the chunk.
   cascade  TPU-native word-level codec (beyond-paper): uint32-word RLE with

@@ -81,15 +81,33 @@ class _MetricsProbe:
         self.scanner = scanner
         self.launches0 = kernel_launch_count()
         self.requests0 = scanner.storage.stats.requests
+        self.lat0 = len(scanner.storage.stats.latencies)
         self.plan_s0 = (scanner.planner.plan_seconds
                         if scanner.planner else 0.0)
         fc = getattr(scanner, "fault_counters", None)
         self.faults0 = fc() if fc is not None else None
+        pf = getattr(scanner.storage, "prefetch_stats", None)
+        self.pf0 = dataclasses.replace(pf) if pf is not None else None
 
     def finish(self, m: ScanMetrics) -> None:
         m.n_kernel_launches = kernel_launch_count() - self.launches0
         m.n_io_requests = (self.scanner.storage.stats.requests
                            - self.requests0)
+        lats = self.scanner.storage.stats.latencies[self.lat0:]
+        if lats:
+            import numpy as _np
+            m.io_p50_us = float(_np.percentile(lats, 50)) * 1e6
+            m.io_p95_us = float(_np.percentile(lats, 95)) * 1e6
+        if self.pf0 is not None:
+            pf = self.scanner.storage.prefetch_stats
+            m.prefetch_hits = pf.hits - self.pf0.hits
+            m.prefetch_misses = pf.misses - self.pf0.misses
+            m.prefetch_hidden_seconds = (pf.hidden_seconds
+                                         - self.pf0.hidden_seconds)
+            m.prefetch_stall_seconds = (pf.stall_seconds
+                                        - self.pf0.stall_seconds)
+        from repro.core.scheduler import decode_affinity_mode
+        m.decode_affinity = decode_affinity_mode()
         if self.scanner.planner is not None:
             m.plan_seconds = (self.scanner.planner.plan_seconds
                               - self.plan_s0)

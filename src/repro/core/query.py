@@ -139,7 +139,7 @@ def q6(scanner: Scanner, overlapped: bool = True, use_kernel: bool = False,
        prune: bool = True, prepare_plan: bool = False, depth: int = 2,
        decode_workers: int | None = None, service=None,
        window: int = 4, open_opts: dict | None = None,
-       fused: "bool | str | None" = None
+       fused: "bool | str | None" = None, devices=None
        ) -> tuple[float, RunReport]:
     """Run Q6 over the scanner's stream — or over a whole **Dataset**
     (file-level pruning + sharded fragment scans; returns a
@@ -156,7 +156,12 @@ def q6(scanner: Scanner, overlapped: bool = True, use_kernel: bool = False,
     cached on first scan).  ``fused`` selects late materialization
     (``True``/``"reference"``; ``None`` defers to ``REPRO_FUSED``):
     the decode plan stages predicate columns first and runs the
-    filter+aggregate inside the scan (core/fused.py)."""
+    filter+aggregate inside the scan (core/fused.py).  ``devices``
+    (dataset runs only) routes fragments through the multi-device
+    executor (``run_distributed_scan``): None keeps the windowed
+    single-service path; an int or device list shards fragments across
+    devices with the deterministic tree reduce — bit-identical across
+    device counts."""
     fused = _resolve_fused(fused)
     spec = q6_fused_spec("reference" if fused == "reference"
                          else "fused") if fused else None
@@ -173,6 +178,13 @@ def q6(scanner: Scanner, overlapped: bool = True, use_kernel: bool = False,
             predicate_stats=q6_rg_stats_predicate if prune else None)
         if spec is not None:
             open_opts = dict(open_opts or {}, fused_spec=spec)
+        if devices is not None:
+            from repro.dataset.executor import run_distributed_scan
+            acc, report = run_distributed_scan(
+                plan, consume, lambda a, b: a + b,
+                devices=devices, depth=depth,
+                decode_workers=decode_workers, open_opts=open_opts)
+            return (acc or 0.0), report
         acc, report = run_dataset_scan(
             plan, consume, lambda a, b: a + b,
             window=window, depth=depth, decode_workers=decode_workers,
@@ -276,7 +288,7 @@ def q12(lineitem_scanner: Scanner, orders_scanner: Scanner,
         overlapped: bool = True, prepare_plan: bool = False,
         depth: int = 2, decode_workers: int | None = None,
         service=None, window: int = 4, open_opts: dict | None = None,
-        fused: "bool | str | None" = None
+        fused: "bool | str | None" = None, devices=None
         ) -> tuple[dict[str, int], RunReport, RunReport]:
     """Q12 over scanners — or over Datasets (either side independently):
     the build side streams every orders fragment, the probe side shards
@@ -285,7 +297,9 @@ def q12(lineitem_scanner: Scanner, orders_scanner: Scanner,
     (``overlapped=False`` raises) and skip ``prepare_plan``.  ``fused``
     (``True``/``"reference"``/``None``→``REPRO_FUSED``) runs the probe
     side with late materialization: ``l_orderkey`` only materializes for
-    row groups with surviving rows (core/fused.py)."""
+    row groups with surviving rows (core/fused.py).  ``devices`` routes
+    dataset sides through ``run_distributed_scan`` (multi-device
+    sharding + deterministic tree reduce)."""
     if not overlapped and (_is_dataset(lineitem_scanner)
                            or _is_dataset(orders_scanner)):
         raise ValueError("dataset runs are always sharded/overlapped; "
@@ -320,12 +334,21 @@ def q12(lineitem_scanner: Scanner, orders_scanner: Scanner,
         from repro.dataset.planner import plan_dataset_scan
         oplan = plan_dataset_scan(orders_scanner,
                                   columns=list(Q12_ORDERS_COLUMNS))
-        (keys, prio), build_report = run_dataset_scan(
-            oplan, build_consume,
-            lambda a, b: (jnp.concatenate([a[0], b[0]]),
-                          jnp.concatenate([a[1], b[1]])),
-            window=window, depth=depth, decode_workers=decode_workers,
-            service=service, open_opts=open_opts)
+        build_combine = (lambda a, b: (jnp.concatenate([a[0], b[0]]),
+                                       jnp.concatenate([a[1], b[1]])))
+        if devices is not None:
+            # concatenation is exactly associative, so the tree pairing
+            # yields the same build table the left fold would
+            from repro.dataset.executor import run_distributed_scan
+            (keys, prio), build_report = run_distributed_scan(
+                oplan, build_consume, build_combine,
+                devices=devices, depth=depth,
+                decode_workers=decode_workers, open_opts=open_opts)
+        else:
+            (keys, prio), build_report = run_dataset_scan(
+                oplan, build_consume, build_combine,
+                window=window, depth=depth, decode_workers=decode_workers,
+                service=service, open_opts=open_opts)
     else:
         (keys, prio), build_report = runner(orders_scanner, build_consume)
     order = jnp.argsort(keys)
@@ -369,10 +392,17 @@ def q12(lineitem_scanner: Scanner, orders_scanner: Scanner,
         l_open_opts = open_opts
         if lspec is not None:
             l_open_opts = dict(open_opts or {}, fused_spec=lspec)
-        counts, probe_report = run_dataset_scan(
-            lplan, probe_consume, lambda a, b: a + b,
-            window=window, depth=depth, decode_workers=decode_workers,
-            service=service, open_opts=l_open_opts)
+        if devices is not None:
+            from repro.dataset.executor import run_distributed_scan
+            counts, probe_report = run_distributed_scan(
+                lplan, probe_consume, lambda a, b: a + b,
+                devices=devices, depth=depth,
+                decode_workers=decode_workers, open_opts=l_open_opts)
+        else:
+            counts, probe_report = run_dataset_scan(
+                lplan, probe_consume, lambda a, b: a + b,
+                window=window, depth=depth, decode_workers=decode_workers,
+                service=service, open_opts=l_open_opts)
     else:
         counts, probe_report = runner(lineitem_scanner, probe_consume)
     counts = np.asarray(counts)

@@ -38,7 +38,9 @@ from repro.core.faults import (FaultPlan, InjectedDecodeError, is_retryable,
 from repro.core.metadata import ChunkMeta
 from repro.core.reader import TabFileReader, read_footer
 from repro.core.storage import (DEFAULT_COALESCE_GAP, DEFAULT_RETRY_POLICY,
-                                RealStorage, RetryingStorage, RetryPolicy,
+                                PrefetchingStorage, RealStorage,
+                                RetryingStorage, RetryPolicy,
+                                backend_io_defaults, coalesce_ranges,
                                 fetch_coalesced, open_storage)
 from repro.kernels import ops
 from repro.kernels.common import kernel_launch_count
@@ -87,6 +89,17 @@ class ScanMetrics:
     # informational: the gzip-inflate backend active for this process
     # (isal / zlib-ng / zlib — core/compression.py)
     inflate_backend: str = inflate_backend()
+    # per-backend observability (DESIGN.md §8): prefetch economics when a
+    # PrefetchingStorage wraps the backend, per-request latency
+    # percentiles (modeled on sim/object, measured on real), and the
+    # decode-worker pinning in effect (REPRO_DECODE_AFFINITY)
+    prefetch_hits: int = 0
+    prefetch_misses: int = 0
+    prefetch_hidden_seconds: float = 0.0
+    prefetch_stall_seconds: float = 0.0
+    io_p50_us: float = 0.0
+    io_p95_us: float = 0.0
+    decode_affinity: str = "off"
 
     @property
     def blocking_seconds(self) -> float:
@@ -293,6 +306,25 @@ class Scanner:
             out.append((name, chunk, chunk.byte_range))
         return out
 
+    def prefetch_rgs(self, rg_indices: Sequence[int]) -> int:
+        """Issue background reads for the given row groups' coalesced
+        ranges (no-op unless the storage stack has a PrefetchingStorage).
+        The merged ranges are derived with the scanner's own coalesce gap,
+        so the later demand ``fetch_rg`` asks for byte-identical requests
+        and always hits the prefetch buffer."""
+        pf = getattr(self.storage, "prefetch", None)
+        if pf is None:
+            return 0
+        merged_all: list[tuple[int, int]] = []
+        for i in rg_indices:
+            ranges = [r for _, _, r in self.rg_requests(i)]
+            if self.coalesce_gap <= 0:
+                merged_all.extend(ranges)
+            else:
+                merged, _ = coalesce_ranges(ranges, self.coalesce_gap)
+                merged_all.extend(merged)
+        return pf(merged_all)
+
     # -- stages ----------------------------------------------------------------
 
     def fetch_rg(self, rg_index: int) -> tuple[dict[str, bytes], float]:
@@ -426,13 +458,22 @@ class Scanner:
 
 def open_scanner(path: str, columns=None, backend: str = "real",
                  n_lanes: int = 1, decode_backend: str = "pallas",
-                 lane_bandwidth: float = 7e9, latency: float = 20e-6,
+                 lane_bandwidth: float | None = None,
+                 latency: float | None = None,
                  use_plan: bool = True,
-                 coalesce_gap: int = DEFAULT_COALESCE_GAP,
+                 coalesce_gap: int | None = None,
                  retry: RetryPolicy | None = None,
                  fault_plan: FaultPlan | None = None,
-                 fused_spec=None) -> Scanner:
+                 fused_spec=None, prefetch: bool = False,
+                 prefetch_threads: int = 2) -> Scanner:
+    # None means "the backend's profile default": NVMe numbers and 64 KiB
+    # gaps for real/sim, the remote profile (ms latency, multi-MiB gap)
+    # for object — callers that pass explicit values still win
+    if coalesce_gap is None:
+        coalesce_gap = backend_io_defaults(backend)[2]
     storage = open_storage(path, backend, n_lanes, lane_bandwidth, latency)
+    if prefetch:
+        storage = PrefetchingStorage(storage, threads=prefetch_threads)
     return Scanner(path, columns, storage, decode_backend,
                    use_plan=use_plan, coalesce_gap=coalesce_gap,
                    retry=retry, fault_plan=fault_plan,

@@ -73,6 +73,67 @@ class ScanCancelled(RuntimeError):
     """Raised by a ScanHandle whose scan was cancelled mid-stream."""
 
 
+# ---------------------------------------------------------------------------
+# decode-worker CPU affinity (REPRO_DECODE_AFFINITY — carried ROADMAP lever)
+# ---------------------------------------------------------------------------
+
+_AFFINITY_ENV = "REPRO_DECODE_AFFINITY"
+#: spec → outcome of the last pin attempt ("pinned" / "unsupported")
+_affinity_status: dict[str, str] = {}
+
+
+def _affinity_cpus(spec: str) -> list[int]:
+    """CPUs named by an affinity spec: ``auto`` → every CPU this process
+    may run on (workers stripe across them); else a comma list with
+    ``lo-hi`` ranges (``0,2`` / ``0-3``), filtered to the allowed set."""
+    avail = sorted(os.sched_getaffinity(0))
+    if spec.lower() == "auto":
+        return avail
+    cpus: list[int] = []
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        if "-" in part:
+            lo, hi = part.split("-", 1)
+            cpus.extend(range(int(lo), int(hi) + 1))
+        else:
+            cpus.append(int(part))
+    allowed = set(avail)
+    return [c for c in cpus if c in allowed]
+
+
+def _apply_affinity(worker_idx: int) -> None:
+    """Pin the calling decode worker to one CPU from the
+    REPRO_DECODE_AFFINITY set (worker_idx stripes across it).  A no-op
+    when the env var is unset/off, and *silently degrades* on platforms
+    without sched_setaffinity or with an unparsable spec — pinning is an
+    optimization, never a correctness requirement."""
+    spec = os.environ.get(_AFFINITY_ENV, "").strip()
+    if not spec or spec.lower() in ("0", "off", "none"):
+        return
+    try:
+        cpus = _affinity_cpus(spec)
+        if not cpus:
+            raise ValueError(f"empty affinity set: {spec!r}")
+        # pid 0 = the calling thread on Linux: each worker pins itself
+        os.sched_setaffinity(0, {cpus[worker_idx % len(cpus)]})
+        _affinity_status[spec] = "pinned"
+    except (AttributeError, OSError, ValueError):
+        _affinity_status[spec] = "unsupported"
+
+
+def decode_affinity_mode() -> str:
+    """The pinning in effect, for ScanMetrics: ``off`` when unset;
+    ``<spec>:pinned`` once a worker pinned successfully;
+    ``<spec>:unsupported`` when the platform refused;
+    ``<spec>:configured`` when set but no pool worker has started yet."""
+    spec = os.environ.get(_AFFINITY_ENV, "").strip()
+    if not spec or spec.lower() in ("0", "off", "none"):
+        return "off"
+    return f"{spec}:{_affinity_status.get(spec, 'configured')}"
+
+
 def default_max_workers() -> int:
     """Adaptive-pool ceiling: leave one core for consume/fetch.  Override
     with REPRO_SCAN_MAX_WORKERS."""
@@ -338,7 +399,7 @@ class ScanService:
 
     def __init__(self, workers: int | None = None, adaptive: bool = True,
                  max_workers: int | None = None, resize_every: int = 8,
-                 fetch_threads: int = 1):
+                 fetch_threads: int = 1, device=None):
         self._lock = threading.RLock()
         self._work_cv = threading.Condition(self._lock)
         self._fetch_cv = threading.Condition(self._lock)
@@ -353,6 +414,10 @@ class ScanService:
         # thread (the default); >1 overlaps blocking reads of concurrent
         # scans on high-latency real backends (network FS / many files)
         self.fetch_threads = max(1, fetch_threads)
+        # multi-device sharding (dataset/executor.py): a per-device
+        # service runs its decode workers under jax.default_device(device)
+        # so launches land device-resident; None keeps jax's default
+        self.device = device
         # _policy is what the adaptive sizer asks for; the effective target
         # additionally honors active scans' explicit workers hints
         self._policy = max(1, workers) if workers else 1
@@ -435,6 +500,7 @@ class ScanService:
                 self._shrink -= 1
                 continue
             t = threading.Thread(target=self._worker_loop, daemon=True,
+                                 args=(len(self._threads),),
                                  name=f"scan-service-{len(self._threads)}")
             self._n_workers += 1
             self._threads.append(t)
@@ -593,7 +659,16 @@ class ScanService:
                 return scan, item
         return None
 
-    def _worker_loop(self) -> None:
+    def _worker_loop(self, worker_idx: int = 0) -> None:
+        _apply_affinity(worker_idx)
+        if self.device is not None:
+            import jax
+            with jax.default_device(self.device):
+                self._worker_loop_inner()
+        else:
+            self._worker_loop_inner()
+
+    def _worker_loop_inner(self) -> None:
         prefer: _ScanState | None = None
         while True:
             with self._lock:

@@ -20,13 +20,14 @@ from repro.dataset.catalog import (Dataset, FragmentInfo, Partitioning,
                                    write_dataset)
 from repro.dataset.compact import (CompactionPlan, CompactionReport,
                                    compact_dataset, plan_compaction)
-from repro.dataset.executor import DatasetRunReport, run_dataset_scan
+from repro.dataset.executor import (DatasetRunReport, run_dataset_scan,
+                                    run_distributed_scan)
 from repro.dataset.planner import DatasetScanPlan, plan_dataset_scan
 
 __all__ = [
     "Dataset", "FragmentInfo", "Partitioning", "write_dataset",
     "DatasetScanPlan", "plan_dataset_scan",
-    "DatasetRunReport", "run_dataset_scan",
+    "DatasetRunReport", "run_dataset_scan", "run_distributed_scan",
     "CompactionPlan", "CompactionReport", "plan_compaction",
     "compact_dataset",
 ]

@@ -35,7 +35,6 @@ from repro.core.config import FileConfig
 from repro.core.metadata import FileMeta
 from repro.core.reader import read_footer
 from repro.core.scan import Scanner, open_scanner
-from repro.core.storage import DEFAULT_COALESCE_GAP
 from repro.core.table import StringColumn, Table
 from repro.core.writer import write_table
 
@@ -361,11 +360,13 @@ class Dataset:
                       columns: list[str] | None = None,
                       backend: str = "real", n_lanes: int = 1,
                       decode_backend: str = "pallas",
-                      lane_bandwidth: float = 7e9, latency: float = 20e-6,
+                      lane_bandwidth: float | None = None,
+                      latency: float | None = None,
                       use_plan: bool = True,
-                      coalesce_gap: int = DEFAULT_COALESCE_GAP,
+                      coalesce_gap: int | None = None,
                       retry=None, fault_plan=None,
-                      fused_spec=None) -> Scanner:
+                      fused_spec=None, prefetch: bool = False,
+                      prefetch_threads: int = 2) -> Scanner:
         if isinstance(frag, int):
             frag = self.fragments[frag]
         return open_scanner(self.fragment_path(frag), columns=columns,
@@ -374,7 +375,8 @@ class Dataset:
                             lane_bandwidth=lane_bandwidth, latency=latency,
                             use_plan=use_plan, coalesce_gap=coalesce_gap,
                             retry=retry, fault_plan=fault_plan,
-                            fused_spec=fused_spec)
+                            fused_spec=fused_spec, prefetch=prefetch,
+                            prefetch_threads=prefetch_threads)
 
 
 # ---------------------------------------------------------------------------

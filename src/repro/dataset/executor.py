@@ -92,6 +92,23 @@ class DatasetRunReport:
     checksum_failures: int = 0
     timeouts: int = 0
     quarantined: list[dict] = dataclasses.field(default_factory=list)
+    # distributed execution (run_distributed_scan, DESIGN.md §8):
+    # fragments scanned per device (plan-order shards + steals) and how
+    # many fragments finished on a device other than their home shard
+    devices: int = 1
+    device_names: list[str] = dataclasses.field(default_factory=list)
+    device_fragments: list[int] = dataclasses.field(default_factory=list)
+    stolen_fragments: int = 0
+    # per-backend observability (never gated): prefetch economics summed
+    # over fragments, request-weighted latency percentiles, and stored
+    # bytes split by storage backend kind
+    prefetch_hits: int = 0
+    prefetch_misses: int = 0
+    prefetch_hidden_seconds: float = 0.0
+    prefetch_stall_seconds: float = 0.0
+    io_p50_us: float = 0.0
+    io_p95_us: float = 0.0
+    bytes_by_backend: dict = dataclasses.field(default_factory=dict)
 
     @property
     def fragments_quarantined(self) -> int:
@@ -116,7 +133,7 @@ class DatasetRunReport:
         return self.logical_bytes / max(1e-12, self.measured_wall)
 
     def summary(self) -> str:
-        return (f"files={self.files_total};scanned={self.files_scanned};"
+        base = (f"files={self.files_total};scanned={self.files_scanned};"
                 f"pruned={self.files_pruned};window={self.window};"
                 f"launches={self.n_kernel_launches};"
                 f"io_requests={self.n_io_requests};"
@@ -127,6 +144,16 @@ class DatasetRunReport:
                 f"fragments_quarantined={self.fragments_quarantined};"
                 f"frag_p50_us={self.wall_percentile(50) * 1e6:.0f};"
                 f"frag_p95_us={self.wall_percentile(95) * 1e6:.0f}")
+        if self.devices > 1 or self.prefetch_hits or self.prefetch_misses:
+            base += (f";devices={self.devices};"
+                     f"stolen_fragments={self.stolen_fragments};"
+                     f"prefetch_hits={self.prefetch_hits};"
+                     f"prefetch_misses={self.prefetch_misses};"
+                     f"io_p50_us={self.io_p50_us:.0f};"
+                     f"io_p95_us={self.io_p95_us:.0f}")
+            for kind in sorted(self.bytes_by_backend):
+                base += f";bytes_{kind}={self.bytes_by_backend[kind]}"
+        return base
 
 
 def run_dataset_scan(plan: DatasetScanPlan, consume: Consume | None = None,
@@ -250,22 +277,10 @@ def run_dataset_scan(plan: DatasetScanPlan, consume: Consume | None = None,
             from errors[0]
 
     done = [r for r in reports if r is not None]
-    rep = DatasetRunReport(
-        files_total=plan.files_total, files_scanned=plan.files_scanned,
-        pruned_partition=plan.pruned_partition,
-        pruned_stats=plan.pruned_stats,
-        measured_wall=measured_wall, window=window,
-        fragment_walls=list(walls), reports=done,
-        n_kernel_launches=kernel_launch_count() - launches0,
-        n_io_requests=sum(r.metrics.n_io_requests for r in done),
-        shared_rgs=sum(r.metrics.shared_rgs for r in done),
-        n_row_groups=sum(r.metrics.n_row_groups for r in done),
-        stored_bytes=sum(r.metrics.stored_bytes for r in done),
-        logical_bytes=sum(r.metrics.logical_bytes for r in done),
-        retries=(sum(r.metrics.retries for r in done) + frag_retries[0]),
-        checksum_failures=sum(r.metrics.checksum_failures for r in done),
-        timeouts=sum(r.metrics.timeouts for r in done),
-        quarantined=sorted(quarantined, key=lambda q: q["index"]))
+    rep = _build_report(plan, measured_wall=measured_wall, window=window,
+                        walls=walls, done=done, launches0=launches0,
+                        frag_retries=frag_retries[0],
+                        quarantined=quarantined)
     if combine is None:
         return list(accs), rep
     acc = functools.reduce(
@@ -273,3 +288,274 @@ def run_dataset_scan(plan: DatasetScanPlan, consume: Consume | None = None,
                                           else combine(a, b)),
         accs, None)
     return acc, rep
+
+
+def _build_report(plan: DatasetScanPlan, *, measured_wall: float,
+                  window: int, walls: list[float], done: list[RunReport],
+                  launches0: int, frag_retries: int,
+                  quarantined: list[dict], devices: int = 1,
+                  device_names: list[str] | None = None,
+                  device_fragments: list[int] | None = None,
+                  stolen_fragments: int = 0) -> DatasetRunReport:
+    """Merge per-fragment RunReports into one DatasetRunReport (shared by
+    the windowed and the distributed executors)."""
+    bytes_by_backend: dict[str, int] = {}
+    for r in done:
+        kind = r.metrics.backend
+        bytes_by_backend[kind] = (bytes_by_backend.get(kind, 0)
+                                  + r.metrics.stored_bytes)
+    # request-weighted average of per-fragment latency percentiles —
+    # raw samples live in the (closed) fragment storages, so this is the
+    # best report-level view; informational only, never gated
+    reqs = sum(r.metrics.n_io_requests for r in done)
+    p50 = p95 = 0.0
+    if reqs:
+        p50 = sum(r.metrics.io_p50_us * r.metrics.n_io_requests
+                  for r in done) / reqs
+        p95 = sum(r.metrics.io_p95_us * r.metrics.n_io_requests
+                  for r in done) / reqs
+    return DatasetRunReport(
+        files_total=plan.files_total, files_scanned=plan.files_scanned,
+        pruned_partition=plan.pruned_partition,
+        pruned_stats=plan.pruned_stats,
+        measured_wall=measured_wall, window=window,
+        fragment_walls=list(walls), reports=done,
+        n_kernel_launches=kernel_launch_count() - launches0,
+        n_io_requests=reqs,
+        shared_rgs=sum(r.metrics.shared_rgs for r in done),
+        n_row_groups=sum(r.metrics.n_row_groups for r in done),
+        stored_bytes=sum(r.metrics.stored_bytes for r in done),
+        logical_bytes=sum(r.metrics.logical_bytes for r in done),
+        retries=(sum(r.metrics.retries for r in done) + frag_retries),
+        checksum_failures=sum(r.metrics.checksum_failures for r in done),
+        timeouts=sum(r.metrics.timeouts for r in done),
+        quarantined=sorted(quarantined, key=lambda q: q["index"]),
+        devices=devices, device_names=list(device_names or []),
+        device_fragments=list(device_fragments or []),
+        stolen_fragments=stolen_fragments,
+        prefetch_hits=sum(r.metrics.prefetch_hits for r in done),
+        prefetch_misses=sum(r.metrics.prefetch_misses for r in done),
+        prefetch_hidden_seconds=sum(r.metrics.prefetch_hidden_seconds
+                                    for r in done),
+        prefetch_stall_seconds=sum(r.metrics.prefetch_stall_seconds
+                                   for r in done),
+        io_p50_us=p50, io_p95_us=p95,
+        bytes_by_backend=bytes_by_backend)
+
+
+def run_distributed_scan(plan: DatasetScanPlan,
+                         consume: Consume | None = None,
+                         combine: Combine | None = None, *,
+                         devices=None, depth: int = 2,
+                         decode_workers: int | None = None,
+                         open_opts: dict | None = None,
+                         open_opts_for: Callable | None = None,
+                         fragment_retries: int = 2,
+                         on_error: str = "strict",
+                         retries: int = 3, deadline: float | None = None,
+                         fetch_threads: int | None = None,
+                         prefetch_lookahead: int | None = None,
+                         steal: bool = True):
+    """Multi-device dataset scan; returns ``(acc, DatasetRunReport)``.
+
+    The tentpole of DESIGN.md §8: surviving fragments are split into
+    key-range **contiguous shards** weighted by stored bytes
+    (``parallel.sharding.contiguous_shards`` over the planner's
+    partition-sorted order), one shard per device.  Each device runs its
+    own ScanService — a private fetch pool (``fetch_threads``, default 4
+    on the object backend, 1 on NVMe) and decode workers that dispatch
+    under ``jax.default_device(device)`` so decode lands device-resident
+    — and scans its shard serially; a device that drains its shard
+    **steals** from the tail of the largest remaining shard
+    (``steal=False`` pins the static assignment for tests).
+
+    Determinism: per-fragment partials land in a plan-ordered slot list
+    and are combined with the balanced ``tree_reduce`` whose shape
+    depends only on the plan — so devices ∈ {1, 2, 4} are bit-identical,
+    whatever device scanned which fragment (``combine=None`` returns the
+    plan-ordered partials).  Note this pairing differs from
+    ``run_dataset_scan``'s left fold, so compare distributed runs against
+    distributed runs.
+
+    ``devices`` is None (all jax devices), an int (first n, cycling on
+    small hosts), or an explicit device list.  With
+    ``open_opts={"prefetch": True, ...}`` each device opens the next
+    ``prefetch_lookahead`` (default 2) fragments of its own shard early
+    and issues their coalesced reads in the background, hiding remote
+    latency behind the current fragment's decode.  ``open_opts_for(pos,
+    fragment) -> dict`` overlays per-fragment open options (the chaos
+    tests aim a FaultPlan at one shard with it).  Failure policy matches
+    ``run_dataset_scan``: per-fragment retry-then-quarantine,
+    strict/best_effort.
+    """
+    import jax
+
+    from collections import deque
+
+    from repro.launch.mesh import scan_devices
+    from repro.parallel.collectives import tree_reduce
+    from repro.parallel.sharding import contiguous_shards
+
+    if on_error not in ("strict", "best_effort"):
+        raise ValueError(f"on_error must be 'strict' or 'best_effort', "
+                         f"got {on_error!r}")
+    base_opts = dict(DEFAULT_OPEN_OPTS, **(open_opts or {}))
+    base_opts["columns"] = plan.columns
+    if devices is None or isinstance(devices, int):
+        devs = scan_devices(devices)
+    else:
+        devs = list(devices)
+    ndev = max(1, len(devs))
+    backend = base_opts.get("backend", "real")
+    if fetch_threads is None:
+        fetch_threads = 4 if backend == "object" else 1
+    if prefetch_lookahead is None:
+        prefetch_lookahead = 2 if base_opts.get("prefetch") else 0
+    if decode_workers is None:
+        from repro.core.overlap import default_decode_workers
+        decode_workers = default_decode_workers()
+    services: list = [None] * ndev
+    if decode_workers is None or decode_workers >= 1:
+        from repro.core.scheduler import ScanService
+        services = [ScanService(fetch_threads=fetch_threads, device=dev)
+                    for dev in devs]
+
+    n = len(plan.fragments)
+    weights = [max(1, f.stored_bytes) for f in plan.fragments]
+    shards = contiguous_shards(weights, ndev)
+    queues = [deque(range(lo, hi)) for lo, hi in shards]
+
+    accs: list[object] = [None] * n
+    reports: list[RunReport | None] = [None] * n
+    walls: list[float] = [0.0] * n
+    device_counts = [0] * ndev
+    stolen = [0]
+    errors: list[BaseException] = []
+    quarantined: list[dict] = []
+    frag_retries = [0]
+    lock = threading.Lock()
+    launches0 = kernel_launch_count()
+
+    def opts_for(pos: int) -> dict:
+        if open_opts_for is None:
+            return base_opts
+        extra = open_opts_for(pos, plan.fragments[pos])
+        if not extra:
+            return base_opts
+        merged = dict(base_opts, **extra)
+        merged["columns"] = plan.columns
+        return merged
+
+    def claim(d: int) -> int | None:
+        with lock:
+            if errors:
+                return None
+            if queues[d]:
+                return queues[d].popleft()
+            if steal:
+                victim = max(range(ndev), key=lambda j: len(queues[j]))
+                if queues[victim]:
+                    stolen[0] += 1
+                    return queues[victim].pop()   # tail: farthest from
+                                                  # the victim's cursor
+            return None
+
+    def prefetch_ahead(d: int, cache: dict) -> None:
+        if not prefetch_lookahead:
+            return
+        with lock:
+            ahead = list(queues[d])[:prefetch_lookahead]
+        for p in ahead:
+            if p in cache:
+                continue
+            try:
+                sc: Scanner = plan.dataset.open_fragment(
+                    plan.fragments[p], **opts_for(p))
+                sc.prefetch_rgs(sc.plan(plan.predicate_stats))
+                cache[p] = sc
+            except BaseException:  # noqa: BLE001 — prefetch is advisory;
+                pass               # the demand path retries and reports
+
+    def scan_one(d: int, pos: int, cache: dict) -> None:
+        budget = 1 + max(0, fragment_retries)
+        failure: BaseException | None = None
+        for attempt in range(budget):
+            with lock:
+                if errors:
+                    return
+            try:
+                scanner = cache.pop(pos, None)
+                if scanner is None:
+                    scanner = plan.dataset.open_fragment(
+                        plan.fragments[pos], **opts_for(pos))
+                t0 = time.perf_counter()
+                acc, report = run_overlapped(
+                    scanner, consume,
+                    predicate_stats=plan.predicate_stats, depth=depth,
+                    decode_workers=decode_workers, service=services[d],
+                    retries=retries, deadline=deadline)
+                walls[pos] = time.perf_counter() - t0
+                accs[pos] = acc
+                reports[pos] = report
+                if attempt:
+                    with lock:
+                        frag_retries[0] += attempt
+                return
+            except BaseException as e:  # noqa: BLE001 — classified below
+                failure = e
+                if (isinstance(e, DeadlineExceeded)
+                        or not is_retryable(e)):
+                    break
+        entry = {"fragment": plan.fragments[pos].path, "index": pos,
+                 "attempts": min(attempt + 1, budget),
+                 "error": repr(failure),
+                 "error_type": type(failure).__name__}
+        with lock:
+            frag_retries[0] += min(attempt, budget - 1)
+            quarantined.append(entry)
+            if on_error == "strict":
+                errors.append(failure)
+
+    def device_worker(d: int) -> None:
+        cache: dict[int, Scanner] = {}
+        # consume runs on this thread; default_device routes its kernels
+        # (and the inline decode path, when decode_workers=0) to the
+        # device — the per-device ScanService pins its own workers
+        with jax.default_device(devs[d]):
+            while True:
+                pos = claim(d)
+                if pos is None:
+                    break
+                prefetch_ahead(d, cache)
+                scan_one(d, pos, cache)
+                device_counts[d] += 1
+        cache.clear()   # drop unconsumed prefetched scanners (stolen)
+
+    t0 = time.perf_counter()
+    threads = [threading.Thread(target=device_worker, daemon=True,
+                                args=(d,), name=f"dataset-device-{d}")
+               for d in range(ndev)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    measured_wall = time.perf_counter() - t0
+    for svc in services:
+        if svc is not None:
+            svc.shutdown()
+    if errors:
+        raise FragmentError(sorted(quarantined,
+                                   key=lambda q: q["index"])) \
+            from errors[0]
+
+    done = [r for r in reports if r is not None]
+    rep = _build_report(plan, measured_wall=measured_wall, window=1,
+                        walls=walls, done=done, launches0=launches0,
+                        frag_retries=frag_retries[0],
+                        quarantined=quarantined, devices=ndev,
+                        device_names=[str(dv) for dv in devs],
+                        device_fragments=device_counts,
+                        stolen_fragments=stolen[0])
+    if combine is None:
+        return list(accs), rep
+    return tree_reduce(accs, combine), rep

@@ -33,3 +33,18 @@ def make_local_mesh(model_parallel: int = 1, axes=("data", "model")):
 PEAK_FLOPS_BF16 = 197e12        # FLOP/s
 HBM_BW = 819e9                  # B/s
 ICI_LINK_BW = 50e9              # B/s per link
+
+
+def scan_devices(n: int | None = None) -> list:
+    """Devices for the distributed scan executor (dataset/executor.py).
+
+    ``None`` → every jax device.  ``n`` → the first n devices, cycling
+    when n exceeds what the platform exposes (so devices=4 still runs —
+    and still reduces deterministically — on a 1-device host; real
+    speedup needs real devices or XLA_FLAGS host-platform emulation).
+    """
+    devs = list(jax.devices())
+    if n is None:
+        return devs
+    n = max(1, int(n))
+    return [devs[i % len(devs)] for i in range(n)]

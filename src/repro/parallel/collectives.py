@@ -73,3 +73,28 @@ def reduce_gradients(local_grads, axis: str, method: str,
     if method == "int8_ef":
         return psum_int8_ef(local_grads, axis, error)
     raise ValueError(method)
+
+
+def tree_reduce(parts, combine):
+    """Deterministic balanced binary reduction of per-fragment partials.
+
+    ``parts`` is the *plan-ordered* list of fragment partials — one slot
+    per planned fragment, regardless of which device produced it.  The
+    tree shape therefore depends only on the plan, never on device count
+    or completion order, so the result is bit-identical for devices ∈
+    {1, 2, 4, ...}: the floating-point combine sees the exact same
+    operand pairing every time.  None entries (quarantined fragments on
+    best_effort runs) are dropped before pairing — the same fragments
+    are dropped whatever the device count; returns None when nothing
+    remains.
+    """
+    vals = [p for p in parts if p is not None]
+    if not vals:
+        return None
+    while len(vals) > 1:
+        nxt = [combine(vals[i], vals[i + 1])
+               for i in range(0, len(vals) - 1, 2)]
+        if len(vals) % 2:
+            nxt.append(vals[-1])
+        vals = nxt
+    return vals[0]

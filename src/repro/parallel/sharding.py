@@ -185,3 +185,46 @@ def shard_info(params, pspecs) -> dict:
     total = sum(x.size * x.dtype.itemsize if hasattr(x, "dtype") else 0
                 for x in leaves)
     return {"param_bytes_total": int(total)}
+
+
+def contiguous_shards(weights, n: int) -> list[tuple[int, int]]:
+    """Split ``len(weights)`` plan-ordered items into ``n`` contiguous
+    ``[lo, hi)`` shards with roughly equal total weight.
+
+    The dataset executor feeds plan-ordered (key-range-sorted) fragment
+    ``stored_bytes`` through this, so each device scans a contiguous key
+    range — locality for pruning and for the in-order reduce.  Boundaries
+    sit at the cumulative-weight quantiles; every shard is non-empty while
+    items remain (n > len(weights) yields trailing empty shards).  Pure
+    and deterministic — the same weights and n always produce the same
+    shards, which the bit-identical multi-device reduce relies on.
+    """
+    m = len(weights)
+    n = max(1, n)
+    weights = [float(w) for w in weights]
+    total = sum(weights)
+    shards: list[tuple[int, int]] = []
+    lo = 0
+    acc = 0.0
+    for k in range(n):
+        if lo >= m:
+            shards.append((m, m))
+            continue
+        if k == n - 1:
+            shards.append((lo, m))
+            lo = m
+            continue
+        # advance while adding the next item keeps us at-or-under the
+        # quantile midpoint (half-weight rule balances boundary items)
+        target = total * (k + 1) / n
+        hi = lo
+        while hi < m and (hi == lo or acc + weights[hi] / 2 <= target):
+            acc += weights[hi]
+            hi += 1
+        # leave at least one item for each remaining shard
+        hi = min(hi, m - (n - k - 1))
+        hi = max(hi, lo + 1)
+        acc = sum(weights[:hi])
+        shards.append((lo, hi))
+        lo = hi
+    return shards

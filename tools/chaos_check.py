@@ -186,6 +186,48 @@ def main() -> int:
               f"faults (retries={fused_retries}, crc_failures={crc_hits}, "
               f"quarantined={repdf.fragments_quarantined})")
 
+        # -- distributed leg (§8): one device's shard faults, heals ----
+        # Shard 0's fragments (the same fragments whatever the device
+        # count) get the transient plan via the per-fragment open_opts
+        # hook; the 2-device run must stay bit-identical to the clean
+        # 2-device run with zero quarantined fragments.
+        import numpy as np
+
+        from repro.dataset import plan_dataset_scan, run_distributed_scan
+        from repro.parallel.sharding import contiguous_shards
+
+        dplan = plan_dataset_scan(ds)
+        lo, hi = contiguous_shards(
+            [max(1, f.stored_bytes) for f in dplan.fragments], 2)[0]
+
+        def _dist(open_opts_for=None):
+            _clear_decoded_caches()
+            return run_distributed_scan(
+                dplan,
+                lambda acc, i, cols: (acc or 0.0) + float(
+                    np.asarray(cols["l_extendedprice"].array,
+                               dtype=np.float64).sum()),
+                lambda a, b: a + b, devices=2,
+                open_opts={"decode_backend": "host"},
+                open_opts_for=open_opts_for)
+
+        dist_clean, _ = _dist()
+        dist_chaos, repx = _dist(
+            lambda pos, frag: {"fault_plan": _fault_plan(args.seed + 8)}
+            if lo <= pos < hi else None)
+        if struct.pack("<d", dist_chaos) != struct.pack("<d", dist_clean):
+            failures.append(f"distributed q6 under shard-0 chaos "
+                            f"diverged: {dist_chaos!r} != {dist_clean!r}")
+        if repx.retries <= 0:
+            failures.append("distributed chaos leg recovered nothing "
+                            "(retries == 0)")
+        if repx.fragments_quarantined:
+            failures.append(f"distributed transient faults quarantined "
+                            f"{repx.fragments_quarantined} fragment(s)")
+        print(f"[chaos] distributed d2 bit-identical with shard-0 faults "
+              f"(retries={repx.retries}, "
+              f"quarantined={repx.fragments_quarantined})")
+
         # -- CRC verification overhead gate ----------------------------
         def best_wall() -> float:
             best = float("inf")

@@ -50,7 +50,13 @@ COUNT_KEYS = ("launches", "launches_per_rg", "requests", "io_requests",
 #: a regression, and their absence from older baselines must not trip the
 #: dropped-counter check either
 INFO_KEYS = ("retries", "checksum_failures", "timeouts",
-             "fragments_quarantined")
+             "fragments_quarantined",
+             # distributed-scan observability (DESIGN.md §8): prefetch
+             # economics, latency percentiles, per-backend bytes, and
+             # work-stealing counts — informational, never gated
+             "prefetch_hits", "prefetch_misses", "io_p50_us", "io_p95_us",
+             "stolen_fragments", "bytes_object", "bytes_sim", "bytes_real",
+             "hidden_pct")
 
 
 def parse_csv(path: str) -> "dict[str, tuple]":
@@ -282,7 +288,8 @@ def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("files", nargs="*",
                     default=["fig5_smoke.csv", "scan_plan_smoke.csv",
-                             "concurrent_smoke.csv", "dataset_smoke.csv"])
+                             "concurrent_smoke.csv", "dataset_smoke.csv",
+                             "distributed_smoke.csv"])
     ap.add_argument("--baseline", default="results/benchmarks/baselines")
     ap.add_argument("--current", default="results/benchmarks")
     ap.add_argument("--current2", default=None,
@@ -305,7 +312,8 @@ def main() -> int:
         return selftest()
 
     files = args.files or ["fig5_smoke.csv", "scan_plan_smoke.csv",
-                           "concurrent_smoke.csv", "dataset_smoke.csv"]
+                           "concurrent_smoke.csv", "dataset_smoke.csv",
+                           "distributed_smoke.csv"]
     all_regressions: list[str] = []
     file_tables: dict[str, list[list[str]]] = {}
     for fname in files:
