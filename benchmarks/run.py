@@ -15,6 +15,10 @@ def main() -> None:
                     help="tiny-SF subset for CI (scan-path suites only)")
     ap.add_argument("--only", default=None,
                     help="comma-separated suite names (e.g. bench_queries)")
+    ap.add_argument("--trace", action="store_true",
+                    help="record each suite with the flight recorder "
+                         "(core/trace.py) and write trace_<tag>.json "
+                         "next to the CSVs")
     args = ap.parse_args()
     if args.smoke:
         os.environ.setdefault("BENCH_SF", "0.01")
@@ -48,17 +52,32 @@ def main() -> None:
         keep = set(args.only.split(","))
         suites = [s for s in suites if s[0] in keep]
 
+    tracer = None
+    if args.trace:
+        from repro.core import trace
+        from benchmarks.common import RESULTS_DIR
+        tracer = trace.enable()
+
     print("name,us_per_call,derived")
     failures = []
+    suffix = "_smoke" if args.smoke else ""
     for mod_name, tag in suites:
         try:
+            if tracer is not None:
+                tracer.clear()
             mod = __import__(f"benchmarks.{mod_name}",
                              fromlist=["run"])
             mod.run()
-            flush_csv(f"{tag}{'_smoke' if args.smoke else ''}.csv")
+            flush_csv(f"{tag}{suffix}.csv")
+            if tracer is not None:
+                tracer.export(os.path.join(RESULTS_DIR,
+                                           f"trace_{tag}{suffix}.json"))
         except Exception:
             failures.append(mod_name)
             traceback.print_exc()
+    if tracer is not None:
+        from repro.core import trace
+        trace.disable()
     if failures:
         print(f"FAILED suites: {failures}", file=sys.stderr)
         sys.exit(1)

@@ -1,0 +1,65 @@
+"""Observability quickstart: trace a sharded Q6 and name its bottleneck.
+
+Builds a small partitioned lineitem dataset, runs Q6 through the
+dataset executor with the flight recorder on (``trace=`` kwarg,
+DESIGN.md §10), exports Chrome/Perfetto trace-event JSON — loadable
+as-is in chrome://tracing or https://ui.perfetto.dev — and prints
+``tools/trace_report.py``'s stage-bucket attribution: where the run's
+wall time went (fetch / decompress / decode / consume / stall), the
+per-row-group critical path, and the bottleneck stage.
+
+    PYTHONPATH=src python examples/tpch_trace.py [--sf 0.02] [--out t.json]
+"""
+
+import argparse
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "tools"))
+import trace_report  # noqa: E402
+
+from repro.core import ACCELERATOR_OPTIMIZED
+from repro.core.query import q6
+from repro.data import tpch
+from repro.dataset import write_dataset
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sf", type=float, default=0.02)
+    ap.add_argument("--out", default="trace_q6.json",
+                    help="trace-event JSON output path")
+    args = ap.parse_args()
+
+    line, _ = tpch.generate_tables(sf=args.sf, seed=3,
+                                   include_strings=False)
+    tuned = ACCELERATOR_OPTIMIZED.replace(
+        rows_per_rg=max(2_000, line.num_rows // 24),
+        target_pages_per_chunk=16)
+
+    with tempfile.TemporaryDirectory() as d:
+        ds = write_dataset(line, os.path.join(d, "lineitem_ds"), tuned,
+                           partition_by="l_shipdate", how="range",
+                           fragments=8)
+        # warm jits/caches so the trace shows steady-state, not compiles
+        q6(ds, prune=True, open_opts={"decode_backend": "host"})
+
+        # trace=<path>: record this run and export Chrome JSON on return
+        res, rep = q6(ds, prune=True,
+                      open_opts={"decode_backend": "host"},
+                      trace=args.out)
+        print(f"Q6 = {res:.6f}  wall {rep.measured_wall * 1e3:.2f} ms  "
+              f"({rep.trace_events} events recorded)")
+
+    doc = trace_report.load_trace(args.out)
+    errors = trace_report.validate_trace(doc)
+    assert not errors, errors
+    print(trace_report.format_report(trace_report.build_report(doc)))
+    print(f"\ntimeline: load {args.out} in chrome://tracing or "
+          f"https://ui.perfetto.dev")
+
+
+if __name__ == "__main__":
+    main()

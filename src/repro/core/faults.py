@@ -42,6 +42,7 @@ import zlib
 from collections import Counter
 from collections.abc import Sequence
 
+from repro.core import trace
 from repro.core.compression import ChecksumError
 
 
@@ -167,6 +168,11 @@ class FaultPlan:
             return False
         with self._lock:
             self.injected[kind] += 1
+        tr = trace.active()
+        if tr is not None:
+            tr.instant("fault_injected", "fault", kind=kind,
+                       attempt=attempt, coords=list(coords))
+        trace.registry().counter_inc(f"faults.injected.{kind}")
         return True
 
     # -- storage hooks (FaultyStorage calls these) ---------------------------

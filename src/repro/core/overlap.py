@@ -55,6 +55,7 @@ import threading
 import time
 from collections.abc import Callable, Sequence
 
+from repro.core import trace as trace_mod
 from repro.core.scan import Scanner, ScanMetrics
 from repro.kernels.common import kernel_launch_count
 
@@ -117,6 +118,13 @@ class _MetricsProbe:
             m.checksum_failures = (now["checksum_failures"]
                                    - self.faults0["checksum_failures"])
             m.timeouts = now["timeouts"] - self.faults0["timeouts"]
+        pol = getattr(self.scanner, "retry", None)
+        if pol is not None:
+            m.retry_policy = getattr(pol, "name", "")
+        tr = trace_mod.active()
+        if tr is not None:
+            m.trace_events = tr.event_count()
+            m.registry_snapshot = trace_mod.registry().snapshot()
 
 
 @dataclasses.dataclass
@@ -263,16 +271,31 @@ def _account_rg(scanner: Scanner, m: ScanMetrics, i: int, cols: dict,
 
 def run_blocking(scanner: Scanner, consume: Consume | None = None,
                  row_groups: Sequence[int] | None = None,
-                 predicate_stats=None):
-    """Fetch everything, then decode+consume everything (paper Fig. 4 top)."""
+                 predicate_stats=None, trace=None):
+    """Fetch everything, then decode+consume everything (paper Fig. 4 top).
+
+    ``trace`` enables the flight recorder for this run (DESIGN.md §10):
+    True records, a path string records and exports Chrome JSON."""
+    with trace_mod.request(trace):
+        return _run_blocking(scanner, consume, row_groups, predicate_stats)
+
+
+def _run_blocking(scanner: Scanner, consume: Consume | None,
+                  row_groups, predicate_stats):
     t0 = time.perf_counter()
     plan = scanner.plan(predicate_stats, row_groups)
     m = ScanMetrics(backend=getattr(scanner.storage, "kind", "real"))
     probe = _MetricsProbe(scanner)
+    tr = trace_mod.active()
+    label = getattr(scanner, "path", "scan")
     staged = []
     t_f0 = time.perf_counter()
     for i in plan:
+        t_r = time.perf_counter()
         raws, io_dt = scanner.fetch_rg(i)
+        if tr is not None:
+            tr.complete("fetch", "io", t_r, time.perf_counter(),
+                        scan=label, rg=i, io_dt=io_dt)
         staged.append((i, raws, io_dt))
     fetch_wall = time.perf_counter() - t_f0
     acc = None
@@ -281,19 +304,32 @@ def run_blocking(scanner: Scanner, consume: Consume | None = None,
     for i, raws, io_dt in staged:
         t_d = time.perf_counter()
         cols, dec_dt = scanner.decode_rg(i, raws)
-        decode_wall += time.perf_counter() - t_d
+        t_d1 = time.perf_counter()
+        decode_wall += t_d1 - t_d
+        if tr is not None:
+            tr.complete("decode_rg", "decode", t_d, t_d1,
+                        scan=label, rg=i)
         _account_rg(scanner, m, i, cols, io_dt, dec_dt)
         t1 = time.perf_counter()
         if consume is not None:
             acc = consume(acc, i, cols)
-        consume_times.append(time.perf_counter() - t1)
+        t2 = time.perf_counter()
+        consume_times.append(t2 - t1)
+        if tr is not None:
+            tr.complete("consume", "consume", t1, t2, scan=label, rg=i)
     probe.finish(m)
     m.fetch_wall_seconds = fetch_wall
     m.decode_wall_seconds = decode_wall
     m.consume_seconds = sum(consume_times)
     walls = {"fetch": fetch_wall, "decode": decode_wall,
              "consume": sum(consume_times)}
-    return acc, RunReport("blocking", time.perf_counter() - t0, m,
+    t_end = time.perf_counter()
+    if tr is not None:
+        tr.complete("scan", "scan", t0, t_end, scan=label,
+                    mode="blocking", rgs=m.n_row_groups,
+                    retry_policy=m.retry_policy)
+        m.trace_events = tr.event_count()
+    return acc, RunReport("blocking", t_end - t0, m,
                           consume_times, decode_workers=0, depth=0,
                           stage_walls=walls)
 
@@ -317,7 +353,7 @@ def run_overlapped(scanner: Scanner, consume: Consume | None = None,
                    predicate_stats=None, depth: int = 2,
                    decode_workers: int | None = None, service=None,
                    priority: int = 0, retries: int = 3,
-                   deadline: float | None = None):
+                   deadline: float | None = None, trace=None):
     """Overlapped scan: fetch ∥ decode ∥ in-order consume.
 
     ``depth`` bounds row groups in flight (fetched or decoded, not yet
@@ -334,17 +370,21 @@ def run_overlapped(scanner: Scanner, consume: Consume | None = None,
     requeued for a fresh fetch + decode across the whole scan, DESIGN.md
     §6); ``deadline`` is a whole-scan wall budget in seconds — once
     exceeded the scan raises ``DeadlineExceeded`` (never retried).
+
+    ``trace`` enables the flight recorder for this run (DESIGN.md §10):
+    True records, a path string records and exports Chrome JSON.
     """
     if decode_workers is None:
         decode_workers = default_decode_workers()
-    if decode_workers is not None and int(decode_workers) <= 0:
-        return _run_overlapped_inline(scanner, consume, row_groups,
-                                      predicate_stats, depth,
-                                      deadline=deadline)
-    return _run_overlapped_service(scanner, consume, row_groups,
-                                   predicate_stats, depth,
-                                   decode_workers, service, priority,
-                                   retries=retries, deadline=deadline)
+    with trace_mod.request(trace):
+        if decode_workers is not None and int(decode_workers) <= 0:
+            return _run_overlapped_inline(scanner, consume, row_groups,
+                                          predicate_stats, depth,
+                                          deadline=deadline)
+        return _run_overlapped_service(scanner, consume, row_groups,
+                                       predicate_stats, depth,
+                                       decode_workers, service, priority,
+                                       retries=retries, deadline=deadline)
 
 
 def _run_overlapped_service(scanner: Scanner, consume: Consume | None,
@@ -368,6 +408,8 @@ def _run_overlapped_service(scanner: Scanner, consume: Consume | None,
                         deadline=deadline)
     acc = None
     consume_times: list[float] = []
+    tr = trace_mod.active()
+    label = getattr(scanner, "path", "scan")
     try:
         for i, cols, io_dt, dec_dt, chunk_times, p2_start in handle:
             _account_rg(scanner, m, i, cols, io_dt, dec_dt)
@@ -376,7 +418,12 @@ def _run_overlapped_service(scanner: Scanner, consume: Consume | None,
             t1 = time.perf_counter()
             if consume is not None:
                 acc = consume(acc, i, cols)
-            consume_times.append(time.perf_counter() - t1)
+            t2 = time.perf_counter()
+            consume_times.append(t2 - t1)
+            if tr is not None:
+                tr.complete("consume", "consume", t1, t2, scan=label,
+                            rg=i, logical_bytes=sum(
+                                r.logical_bytes for r in cols.values()))
     except BaseException:
         handle.cancel()             # no-op if the scan already finished
         raise
@@ -388,7 +435,14 @@ def _run_overlapped_service(scanner: Scanner, consume: Consume | None,
     m.fetch_wall_seconds = walls["fetch"]
     m.decode_wall_seconds = walls["decode"]
     m.consume_seconds = walls["consume"]
-    return acc, RunReport("overlapped", time.perf_counter() - t0, m,
+    t_end = time.perf_counter()
+    if tr is not None:
+        tr.complete("scan", "scan", t0, t_end, scan=label,
+                    mode="overlapped", workers=workers,
+                    rgs=m.n_row_groups, shared_rgs=m.shared_rgs,
+                    retry_policy=m.retry_policy)
+        m.trace_events = tr.event_count()
+    return acc, RunReport("overlapped", t_end - t0, m,
                           consume_times, decode_workers=workers,
                           depth=max(1, depth), stage_walls=walls)
 
@@ -407,6 +461,8 @@ def _run_overlapped_inline(scanner: Scanner, consume: Consume | None,
     inflight = threading.Semaphore(max(1, depth))
     fetched: "queue.Queue" = queue.Queue()
     fetch_wall = [0.0]
+    tr = trace_mod.active()
+    label = getattr(scanner, "path", "scan")
 
     def fetch_worker():
         t_start = time.perf_counter()
@@ -417,7 +473,11 @@ def _run_overlapped_inline(scanner: Scanner, consume: Consume | None,
                         break
                 if state.abort.is_set():
                     break
+                t_r = time.perf_counter()
                 raws, io_dt = scanner.fetch_rg(i)
+                if tr is not None:
+                    tr.complete("fetch", "io", t_r, time.perf_counter(),
+                                scan=label, rg=i, io_dt=io_dt)
                 fetched.put((i, raws, io_dt))
         except BaseException as e:  # surfaced on the consume thread
             state.fail(e)
@@ -448,12 +508,20 @@ def _run_overlapped_inline(scanner: Scanner, consume: Consume | None,
             i, raws, io_dt = item
             t_d = time.perf_counter()
             cols, dec_dt = scanner.decode_rg(i, raws)
-            decode_wall += time.perf_counter() - t_d
+            t_d1 = time.perf_counter()
+            decode_wall += t_d1 - t_d
+            if tr is not None:
+                tr.complete("decode_rg", "decode", t_d, t_d1,
+                            scan=label, rg=i)
             _account_rg(scanner, m, i, cols, io_dt, dec_dt)
             t1 = time.perf_counter()
             if consume is not None:
                 acc = consume(acc, i, cols)
-            consume_times.append(time.perf_counter() - t1)
+            t2 = time.perf_counter()
+            consume_times.append(t2 - t1)
+            if tr is not None:
+                tr.complete("consume", "consume", t1, t2, scan=label,
+                            rg=i)
             inflight.release()
     except BaseException:
         state.abort.set()
@@ -468,6 +536,12 @@ def _run_overlapped_inline(scanner: Scanner, consume: Consume | None,
     m.consume_seconds = sum(consume_times)
     walls = {"fetch": fetch_wall[0], "decode": decode_wall,
              "consume": sum(consume_times)}
-    return acc, RunReport("overlapped", time.perf_counter() - t0, m,
+    t_end = time.perf_counter()
+    if tr is not None:
+        tr.complete("scan", "scan", t0, t_end, scan=label,
+                    mode="overlapped-inline", workers=0,
+                    rgs=m.n_row_groups, retry_policy=m.retry_policy)
+        m.trace_events = tr.event_count()
+    return acc, RunReport("overlapped", t_end - t0, m,
                           consume_times, decode_workers=0,
                           depth=max(1, depth), stage_walls=walls)

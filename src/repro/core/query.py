@@ -139,8 +139,8 @@ def q6(scanner: Scanner, overlapped: bool = True, use_kernel: bool = False,
        prune: bool = True, prepare_plan: bool = False, depth: int = 2,
        decode_workers: int | None = None, service=None,
        window: int = 4, open_opts: dict | None = None,
-       fused: "bool | str | None" = None, devices=None
-       ) -> tuple[float, RunReport]:
+       fused: "bool | str | None" = None, devices=None,
+       trace=None) -> tuple[float, RunReport]:
     """Run Q6 over the scanner's stream — or over a whole **Dataset**
     (file-level pruning + sharded fragment scans; returns a
     ``DatasetRunReport``).  ``prepare_plan`` pre-builds the row-group
@@ -161,7 +161,9 @@ def q6(scanner: Scanner, overlapped: bool = True, use_kernel: bool = False,
     executor (``run_distributed_scan``): None keeps the windowed
     single-service path; an int or device list shards fragments across
     devices with the deterministic tree reduce — bit-identical across
-    device counts."""
+    device counts.  ``trace`` enables the flight recorder for this run
+    (core/trace.py, DESIGN.md §10): True records, a path string records
+    and exports Chrome trace JSON."""
     fused = _resolve_fused(fused)
     spec = q6_fused_spec("reference" if fused == "reference"
                          else "fused") if fused else None
@@ -183,12 +185,13 @@ def q6(scanner: Scanner, overlapped: bool = True, use_kernel: bool = False,
             acc, report = run_distributed_scan(
                 plan, consume, lambda a, b: a + b,
                 devices=devices, depth=depth,
-                decode_workers=decode_workers, open_opts=open_opts)
+                decode_workers=decode_workers, open_opts=open_opts,
+                trace=trace)
             return (acc or 0.0), report
         acc, report = run_dataset_scan(
             plan, consume, lambda a, b: a + b,
             window=window, depth=depth, decode_workers=decode_workers,
-            service=service, open_opts=open_opts)
+            service=service, open_opts=open_opts, trace=trace)
         return (acc or 0.0), report
     if spec is not None and scanner.planner is not None \
             and scanner.fused_spec != spec:
@@ -204,7 +207,8 @@ def q6(scanner: Scanner, overlapped: bool = True, use_kernel: bool = False,
         runner = run_blocking
     acc, report = runner(scanner, consume,
                          predicate_stats=(q6_rg_stats_predicate
-                                          if prune else None))
+                                          if prune else None),
+                         trace=trace)
     return (acc or 0.0), report
 
 
@@ -288,8 +292,8 @@ def q12(lineitem_scanner: Scanner, orders_scanner: Scanner,
         overlapped: bool = True, prepare_plan: bool = False,
         depth: int = 2, decode_workers: int | None = None,
         service=None, window: int = 4, open_opts: dict | None = None,
-        fused: "bool | str | None" = None, devices=None
-        ) -> tuple[dict[str, int], RunReport, RunReport]:
+        fused: "bool | str | None" = None, devices=None,
+        trace=None) -> tuple[dict[str, int], RunReport, RunReport]:
     """Q12 over scanners — or over Datasets (either side independently):
     the build side streams every orders fragment, the probe side shards
     lineitem fragments through the ScanService, and per-fragment counts
@@ -299,7 +303,17 @@ def q12(lineitem_scanner: Scanner, orders_scanner: Scanner,
     side with late materialization: ``l_orderkey`` only materializes for
     row groups with surviving rows (core/fused.py).  ``devices`` routes
     dataset sides through ``run_distributed_scan`` (multi-device
-    sharding + deterministic tree reduce)."""
+    sharding + deterministic tree reduce).  ``trace`` records both the
+    build and probe scans in one flight-recorder session (DESIGN.md
+    §10); a path string also exports Chrome trace JSON on return."""
+    if trace:
+        from repro.core import trace as trace_mod
+        with trace_mod.request(trace):
+            return q12(lineitem_scanner, orders_scanner,
+                       overlapped=overlapped, prepare_plan=prepare_plan,
+                       depth=depth, decode_workers=decode_workers,
+                       service=service, window=window,
+                       open_opts=open_opts, fused=fused, devices=devices)
     if not overlapped and (_is_dataset(lineitem_scanner)
                            or _is_dataset(orders_scanner)):
         raise ValueError("dataset runs are always sharded/overlapped; "

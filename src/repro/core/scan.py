@@ -37,11 +37,12 @@ from repro.core.faults import (FaultPlan, InjectedDecodeError, is_retryable,
                                wrap_storage)
 from repro.core.metadata import ChunkMeta
 from repro.core.reader import TabFileReader, read_footer
-from repro.core.storage import (DEFAULT_COALESCE_GAP, DEFAULT_RETRY_POLICY,
-                                PrefetchingStorage, RealStorage,
-                                RetryingStorage, RetryPolicy,
-                                backend_io_defaults, coalesce_ranges,
-                                fetch_coalesced, open_storage)
+from repro.core import trace
+from repro.core.storage import (DEFAULT_COALESCE_GAP, PrefetchingStorage,
+                                RealStorage, RetryingStorage, RetryPolicy,
+                                backend_io_defaults, backend_retry_policy,
+                                coalesce_ranges, fetch_coalesced,
+                                open_storage)
 from repro.kernels import ops
 from repro.kernels.common import kernel_launch_count
 
@@ -100,6 +101,13 @@ class ScanMetrics:
     io_p50_us: float = 0.0
     io_p95_us: float = 0.0
     decode_affinity: str = "off"
+    # observability (DESIGN.md §10; informational, never gated): which
+    # RetryPolicy recovered this scan's reads (nvme/object/custom), how
+    # many flight-recorder events the run recorded (0 when tracing off),
+    # and the process metrics-registry snapshot at scan end
+    retry_policy: str = ""
+    trace_events: int = 0
+    registry_snapshot: dict = dataclasses.field(default_factory=dict)
 
     @property
     def blocking_seconds(self) -> float:
@@ -224,10 +232,13 @@ class Scanner:
         # fault-recovery sandwich (DESIGN.md §6): the FaultPlan injects
         # *under* the retry wrapper, so retries heal transient injections
         # exactly as they would heal real storage faults.  Retries are on
-        # by default (DEFAULT_RETRY_POLICY); attempts=1 disables.
+        # by default with the storage backend's profile policy — the NVMe
+        # policy locally, longer backoff/deadlines on the object store
+        # (backend_retry_policy); attempts=1 disables.
         self.fault_plan = fault_plan
         storage = wrap_storage(storage, fault_plan)
-        self.retry = retry if retry is not None else DEFAULT_RETRY_POLICY
+        self.retry = retry if retry is not None else backend_retry_policy(
+            getattr(storage, "kind", "real"))
         if self.retry.attempts > 1 or self.retry.timeout is not None:
             storage = RetryingStorage(storage, self.retry)
         self.storage = storage
@@ -378,6 +389,10 @@ class Scanner:
         the blocking path below and the ScanService requeue path."""
         if isinstance(e, ChecksumError):
             self.count_fault(checksum_failures=1)
+            tr = trace.active()
+            if tr is not None:
+                tr.instant("checksum_failure", "fault", scan=self.path,
+                           rg=rg_index)
         if isinstance(e, TimeoutError):
             self.count_fault(timeouts=1)
         if not is_retryable(e):
@@ -453,6 +468,11 @@ class Scanner:
         m.timeouts = faults["timeouts"] - faults0["timeouts"]
         if self.planner is not None:
             m.plan_seconds = self.planner.plan_seconds - plan_s0
+        m.retry_policy = self.retry.name
+        tr = trace.active()
+        if tr is not None:
+            m.trace_events = tr.event_count()
+            m.registry_snapshot = trace.registry().snapshot()
         return acc, m
 
 

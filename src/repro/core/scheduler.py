@@ -66,6 +66,7 @@ import time
 from collections import deque
 from collections.abc import Callable, Sequence
 
+from repro.core import trace
 from repro.core.faults import DeadlineExceeded, is_retryable
 
 
@@ -186,7 +187,7 @@ class _RgJob:
 
     __slots__ = ("rg_index", "raws", "io_dt", "job", "pending",
                  "phase", "chunk_times", "p2_start", "key", "subscribers",
-                 "failed")
+                 "failed", "enq_t")
 
     def __init__(self, seq_scan, seq: int, rg_index: int, raws,
                  io_dt: float, key):
@@ -199,6 +200,8 @@ class _RgJob:
         self.chunk_times: list[float] = []
         self.p2_start = 0         # chunk_times index of the first phase-2
                                   # item (the phase barrier, for the model)
+        self.enq_t = 0.0          # when the current phase's items were
+                                  # queued (trace queue-wait histogram)
         self.key = key            # sharing identity, None → not shareable
         self.subscribers: list[tuple] = [(seq_scan, seq)]
         self.failed = False       # an item of this job raised; queued and
@@ -293,8 +296,9 @@ class ScanHandle:
     plan order (``chunk_times`` lists the RG's decode item walls in
     completion order — open, phase-1 items, transition, phase-2 items,
     finalize — and ``p2_start`` indexes the first phase-2 item, the
-    barrier the modeled schedule must honor).  Advancing the iterator *acks* the previous row group —
-    releasing its in-flight credit and reporting its consume time to the
+    barrier the modeled schedule must honor).  Advancing the iterator
+    *acks* the previous row group — releasing its in-flight credit and
+    reporting its consume time to the
     adaptive sizer — so call ``next`` only after consuming.  ``cancel()``
     stops the scan without poisoning the pool."""
 
@@ -533,6 +537,9 @@ class ScanService:
         self._win = {"io": 0.0, "dec": 0.0, "cons": 0.0, "rgs": 0}
         self._retarget_locked()
         self.resize_events.append(self._target)
+        reg = trace.registry()
+        reg.gauge_set("scheduler.pool_target", self._target)
+        reg.counter_inc("scheduler.resizes")
 
     # -- fetch stage --------------------------------------------------------
 
@@ -612,6 +619,11 @@ class ScanService:
                 self._handle_failure(e, [(scan, seq)], None)
                 continue
             t1 = time.perf_counter()
+            tr = trace.active()
+            if tr is not None:
+                tr.complete("fetch", "io", t0, t1, scan=scan.label,
+                            rg=scan.plan[seq], io_dt=io_dt, retry=is_retry)
+                trace.registry().observe("scheduler.fetch_wall_s", t1 - t0)
             with self._lock:
                 scan.fetch_span[0] = min(scan.fetch_span[0], t0)
                 scan.fetch_span[1] = max(scan.fetch_span[1], t1)
@@ -626,6 +638,7 @@ class ScanService:
                 key = (None if scan.share_key is None or is_retry
                        else (scan.share_key, scan.plan[seq]))
                 rgjob = _RgJob(scan, seq, scan.plan[seq], raws, io_dt, key)
+                rgjob.enq_t = t1
                 if key is not None and key not in self._inflight:
                     # two fetch-pool threads may race the same key for
                     # different scans; first registration wins (the loser
@@ -708,16 +721,22 @@ class ScanService:
             raise DeadlineExceeded(
                 f"scan {live.label}: deadline exceeded")
         t0 = time.perf_counter()
+        tr = trace.active()
+        if tr is not None and rgjob.enq_t:
+            trace.registry().observe("scheduler.queue_wait_s",
+                                     max(0.0, t0 - rgjob.enq_t))
         if kind == "open":
             rgjob.job = self._job_for(scan.scanner, rgjob.rg_index,
                                       rgjob.raws)
             tasks = list(rgjob.job.phase1_tasks())
             rgjob.phase = 1
-            self._note_item(scan, rgjob, t0)
+            self._note_item(scan, rgjob, t0, "open")
             return self._enqueue_phase(scan, rgjob, tasks)
         if kind == "task":
             fn()
-            self._note_item(scan, rgjob, t0)
+            self._note_item(scan, rgjob, t0,
+                            {1: "decompress", 2: "decode"}.get(rgjob.phase,
+                                                               "fused"))
             with self._lock:
                 if rgjob.failed:
                     return False   # a sibling item failed concurrently
@@ -738,6 +757,7 @@ class ScanService:
             return self._advance(scan, rgjob)
         with self._lock:
             rgjob.pending = len(tasks)
+            rgjob.enq_t = time.perf_counter()
             target = rgjob.live_scan()   # a subscriber may have died
             if target is None:
                 return False
@@ -757,7 +777,7 @@ class ScanService:
             t0 = time.perf_counter()
             tasks = list(rgjob.job.phase2_tasks())
             rgjob.phase = 2
-            self._note_item(scan, rgjob, t0)
+            self._note_item(scan, rgjob, t0, "transition")
             rgjob.p2_start = len(rgjob.chunk_times)
             return self._enqueue_phase(scan, rgjob, tasks)
         if rgjob.phase == 2:
@@ -769,14 +789,14 @@ class ScanService:
                 # modeled schedule treats the whole decode as one serial
                 # span for such jobs (p2_start = 0 — conservative)
                 t0 = time.perf_counter()
-                self._note_item(scan, rgjob, t0)
+                self._note_item(scan, rgjob, t0, "transition")
                 rgjob.p2_start = 0
                 return self._enqueue_phase(scan, rgjob, tasks)
             # empty: fall straight through to finalize with NO extra
             # chunk-time item, so unfused accounting is untouched
         t0 = time.perf_counter()
         cols = rgjob.job.finalize()
-        self._note_item(scan, rgjob, t0)
+        self._note_item(scan, rgjob, t0, "finalize")
         dec_dt = sum(rgjob.chunk_times)
         with self._lock:
             # decode side of the adaptive window accrues ONCE per job here
@@ -795,8 +815,12 @@ class ScanService:
         return True
 
     def _note_item(self, scan: _ScanState, rgjob: _RgJob,
-                   t0: float) -> None:
+                   t0: float, kind: str = "item") -> None:
         t1 = time.perf_counter()
+        tr = trace.active()
+        if tr is not None:
+            tr.complete(kind, "decode", t0, t1, scan=scan.label,
+                        rg=rgjob.rg_index)
         with self._lock:
             rgjob.chunk_times.append(t1 - t0)
             for sub, _ in rgjob.subscribers:
@@ -815,6 +839,9 @@ class ScanService:
     def _ack_locked(self, scan: _ScanState, item: tuple | None,
                     consume_dt: float) -> None:
         scan.credits += 1
+        if trace.active() is not None:
+            trace.registry().observe("scheduler.credits_on_ack",
+                                     scan.credits)
         scan.workers_seen = max(scan.workers_seen, self.pool_size)
         if item is not None:
             # consume is per-consumer; fetch accrued at fetch time and
@@ -869,6 +896,9 @@ class ScanService:
         cf = getattr(scan.scanner, "count_fault", None)
         if cf is not None:
             cf(timeouts=1)
+        tr = trace.active()
+        if tr is not None:
+            tr.instant("deadline", "fault", scan=scan.label)
         self._fail_scan(scan, DeadlineExceeded(
             f"scan {scan.label}: deadline exceeded"))
 
@@ -918,6 +948,12 @@ class ScanService:
                     # only on ack), so the retry cannot over-subscribe the
                     # scan's depth bound
                     scan.refetch.append(seq)
+                    tr = trace.active()
+                    if tr is not None:
+                        tr.instant("requeue", "fault", scan=scan.label,
+                                   rg=scan.plan[seq],
+                                   error=type(exc).__name__)
+                    trace.registry().counter_inc("scheduler.requeues")
                     continue
                 # permanent: drop every shared-cache entry this scan's
                 # planner may have populated, then fail it in isolation

@@ -57,6 +57,7 @@ import threading
 import time
 from collections.abc import Sequence
 
+from repro.core import trace
 from repro.core.compression import inflate_backend
 
 DEFAULT_COALESCE_GAP = 64 * 1024
@@ -211,9 +212,14 @@ class RealStorage:
     def fetch(self, offset: int, size: int) -> bytes:
         t0 = time.perf_counter()
         data = os.pread(self._fd, size, offset)
-        dt = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        dt = t1 - t0
         with self._stats_lock:
             self.stats.add(FetchStats(1, len(data), dt, latencies=[dt]))
+        tr = trace.active()
+        if tr is not None:
+            tr.complete("storage_read", "io", t0, t1, backend=self.kind,
+                        offset=offset, bytes=len(data), n=1)
         return data
 
     def fetch_batch(self, requests: Sequence[tuple[int, int]]
@@ -225,13 +231,18 @@ class RealStorage:
             t_r = time.perf_counter()
             out.append(os.pread(self._fd, s, o))
             lats.append(time.perf_counter() - t_r)
-        dt = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        dt = t1 - t0
         with self._stats_lock:
             self.stats.add(FetchStats(len(requests),
                                       sum(len(d) for d in out), dt,
                                       batches=1,
                                       last_batch_requests=len(requests),
                                       latencies=lats))
+        tr = trace.active()
+        if tr is not None:
+            tr.complete("storage_read", "io", t0, t1, backend=self.kind,
+                        bytes=sum(len(d) for d in out), n=len(requests))
         return out, dt
 
 
@@ -280,15 +291,23 @@ class SimulatedStorage:
         return max(lanes) if lanes else 0.0
 
     def fetch(self, offset: int, size: int) -> bytes:
+        tr = trace.active()
+        t0 = time.perf_counter() if tr is not None else 0.0
         data = self._read(offset, size)
         dt = self.request_seconds(size)
         self._account(dt)
         with self._stats_lock:
             self.stats.add(FetchStats(1, len(data), dt, latencies=[dt]))
+        if tr is not None:
+            tr.complete("storage_read", "io", t0, time.perf_counter(),
+                        backend=self.kind, offset=offset,
+                        bytes=len(data), n=1, modeled_dt=dt)
         return data
 
     def fetch_batch(self, requests: Sequence[tuple[int, int]]
                     ) -> tuple[list[bytes], float]:
+        tr = trace.active()
+        t0 = time.perf_counter() if tr is not None else 0.0
         out = [self._read(o, s) for o, s in requests]
         dt = self.batch_seconds([s for _, s in requests])
         self._account(dt)
@@ -297,6 +316,10 @@ class SimulatedStorage:
                 len(requests), sum(len(d) for d in out), dt,
                 batches=1, last_batch_requests=len(requests),
                 latencies=[self.request_seconds(s) for _, s in requests]))
+        if tr is not None:
+            tr.complete("storage_read", "io", t0, time.perf_counter(),
+                        backend=self.kind, bytes=sum(len(d) for d in out),
+                        n=len(requests), modeled_dt=dt)
         return out, dt
 
     def _account(self, modeled_seconds: float) -> None:
@@ -471,6 +494,12 @@ class PrefetchingStorage:
             if accepted:
                 self._ensure_pool_locked()
                 self._queue_cv.notify_all()
+        if accepted:
+            tr = trace.active()
+            if tr is not None:
+                tr.instant("prefetch_issue", "io", n=accepted)
+            trace.registry().counter_inc("storage.prefetch_issued",
+                                         accepted)
         return accepted
 
     # -- consume ------------------------------------------------------------
@@ -511,8 +540,16 @@ class PrefetchingStorage:
                     self.inner.stats.add(FetchStats(
                         1, len(entry.data), entry.modeled_dt,
                         latencies=[entry.modeled_dt]))
+                tr = trace.active()
+                if tr is not None:
+                    tr.instant("prefetch_hit", "io", offset=offset,
+                               hidden=entry.modeled_dt - residual,
+                               stall=residual)
                 return entry.data
         self._note(misses=1)
+        tr = trace.active()
+        if tr is not None:
+            tr.instant("prefetch_miss", "io", offset=offset)
         return self.inner.fetch(offset, size)
 
     def fetch_batch(self, requests: Sequence[tuple[int, int]]
@@ -560,6 +597,11 @@ class PrefetchingStorage:
                     batches=0 if miss_idx else 1,
                     last_batch_requests=0 if miss_idx else len(requests),
                     latencies=[e.modeled_dt for e in hit_entries]))
+        tr = trace.active()
+        if tr is not None and (hit_entries or miss_idx):
+            tr.instant("prefetch_hit" if hit_entries else "prefetch_miss",
+                       "io", hits=len(hit_entries), misses=len(miss_idx),
+                       stall=max_residual)
         return out, time.perf_counter() - t0
 
 
@@ -579,13 +621,18 @@ class RetryPolicy:
     (a request that came back over budget counts as a timeout and is
     retried/raised) — it bounds how long a latency spike's bytes are
     trusted, which is the recoverable failure this layer owns; whole-scan
-    budgets are the scheduler's deadline (core/scheduler.py)."""
+    budgets are the scheduler's deadline (core/scheduler.py).
+
+    ``name`` identifies the policy in traces and ScanMetrics
+    (``retry_policy`` column) — "nvme" for the local default, "object"
+    for the remote profile (``backend_retry_policy``)."""
 
     attempts: int = 3
     base_delay: float = 0.001
     max_delay: float = 0.050
     jitter: float = 0.5
     timeout: float | None = None
+    name: str = "nvme"
 
     def delay(self, attempt: int, salt: int = 0) -> float:
         import zlib
@@ -598,7 +645,25 @@ class RetryPolicy:
 #: retries on by default: 3 tries heal any single-shot transient fault
 DEFAULT_RETRY_POLICY = RetryPolicy()
 
-NO_RETRY = RetryPolicy(attempts=1)
+#: remote profile (PR 8 carried follow-up): an object store's transient
+#: window is seconds, not microseconds — more attempts, backoff starting
+#: above the 8 ms first-byte latency (a faster retry just queues behind
+#: the same congested connection), and a per-request deadline generous
+#: enough for a slept multi-MiB coalesced read at 1.2 GB/s + spikes
+OBJECT_RETRY_POLICY = RetryPolicy(attempts=5, base_delay=0.025,
+                                  max_delay=1.0, timeout=10.0,
+                                  name="object")
+
+NO_RETRY = RetryPolicy(attempts=1, name="none")
+
+
+def backend_retry_policy(backend: str) -> RetryPolicy:
+    """Per-backend default RetryPolicy, the recovery sibling of
+    ``backend_io_defaults``: the NVMe policy for real/sim, the
+    longer-backoff/deadline remote policy for object."""
+    if backend == "object":
+        return OBJECT_RETRY_POLICY
+    return DEFAULT_RETRY_POLICY
 
 
 @dataclasses.dataclass
@@ -645,9 +710,17 @@ class RetryingStorage:
         if (self.policy.timeout is not None
                 and elapsed > self.policy.timeout):
             self._note(timeouts=1)
+            tr = trace.active()
+            if tr is not None:
+                tr.instant("fetch_timeout", "fault", offset=offset,
+                           elapsed=elapsed, budget=self.policy.timeout)
             raise FetchTimeout(offset, size, elapsed, self.policy.timeout)
         if len(data) < size:
             self._note(short_reads=1)
+            tr = trace.active()
+            if tr is not None:
+                tr.instant("short_read", "fault", offset=offset,
+                           want=size, got=len(data))
             raise ShortReadError(offset, size, len(data))
         return data
 
@@ -657,6 +730,12 @@ class RetryingStorage:
         for attempt in range(max(1, self.policy.attempts)):
             if attempt:
                 self._note(retries=1)
+                tr = trace.active()
+                if tr is not None:
+                    tr.instant("retry_attempt", "fault", offset=offset,
+                               attempt=attempt, policy=self.policy.name,
+                               error=type(last).__name__)
+                trace.registry().counter_inc("storage.retries")
                 time.sleep(self.policy.delay(attempt - 1, offset))
             try:
                 return self._fetch_once(offset, size)
@@ -682,6 +761,11 @@ class RetryingStorage:
         # The replay is itself one retry of the batch-shaped region, even
         # when every per-request fetch then succeeds first try.
         self._note(retries=1)
+        tr = trace.active()
+        if tr is not None:
+            tr.instant("retry_attempt", "fault", n=len(requests),
+                       policy=self.policy.name, batch=True)
+        trace.registry().counter_inc("storage.retries")
         t0 = time.perf_counter()
         out = [self.fetch(o, s) for o, s in requests]
         return out, time.perf_counter() - t0

@@ -35,6 +35,7 @@ from collections.abc import Callable
 
 import numpy as np
 
+from repro.core import trace as trace_mod
 from repro.core.faults import DeadlineExceeded, is_retryable
 from repro.core.overlap import Consume, RunReport, run_overlapped
 from repro.core.scan import Scanner
@@ -109,6 +110,11 @@ class DatasetRunReport:
     io_p50_us: float = 0.0
     io_p95_us: float = 0.0
     bytes_by_backend: dict = dataclasses.field(default_factory=dict)
+    # observability (core/trace.py, DESIGN.md §10; never gated): number of
+    # flight-recorder events captured during the run and the process-wide
+    # metrics-registry snapshot at run end (empty when tracing is off)
+    trace_events: int = 0
+    registry_snapshot: dict = dataclasses.field(default_factory=dict)
 
     @property
     def fragments_quarantined(self) -> int:
@@ -164,7 +170,8 @@ def run_dataset_scan(plan: DatasetScanPlan, consume: Consume | None = None,
                      open_opts: dict | None = None,
                      fragment_retries: int = 2,
                      on_error: str = "strict",
-                     retries: int = 3, deadline: float | None = None):
+                     retries: int = 3, deadline: float | None = None,
+                     trace=None):
     """Execute a planned dataset scan; returns ``(acc, DatasetRunReport)``.
 
     ``consume`` is the per-row-group reducer every fragment scan runs
@@ -184,11 +191,26 @@ def run_dataset_scan(plan: DatasetScanPlan, consume: Consume | None = None,
     result with the gap manifest in ``DatasetRunReport.quarantined``.
     ``retries``/``deadline`` are each fragment scan's per-scan budget
     (``run_overlapped`` contract); a ``DeadlineExceeded`` fragment is
-    never retried.
+    never retried.  ``trace`` enables the flight recorder for this run
+    (``core/trace.py``): True records, a path string records and exports
+    Chrome-trace JSON there on exit, None defers to ``REPRO_TRACE``.
     """
     if on_error not in ("strict", "best_effort"):
         raise ValueError(f"on_error must be 'strict' or 'best_effort', "
                          f"got {on_error!r}")
+    with trace_mod.request(trace):
+        return _run_dataset_scan(
+            plan, consume, combine, window=window, depth=depth,
+            decode_workers=decode_workers, service=service,
+            prioritize=prioritize, open_opts=open_opts,
+            fragment_retries=fragment_retries, on_error=on_error,
+            retries=retries, deadline=deadline)
+
+
+def _run_dataset_scan(plan: DatasetScanPlan, consume, combine, *,
+                      window, depth, decode_workers, service, prioritize,
+                      open_opts, fragment_retries, on_error, retries,
+                      deadline):
     opts = dict(DEFAULT_OPEN_OPTS, **(open_opts or {}))
     opts["columns"] = plan.columns
     n = len(plan.fragments)
@@ -229,7 +251,13 @@ def run_dataset_scan(plan: DatasetScanPlan, consume: Consume | None = None,
                     decode_workers=decode_workers, service=svc,
                     priority=pos if prioritize == "order" else 0,
                     retries=retries, deadline=deadline)
-                walls[pos] = time.perf_counter() - t0
+                t1 = time.perf_counter()
+                walls[pos] = t1 - t0
+                tr = trace_mod.active()
+                if tr is not None:
+                    tr.complete("fragment", "fragment", t0, t1,
+                                fragment=plan.fragments[pos].path,
+                                index=pos, attempt=attempt)
                 accs[pos] = acc
                 reports[pos] = report
                 if attempt:
@@ -245,6 +273,10 @@ def run_dataset_scan(plan: DatasetScanPlan, consume: Consume | None = None,
                  "attempts": min(attempt + 1, budget),
                  "error": repr(failure),
                  "error_type": type(failure).__name__}
+        tr = trace_mod.active()
+        if tr is not None:
+            tr.instant("quarantine", "fragment", **entry)
+        trace_mod.registry().counter_inc("executor.quarantined")
         with lock:
             frag_retries[0] += min(attempt, budget - 1)
             quarantined.append(entry)
@@ -268,7 +300,12 @@ def run_dataset_scan(plan: DatasetScanPlan, consume: Consume | None = None,
         t.start()
     for t in threads:
         t.join()
-    measured_wall = time.perf_counter() - t0
+    t_end = time.perf_counter()
+    measured_wall = t_end - t0
+    tr = trace_mod.active()
+    if tr is not None:
+        tr.complete("dataset_scan", "scan", t0, t_end,
+                    fragments=n, window=window)
     if errors:
         # structured report: every quarantined fragment, worst first; the
         # original failure is chained for its traceback
@@ -314,7 +351,7 @@ def _build_report(plan: DatasetScanPlan, *, measured_wall: float,
                   for r in done) / reqs
         p95 = sum(r.metrics.io_p95_us * r.metrics.n_io_requests
                   for r in done) / reqs
-    return DatasetRunReport(
+    rep = DatasetRunReport(
         files_total=plan.files_total, files_scanned=plan.files_scanned,
         pruned_partition=plan.pruned_partition,
         pruned_stats=plan.pruned_stats,
@@ -341,6 +378,11 @@ def _build_report(plan: DatasetScanPlan, *, measured_wall: float,
                                    for r in done),
         io_p50_us=p50, io_p95_us=p95,
         bytes_by_backend=bytes_by_backend)
+    tr = trace_mod.active()
+    if tr is not None:
+        rep.trace_events = tr.event_count()
+        rep.registry_snapshot = trace_mod.registry().snapshot()
+    return rep
 
 
 def run_distributed_scan(plan: DatasetScanPlan,
@@ -355,7 +397,7 @@ def run_distributed_scan(plan: DatasetScanPlan,
                          retries: int = 3, deadline: float | None = None,
                          fetch_threads: int | None = None,
                          prefetch_lookahead: int | None = None,
-                         steal: bool = True):
+                         steal: bool = True, trace=None):
     """Multi-device dataset scan; returns ``(acc, DatasetRunReport)``.
 
     The tentpole of DESIGN.md §8: surviving fragments are split into
@@ -386,8 +428,25 @@ def run_distributed_scan(plan: DatasetScanPlan,
     fragment) -> dict`` overlays per-fragment open options (the chaos
     tests aim a FaultPlan at one shard with it).  Failure policy matches
     ``run_dataset_scan``: per-fragment retry-then-quarantine,
-    strict/best_effort.
+    strict/best_effort.  ``trace`` enables the flight recorder for this
+    run (``run_dataset_scan`` contract).
     """
+    with trace_mod.request(trace):
+        return _run_distributed_scan(
+            plan, consume, combine, devices=devices, depth=depth,
+            decode_workers=decode_workers, open_opts=open_opts,
+            open_opts_for=open_opts_for,
+            fragment_retries=fragment_retries, on_error=on_error,
+            retries=retries, deadline=deadline,
+            fetch_threads=fetch_threads,
+            prefetch_lookahead=prefetch_lookahead, steal=steal)
+
+
+def _run_distributed_scan(plan: DatasetScanPlan, consume, combine, *,
+                          devices, depth, decode_workers, open_opts,
+                          open_opts_for, fragment_retries, on_error,
+                          retries, deadline, fetch_threads,
+                          prefetch_lookahead, steal):
     import jax
 
     from collections import deque
@@ -424,6 +483,11 @@ def run_distributed_scan(plan: DatasetScanPlan,
     weights = [max(1, f.stored_bytes) for f in plan.fragments]
     shards = contiguous_shards(weights, ndev)
     queues = [deque(range(lo, hi)) for lo, hi in shards]
+    tr0 = trace_mod.active()
+    if tr0 is not None:
+        for d, (lo, hi) in enumerate(shards):
+            tr0.instant("shard_assign", "fragment", device=d,
+                        lo=lo, hi=hi, fragments=hi - lo)
 
     accs: list[object] = [None] * n
     reports: list[RunReport | None] = [None] * n
@@ -456,8 +520,14 @@ def run_distributed_scan(plan: DatasetScanPlan,
                 victim = max(range(ndev), key=lambda j: len(queues[j]))
                 if queues[victim]:
                     stolen[0] += 1
-                    return queues[victim].pop()   # tail: farthest from
+                    pos = queues[victim].pop()    # tail: farthest from
                                                   # the victim's cursor
+                    tr = trace_mod.active()
+                    if tr is not None:
+                        tr.instant("steal", "fragment", thief=d,
+                                   victim=victim, index=pos)
+                    trace_mod.registry().counter_inc("executor.steals")
+                    return pos
             return None
 
     def prefetch_ahead(d: int, cache: dict) -> None:
@@ -494,7 +564,13 @@ def run_distributed_scan(plan: DatasetScanPlan,
                     predicate_stats=plan.predicate_stats, depth=depth,
                     decode_workers=decode_workers, service=services[d],
                     retries=retries, deadline=deadline)
-                walls[pos] = time.perf_counter() - t0
+                t1 = time.perf_counter()
+                walls[pos] = t1 - t0
+                tr = trace_mod.active()
+                if tr is not None:
+                    tr.complete("fragment", "fragment", t0, t1,
+                                fragment=plan.fragments[pos].path,
+                                index=pos, attempt=attempt, device=d)
                 accs[pos] = acc
                 reports[pos] = report
                 if attempt:
@@ -510,6 +586,10 @@ def run_distributed_scan(plan: DatasetScanPlan,
                  "attempts": min(attempt + 1, budget),
                  "error": repr(failure),
                  "error_type": type(failure).__name__}
+        tr = trace_mod.active()
+        if tr is not None:
+            tr.instant("quarantine", "fragment", device=d, **entry)
+        trace_mod.registry().counter_inc("executor.quarantined")
         with lock:
             frag_retries[0] += min(attempt, budget - 1)
             quarantined.append(entry)
@@ -539,7 +619,12 @@ def run_distributed_scan(plan: DatasetScanPlan,
         t.start()
     for t in threads:
         t.join()
-    measured_wall = time.perf_counter() - t0
+    t_end = time.perf_counter()
+    measured_wall = t_end - t0
+    tr = trace_mod.active()
+    if tr is not None:
+        tr.complete("distributed_scan", "scan", t0, t_end,
+                    fragments=n, devices=ndev, stolen=stolen[0])
     for svc in services:
         if svc is not None:
             svc.shutdown()

@@ -21,6 +21,8 @@ import threading
 import jax
 import jax.numpy as jnp
 
+from repro.core import trace
+
 MB_GROUPS = 8          # packing groups per DELTA miniblock (256 values)
 MB_VALUES = 256
 BLOCK_VALUES = 1024
@@ -41,6 +43,10 @@ def count_launch(n: int = 1) -> None:
     global _kernel_launches
     with _launch_lock:
         _kernel_launches += n
+    tr = trace.active()
+    if tr is not None:
+        tr.instant("kernel_launch", "kernel", n=n)
+        trace.registry().counter_inc("kernels.launches", n)
 
 
 def kernel_launch_count() -> int:

@@ -1,0 +1,448 @@
+"""Flight recorder + metrics registry (core/trace.py, DESIGN.md §10):
+off-by-default, bounded buffers, span well-formedness under concurrent
+scans, reconciliation of traced spans against ScanMetrics, bit-identity
+with tracing on vs off on the fused and unfused paths, backend-aware
+retry-policy defaults, and tools/trace_report.py's bucket attribution."""
+
+import json
+import os
+import sys
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import trace
+from repro.core.config import ACCELERATOR_OPTIMIZED
+from repro.core.overlap import run_blocking, run_overlapped
+from repro.core.query import Q6_COLUMNS, q6
+from repro.core.scan import Scanner, open_scanner
+from repro.core.storage import (DEFAULT_RETRY_POLICY, NO_RETRY,
+                                OBJECT_RETRY_POLICY, ObjectStoreStorage,
+                                SimulatedStorage, backend_retry_policy)
+from repro.core.table import Table
+from repro.core.writer import write_table
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tools"))
+import trace_report  # noqa: E402
+
+CFG = ACCELERATOR_OPTIMIZED.replace(rows_per_rg=1_500,
+                                    target_pages_per_chunk=2)
+
+
+@pytest.fixture(autouse=True)
+def _clean_trace_state():
+    """Every test starts and ends with the recorder off and the env
+    unresolved — tracing state is process-global."""
+    trace.reset()
+    yield
+    trace.reset()
+
+
+def _table(n=9_000, seed=0):
+    rng = np.random.default_rng(seed)
+    return Table({"k": rng.integers(0, 50, n).astype(np.int64),
+                  "v": rng.normal(size=n).astype(np.float32)})
+
+
+@pytest.fixture()
+def tab_file(tmp_path):
+    path = str(tmp_path / "t.tab")
+    write_table(_table(), path, CFG)
+    return path
+
+
+def _sum_consume(acc, rg, cols):
+    s = float(np.asarray(cols["v"].array[:cols["v"].n_values]).sum())
+    return (acc or 0.0) + s
+
+
+# -- enablement --------------------------------------------------------------
+
+def test_off_by_default(tab_file, monkeypatch):
+    monkeypatch.delenv("REPRO_TRACE", raising=False)
+    trace.reset()
+    assert trace.active() is None
+    sc = open_scanner(tab_file, columns=["v"], decode_backend="host")
+    _, rep = run_overlapped(sc, _sum_consume, decode_workers=2)
+    assert trace.active() is None
+    assert rep.metrics.trace_events == 0
+    assert rep.metrics.registry_snapshot == {}
+
+
+def test_env_var_enables(monkeypatch):
+    monkeypatch.setenv("REPRO_TRACE", "1")
+    trace.reset()
+    assert trace.active() is not None
+    monkeypatch.setenv("REPRO_TRACE", "0")
+    trace.reset()
+    assert trace.active() is None
+
+
+def test_enable_disable_idempotent():
+    tr = trace.enable()
+    assert trace.enable() is tr          # idempotent
+    assert trace.active() is tr
+    trace.disable()
+    assert trace.active() is None
+    tr.complete("late", "io", 0.0, 1.0)  # held reference stays usable
+    assert tr.event_count() == 1
+
+
+def test_request_context_enables_and_exports(tab_file, tmp_path):
+    out = str(tmp_path / "run.json")
+    sc = open_scanner(tab_file, columns=["v"], decode_backend="host")
+    _, rep = run_overlapped(sc, _sum_consume, decode_workers=2,
+                            trace=out)
+    assert trace.active() is None        # last request turned it off
+    assert rep.metrics.trace_events > 0
+    doc = trace_report.load_trace(out)
+    assert trace_report.validate_trace(doc) == []
+    names = {e["name"] for e in doc["traceEvents"]}
+    assert {"fetch", "consume", "scan"} <= names
+
+
+def test_request_none_is_noop(tab_file):
+    sc = open_scanner(tab_file, columns=["v"], decode_backend="host")
+    _, rep = run_overlapped(sc, _sum_consume, decode_workers=2,
+                            trace=None)
+    assert trace.active() is None
+    assert rep.metrics.trace_events == 0
+
+
+# -- bounded buffers ---------------------------------------------------------
+
+def test_global_cap_bounds_and_counts_drops():
+    tr = trace.Tracer(cap=32)
+    for i in range(100):
+        tr.instant("e", "io", i=i)
+    assert tr.event_count() == 32
+    assert tr.dropped == 68
+    assert tr.to_chrome()["otherData"]["dropped"] == 68
+
+
+def test_per_scan_cap_protects_other_scans():
+    tr = trace.Tracer(cap=64)            # scan_cap = 32
+    for _ in range(50):
+        tr.instant("e", "io", scan="chatty")
+    assert tr.dropped_by_scan["chatty"] == 50 - tr.scan_cap
+    tr.instant("e", "io", scan="quiet")  # still admitted
+    by_scan = [e.args.get("scan") for e in tr.events()]
+    assert by_scan.count("chatty") == tr.scan_cap
+    assert by_scan.count("quiet") == 1
+
+
+def test_clear_resets_buffer_and_drops():
+    tr = trace.Tracer(cap=16)
+    for _ in range(40):
+        tr.instant("e", "io", scan="s")
+    tr.clear()
+    assert tr.event_count() == 0
+    assert tr.dropped == 0
+    tr.instant("e", "io", scan="s")
+    assert tr.event_count() == 1
+
+
+# -- metrics registry --------------------------------------------------------
+
+def test_registry_counters_gauges_histograms():
+    reg = trace.MetricsRegistry()
+    reg.counter_inc("a")
+    reg.counter_inc("a", 4)
+    reg.gauge_set("g", 7)
+    for v in (1.0, 3.0, 2.0):
+        reg.observe("h", v)
+    snap = reg.snapshot()
+    assert snap["counters"]["a"] == 5
+    assert snap["gauges"]["g"] == 7
+    h = snap["histograms"]["h"]
+    assert (h["count"], h["sum"], h["min"], h["max"]) == (3, 6.0, 1.0, 3.0)
+    assert h["mean"] == pytest.approx(2.0)
+    reg.clear()
+    assert reg.snapshot() == {"counters": {}, "gauges": {},
+                              "histograms": {}}
+
+
+def test_registry_snapshot_lands_in_scan_metrics(tab_file):
+    trace.enable()
+    sc = open_scanner(tab_file, columns=["v"], decode_backend="host")
+    _, rep = run_overlapped(sc, _sum_consume, decode_workers=2)
+    snap = rep.metrics.registry_snapshot
+    assert "scheduler.fetch_wall_s" in snap["histograms"]
+    assert snap["histograms"]["scheduler.fetch_wall_s"]["count"] \
+        == rep.metrics.n_row_groups
+
+
+# -- reconciliation: traced spans vs ScanMetrics -----------------------------
+
+def _spans(tr, name):
+    return [e for e in tr.events() if e.name == name and e.ph == "X"]
+
+
+def test_reconciliation_service_path(tab_file):
+    tr = trace.enable()
+    sc = open_scanner(tab_file, columns=["v"], decode_backend="host")
+    _, rep = run_overlapped(sc, _sum_consume, decode_workers=2)
+    m = rep.metrics
+    # the fetch span carries the same io_dt float appended to io_per_rg
+    fetched = sorted(e.args["io_dt"] for e in _spans(tr, "fetch"))
+    assert fetched == sorted(m.io_per_rg)
+    # decode items' durations ARE the chunk_times floats -> per-RG sums
+    # reconcile with decode_per_rg (fp accumulation order may differ)
+    per_rg: dict[int, float] = {}
+    for e in tr.events():
+        if e.cat == "decode" and e.ph == "X":
+            per_rg[e.args["rg"]] = per_rg.get(e.args["rg"], 0.0) + e.dur
+    assert len(per_rg) == m.n_row_groups
+    for dec, rg in zip(m.decode_per_rg, sorted(per_rg)):
+        assert per_rg[rg] == pytest.approx(dec, rel=1e-9, abs=1e-12)
+    # consume spans share their stamps with consume_seconds exactly
+    assert sum(e.dur for e in _spans(tr, "consume")) \
+        == pytest.approx(m.consume_seconds, rel=1e-9)
+    # the whole-run span IS the measured wall
+    (scan_span,) = _spans(tr, "scan")
+    assert scan_span.dur == pytest.approx(rep.measured_wall, rel=1e-9)
+    assert scan_span.args["mode"] == "overlapped"
+    assert m.trace_events == tr.event_count()
+
+
+def test_reconciliation_blocking_path(tab_file):
+    tr = trace.enable()
+    sc = open_scanner(tab_file, columns=["v"], decode_backend="host")
+    _, rep = run_blocking(sc, _sum_consume)
+    m = rep.metrics
+    assert sorted(e.args["io_dt"] for e in _spans(tr, "fetch")) \
+        == sorted(m.io_per_rg)
+    # decode_rg spans bracket scanner.decode_rg: their sum is the decode
+    # stage wall (host-measured), within accumulation tolerance
+    assert sum(e.dur for e in _spans(tr, "decode_rg")) \
+        == pytest.approx(m.decode_wall_seconds, rel=1e-9)
+    (scan_span,) = _spans(tr, "scan")
+    assert scan_span.args["mode"] == "blocking"
+    assert scan_span.dur == pytest.approx(rep.measured_wall, rel=1e-9)
+
+
+def test_reconciliation_inline_path(tab_file):
+    tr = trace.enable()
+    sc = open_scanner(tab_file, columns=["v"], decode_backend="host")
+    _, rep = run_overlapped(sc, _sum_consume, decode_workers=0)
+    (scan_span,) = _spans(tr, "scan")
+    assert scan_span.args["mode"] == "overlapped-inline"
+    assert scan_span.dur == pytest.approx(rep.measured_wall, rel=1e-9)
+    assert sum(e.dur for e in _spans(tr, "decode_rg")) \
+        == pytest.approx(rep.metrics.decode_wall_seconds, rel=1e-9)
+
+
+# -- well-formedness under concurrency ---------------------------------------
+
+def test_spans_well_formed_under_concurrent_scans(tmp_path):
+    paths = []
+    for k in range(3):
+        p = str(tmp_path / f"t{k}.tab")
+        write_table(_table(seed=k), p, CFG)
+        paths.append(p)
+    tr = trace.enable()
+    errors: list[BaseException] = []
+
+    def one(p):
+        try:
+            sc = open_scanner(p, columns=["v"], decode_backend="host")
+            run_overlapped(sc, _sum_consume, decode_workers=2)
+        except BaseException as e:  # noqa: BLE001 — surfaced below
+            errors.append(e)
+
+    threads = [threading.Thread(target=one, args=(p,)) for p in paths]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    events = tr.events()
+    assert all(e.ts >= 0 and e.dur >= 0 for e in events)
+    assert all(e.ph in ("X", "i") for e in events)
+    # one balanced whole-run span per scan, each attributing its file
+    scans = [e for e in events if e.name == "scan"]
+    assert sorted(e.args["scan"] for e in scans) == sorted(paths)
+    # the export round-trips through the validator cleanly
+    doc = tr.to_chrome()
+    assert trace_report.validate_trace(doc) == []
+
+
+def test_chrome_event_format():
+    tr = trace.Tracer()
+    tr.complete("s", "io", tr.epoch + 0.001, tr.epoch + 0.003, rg=1)
+    tr.instant("i", "fault")
+    doc = tr.to_chrome()
+    span, inst = doc["traceEvents"]
+    assert span["ph"] == "X"
+    assert span["dur"] == pytest.approx(2_000.0)   # µs
+    assert span["ts"] == pytest.approx(1_000.0)
+    assert span["args"] == {"rg": 1}
+    assert inst["ph"] == "i" and inst["s"] == "t"
+    assert doc["displayTimeUnit"] == "ms"
+    assert "registry" in doc["otherData"]
+
+
+# -- bit-identity: tracing must not change results ---------------------------
+
+@pytest.mark.parametrize("fused", [False, True])
+def test_bit_identity_tracing_on_off(tmp_path_factory, fused):
+    d = tmp_path_factory.mktemp("trace_q6")
+    from repro.data import tpch
+    tpch.write_tpch(str(d), sf=0.002, config=CFG, seed=5)
+    path = str(d / "lineitem.tab")
+
+    def run():
+        sc = open_scanner(path, columns=Q6_COLUMNS,
+                          decode_backend="host")
+        return q6(sc, overlapped=True, decode_workers=2, fused=fused)
+
+    res_off, rep_off = run()
+    tr = trace.enable()
+    res_on, rep_on = run()
+    trace.disable()
+    assert np.float64(res_on).tobytes() == np.float64(res_off).tobytes()
+    assert rep_on.metrics.n_io_requests == rep_off.metrics.n_io_requests
+    assert rep_on.metrics.trace_events > 0
+    assert rep_off.metrics.trace_events == 0
+    if fused:
+        # the fused stage records its phase-3 items under the recorder
+        names = {e.name for e in tr.events()}
+        assert "fused" in names or "decode" in names
+
+
+# -- backend-aware retry-policy defaults (satellite: object-store) -----------
+
+def test_backend_retry_policy_profiles():
+    assert backend_retry_policy("object") is OBJECT_RETRY_POLICY
+    assert backend_retry_policy("real") is DEFAULT_RETRY_POLICY
+    assert backend_retry_policy("sim") is DEFAULT_RETRY_POLICY
+    assert OBJECT_RETRY_POLICY.name == "object"
+    assert DEFAULT_RETRY_POLICY.name == "nvme"
+    assert NO_RETRY.name == "none"
+    # object-store profile: more attempts, longer backoff, wider budget
+    assert OBJECT_RETRY_POLICY.attempts > DEFAULT_RETRY_POLICY.attempts
+    assert OBJECT_RETRY_POLICY.base_delay > DEFAULT_RETRY_POLICY.base_delay
+    assert OBJECT_RETRY_POLICY.timeout > (DEFAULT_RETRY_POLICY.timeout
+                                          or 0.0)
+
+
+def test_scanner_defaults_retry_policy_by_backend(tab_file):
+    sc_nvme = Scanner(tab_file, columns=["v"],
+                      storage=SimulatedStorage(tab_file))
+    assert sc_nvme.retry.name == "nvme"
+    sc_obj = Scanner(tab_file, columns=["v"],
+                     storage=ObjectStoreStorage(tab_file))
+    assert sc_obj.retry.name == "object"
+    assert sc_obj.retry.attempts == OBJECT_RETRY_POLICY.attempts
+    explicit = Scanner(tab_file, columns=["v"],
+                       storage=ObjectStoreStorage(tab_file),
+                       retry=NO_RETRY)
+    assert explicit.retry.name == "none"
+
+
+def test_retry_policy_name_lands_in_metrics(tab_file):
+    sc = open_scanner(tab_file, columns=["v"], decode_backend="host")
+    _, rep = run_overlapped(sc, _sum_consume, decode_workers=2)
+    assert rep.metrics.retry_policy == "nvme"
+    sc2 = open_scanner(tab_file, columns=["v"], decode_backend="host")
+    _, rep2 = run_blocking(sc2, _sum_consume)
+    assert rep2.metrics.retry_policy == "nvme"
+
+
+# -- trace_report ------------------------------------------------------------
+
+def _synthetic_doc():
+    """scan 0-100ms; fetch 0-20; decode 10-50; consume 50-80 →
+    fetch 10ms, decode 40ms, consume 30ms, stall 20ms."""
+    tr = trace.Tracer()
+    e = tr.epoch
+    tr.complete("scan", "scan", e, e + 0.100, scan="s")
+    tr.complete("fetch", "io", e, e + 0.020, scan="s", rg=0, io_dt=0.02)
+    tr.complete("decode", "decode", e + 0.010, e + 0.050, scan="s", rg=0)
+    tr.complete("consume", "consume", e + 0.050, e + 0.080, scan="s",
+                rg=0, logical_bytes=1_000_000)
+    return tr.to_chrome()
+
+
+def test_trace_report_bucket_attribution_partitions_wall():
+    rep = trace_report.build_report(_synthetic_doc())
+    b = rep["buckets_us"]
+    assert rep["wall_us"] == pytest.approx(100_000.0, rel=1e-6)
+    assert b["fetch"] == pytest.approx(10_000.0, rel=1e-6)
+    assert b["decode"] == pytest.approx(40_000.0, rel=1e-6)
+    assert b["consume"] == pytest.approx(30_000.0, rel=1e-6)
+    assert b["stall"] == pytest.approx(20_000.0, rel=1e-6)
+    assert sum(b.values()) == pytest.approx(rep["wall_us"], rel=1e-9)
+    assert rep["bottleneck"] == "decode"
+
+
+def test_trace_report_critical_path_and_bandwidth():
+    rep = trace_report.build_report(_synthetic_doc())
+    longest = rep["critical_path"]["longest"]
+    assert longest["rg"] == 0
+    assert longest["total"] == pytest.approx(20_000 + 40_000 + 30_000,
+                                             rel=1e-6)
+    bw = rep["bandwidth"]
+    assert bw["logical_bytes"] == 1_000_000
+    assert bw["effective_bw_mbps"] == pytest.approx(10.0, rel=1e-3)
+
+
+def test_trace_report_validator_rejects_malformed():
+    assert trace_report.validate_trace({"traceEvents": "nope"})
+    bad_dur = {"traceEvents": [
+        {"name": "x", "ph": "X", "ts": 0, "dur": -5, "pid": 1, "tid": 1}],
+        "displayTimeUnit": "ms"}
+    assert any("dur" in e for e in trace_report.validate_trace(bad_dur))
+    unbalanced = {"traceEvents": [
+        {"name": "b", "ph": "B", "ts": 0, "pid": 1, "tid": 1}],
+        "displayTimeUnit": "ms"}
+    assert any("unclosed" in e
+               for e in trace_report.validate_trace(unbalanced))
+    bad_ph = {"traceEvents": [
+        {"name": "x", "ph": "Q", "ts": 0, "pid": 1, "tid": 1}],
+        "displayTimeUnit": "ms"}
+    assert any("ph" in e for e in trace_report.validate_trace(bad_ph))
+
+
+def test_trace_report_on_real_export(tab_file, tmp_path):
+    out = str(tmp_path / "real.json")
+    tr = trace.enable()
+    sc = open_scanner(tab_file, columns=["v"], decode_backend="host")
+    _, rep = run_overlapped(sc, _sum_consume, decode_workers=2)
+    tr.export(out)
+    trace.disable()
+    doc = trace_report.load_trace(out)
+    assert trace_report.validate_trace(doc) == []
+    r = trace_report.build_report(doc)
+    assert r["wall_us"] == pytest.approx(rep.measured_wall * 1e6,
+                                         rel=0.10)
+    assert r["bottleneck"] in ("fetch", "decompress", "decode",
+                               "consume", "stall")
+    assert sum(r["buckets_us"].values()) \
+        == pytest.approx(r["wall_us"], rel=1e-6)
+    assert r["dropped"] == 0
+    with open(out, encoding="utf-8") as f:
+        assert json.load(f)["displayTimeUnit"] == "ms"
+
+
+# -- dataset layer -----------------------------------------------------------
+
+def test_dataset_scan_trace_kwarg(tmp_path):
+    from repro.dataset import plan_dataset_scan, write_dataset
+    from repro.dataset.executor import run_dataset_scan
+    line = _table(n=6_000, seed=3)
+    ds = write_dataset(line, str(tmp_path / "ds"), CFG,
+                       partition_by="k", how="range", fragments=2)
+    plan = plan_dataset_scan(ds, columns=["v"])
+    out = str(tmp_path / "ds.json")
+    _, rep = run_dataset_scan(
+        plan, _sum_consume, lambda a, b: a + b, window=2,
+        open_opts={"decode_backend": "host"}, trace=out)
+    assert trace.active() is None
+    assert rep.trace_events > 0
+    assert rep.registry_snapshot
+    doc = trace_report.load_trace(out)
+    assert trace_report.validate_trace(doc) == []
+    names = {e["name"] for e in doc["traceEvents"]}
+    assert {"fragment", "dataset_scan"} <= names

@@ -228,6 +228,36 @@ def main() -> int:
               f"(retries={repx.retries}, "
               f"quarantined={repx.fragments_quarantined})")
 
+        # -- trace leg: injected faults must be visible as spans -------
+        # Re-run the faulted Q6 with the flight recorder on (DESIGN.md
+        # §10): the seeded transient faults must surface as
+        # fault_injected instants and recovery must surface as
+        # requeue / retry_attempt events — a chaos run whose trace shows
+        # no fault activity means the recorder lost the failure story.
+        from repro.core import trace as trace_mod
+
+        _clear_decoded_caches()
+        tr = trace_mod.enable()
+        tr.clear()
+        q6_traced, rept = q6(open_l(_fault_plan(args.seed)),
+                             overlapped=True, decode_workers=2)
+        names = {e.name for e in tr.events()}
+        trace_mod.disable()
+        trace_mod.reset()
+        if q6_traced != q6_clean:
+            failures.append(f"traced chaos q6 diverged: {q6_traced!r} "
+                            f"!= {q6_clean!r}")
+        if "fault_injected" not in names:
+            failures.append(f"traced chaos run shows no fault_injected "
+                            f"events (saw {sorted(names)})")
+        if not names & {"requeue", "retry_attempt"}:
+            failures.append(f"traced chaos run shows no recovery spans "
+                            f"(requeue/retry_attempt; saw "
+                            f"{sorted(names)})")
+        print(f"[chaos] trace leg: faults visible as spans "
+              f"(retries={rept.metrics.retries}, "
+              f"events={rept.metrics.trace_events})")
+
         # -- CRC verification overhead gate ----------------------------
         def best_wall() -> float:
             best = float("inf")

@@ -1,0 +1,190 @@
+"""CI observability gate: the flight recorder must be correct and cheap.
+
+Runs the smoke Q6 dataset scan (the same shape the chaos gate uses)
+twice — tracing off, tracing on — and fails unless (DESIGN.md §10):
+
+  * the traced result is **bit-identical** to the untraced run and the
+    gated counters (kernel launches, io_requests) are exactly equal —
+    observation must not perturb the observed schedule's accounting,
+  * the exported Chrome JSON passes ``tools/trace_report.py``'s schema
+    validation (no negative durations, balanced spans, known phases),
+  * ``trace_report`` reproduces the run's measured wall within
+    ``--wall-tolerance`` (default 10%) and names a bottleneck stage,
+  * tracing-on wall is within ``--threshold`` (default 5%) of
+    tracing-off wall, measured min-of-rounds with a small absolute
+    slack for tiny-SF scheduler noise (the CRC-gate pattern).
+
+The gate drives the recorder explicitly (``trace.enable``/``disable``),
+so it behaves identically under ``REPRO_TRACE=1`` — the CI leg sets it
+to also exercise the env-resolution path on the first ``active()``.
+
+Usage:
+    PYTHONPATH=src JAX_PLATFORMS=cpu python tools/trace_check.py
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import struct
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import trace_report  # noqa: E402  (tools/ sibling, not a package)
+
+
+def _clear_decoded_caches():
+    from repro.core.compression import chunk_decompress_memo
+    from repro.kernels.dict_decode import dict_cache_clear
+    chunk_decompress_memo().clear()
+    dict_cache_clear()
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sf", type=float,
+                    default=float(os.environ.get("TRACE_SF", "0.005")))
+    ap.add_argument("--rounds", type=int,
+                    default=int(os.environ.get("TRACE_ROUNDS", "3")))
+    ap.add_argument("--threshold", type=float,
+                    default=float(os.environ.get("TRACE_THRESHOLD",
+                                                 "0.05")),
+                    help="max tracing-on wall overhead vs tracing-off")
+    ap.add_argument("--slack-us", type=float, default=5_000.0,
+                    help="absolute wall slack for the overhead gate "
+                         "(tiny-SF scheduler noise floor)")
+    ap.add_argument("--wall-tolerance", type=float, default=0.10,
+                    help="trace_report wall must match the measured "
+                         "run wall within this fraction")
+    args = ap.parse_args()
+
+    from repro.core import trace
+    from repro.core.config import ACCELERATOR_OPTIMIZED
+    from repro.core.query import q6
+    from repro.data import tpch
+    from repro.dataset import write_dataset
+
+    failures: list[str] = []
+    cfg = ACCELERATOR_OPTIMIZED.replace(rows_per_rg=3_000,
+                                        target_pages_per_chunk=2)
+    open_opts = {"decode_backend": "host"}
+
+    with tempfile.TemporaryDirectory(prefix="trace_") as root:
+        line, _ = tpch.generate_tables(sf=args.sf, seed=1,
+                                       include_strings=False)
+        ds = write_dataset(line, os.path.join(root, "ds"), cfg,
+                           partition_by="l_shipdate", how="range",
+                           fragments=4)
+
+        def run():
+            _clear_decoded_caches()
+            t0 = time.perf_counter()
+            res, rep = q6(ds, prune=True, window=4, open_opts=open_opts)
+            return res, rep, time.perf_counter() - t0
+
+        # warm jits/caches so neither leg pays one-time compilation
+        run()
+
+        # -- identity leg: tracing must not change what is observed ----
+        trace.disable()
+        res_off, rep_off, _ = run()
+        tr = trace.enable()
+        tr.clear()
+        res_on, rep_on, _ = run()
+        trace_path = os.path.join(root, "trace_q6.json")
+        tr.export(trace_path)
+        trace.disable()
+
+        if struct.pack("<d", res_on) != struct.pack("<d", res_off):
+            failures.append(f"traced result diverged: {res_on!r} != "
+                            f"{res_off!r}")
+        if rep_on.n_kernel_launches != rep_off.n_kernel_launches:
+            failures.append(
+                f"tracing changed kernel launches: "
+                f"{rep_on.n_kernel_launches} != "
+                f"{rep_off.n_kernel_launches}")
+        if rep_on.n_io_requests != rep_off.n_io_requests:
+            failures.append(f"tracing changed io_requests: "
+                            f"{rep_on.n_io_requests} != "
+                            f"{rep_off.n_io_requests}")
+        if rep_on.trace_events <= 0:
+            failures.append("traced run recorded no events")
+        if rep_off.trace_events != 0:
+            failures.append(f"untraced run recorded "
+                            f"{rep_off.trace_events} events")
+        print(f"[trace] traced run bit-identical "
+              f"(launches={rep_on.n_kernel_launches}, "
+              f"io_requests={rep_on.n_io_requests}, "
+              f"events={rep_on.trace_events})")
+
+        # -- schema + report leg ---------------------------------------
+        doc = trace_report.load_trace(trace_path)
+        errors = trace_report.validate_trace(doc)
+        if errors:
+            failures.append(f"exported trace failed schema validation: "
+                            f"{errors[:5]}")
+        else:
+            rep = trace_report.build_report(doc)
+            measured_us = rep_on.measured_wall * 1e6
+            lo = measured_us * (1.0 - args.wall_tolerance)
+            hi = measured_us * (1.0 + args.wall_tolerance)
+            if not lo <= rep["wall_us"] <= hi:
+                failures.append(
+                    f"trace_report wall {rep['wall_us']:.0f}us outside "
+                    f"±{args.wall_tolerance * 100:.0f}% of measured "
+                    f"{measured_us:.0f}us")
+            known = ("fetch", "decompress", "decode", "consume", "stall")
+            if rep["bottleneck"] not in known:
+                failures.append(f"trace_report named no bottleneck "
+                                f"stage: {rep['bottleneck']!r}")
+            if rep["dropped"]:
+                failures.append(f"smoke trace dropped {rep['dropped']} "
+                                f"events (cap too small for smoke?)")
+            print(f"[trace] schema ok; report wall "
+                  f"{rep['wall_us'] / 1e3:.2f}ms vs measured "
+                  f"{measured_us / 1e3:.2f}ms, bottleneck="
+                  f"{rep['bottleneck']}")
+
+        # -- overhead gate (min-of-rounds, CRC-gate pattern) -----------
+        def best_wall() -> float:
+            best = float("inf")
+            for _ in range(max(1, args.rounds)):
+                _, _, wall = run()
+                best = min(best, wall)
+            return best
+
+        trace.disable()
+        off_wall = best_wall()
+        tr = trace.enable()
+        tr.clear()
+        on_wall = best_wall()
+        trace.disable()
+        trace.reset()
+        budget = off_wall * (1.0 + args.threshold) \
+            + args.slack_us * 1e-6
+        print(f"[trace] overhead: on {on_wall * 1e6:.0f}us vs off "
+              f"{off_wall * 1e6:.0f}us (budget {budget * 1e6:.0f}us, "
+              f"min of {args.rounds} rounds)")
+        if on_wall > budget:
+            failures.append(
+                f"tracing overhead exceeds its budget: "
+                f"{on_wall * 1e6:.0f}us > {budget * 1e6:.0f}us "
+                f"(tracing-off {off_wall * 1e6:.0f}us "
+                f"+{args.threshold * 100:.0f}% "
+                f"+{args.slack_us:.0f}us slack)")
+
+    if failures:
+        print("[trace] FAIL")
+        for f in failures:
+            print(" ", f)
+        return 1
+    print("[trace] ok — tracing is bit-transparent, schema-valid, "
+          "reconciles with the measured wall, and stays within budget")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
