@@ -22,6 +22,14 @@ a scan subscribes to an already-in-flight fetch+decode job for the same
 service arm's fetched-request count (``io_fetched``) can only ever be
 *lower* than the sequential arm's gated ``io_requests``.
 
+The multi-tenant front end (DESIGN.md §11) adds mixed-tenant rows at
+serving fan-out (N ∈ {16, 64}: gold weight 4 / bronze weight 1 through
+one windowed service — per-class p50/p95/p99 latencies and window/share
+counters, with a cold sequential companion row carrying the gated
+deterministic counts) and the ``conc_q6_window_repeat`` pin: a repeat
+identical Q6 after the first completes must be served from the
+delivered-result window with ``io_requests=0`` (gated exact).
+
 Best-of-BENCH_ROUNDS like every suite; rounds interleave the sequential
 and concurrent arms so a noisy scheduler window penalizes both equally.
 Smoke mode (CI) runs N = 4 only (the gated rows).
@@ -124,6 +132,116 @@ def _emit_pair(name: str, n: int, service: ScanService, make_job,
         emit(f"conc_{name}_n{n}_{arm}", agg * 1e6, derived)
 
 
+def _emit_mixed(name: str, n: int, lpath: str, rounds: int) -> None:
+    """Mixed-tenant serving shape (DESIGN.md §11): n identical Q6 scans,
+    alternately submitted by a weight-4 ``gold`` and a weight-1
+    ``bronze`` tenant through one windowed multi-tenant service.
+
+    Two rows per n: the cold **sequential** companion arm clears the
+    delivered-result window before every scan, so its launch/io_request
+    totals are deterministic (gated exact); the **service** arm runs all
+    n concurrently with the window live and reports per-class latency
+    percentiles plus window/sharing counters — informational (thread
+    timing), the fetch count can only ever be lower than the gated
+    sequential count."""
+    best: dict[str, tuple] = {}
+    for _ in range(rounds):
+        # -- gated cold sequential arm ---------------------------------
+        svc = ScanService(window_bytes=64 << 20)
+        svc.register_tenant("gold", weight=4)
+        svc.register_tenant("bronze", weight=1)
+        launches0 = kernel_launch_count()
+        io_total = 0
+        t0 = time.perf_counter()
+        for k in range(n):
+            svc.clear_delivered_window()          # every scan runs cold
+            _, rep = q6(_q6_scanner(lpath), prune=False, service=svc,
+                        tenant="gold" if k % 2 == 0 else "bronze")
+            io_total += rep.metrics.n_io_requests
+        agg = time.perf_counter() - t0
+        counters = {"launches": kernel_launch_count() - launches0,
+                    "io_requests": io_total}
+        svc.shutdown()
+        if "seq" not in best or agg < best["seq"][0]:
+            best["seq"] = (agg, counters)
+
+        # -- concurrent mixed-tenant arm (window live) -----------------
+        svc = ScanService(window_bytes=64 << 20)
+        svc.register_tenant("gold", weight=4)
+        svc.register_tenant("bronze", weight=1)
+        walls: dict[str, list[float]] = {"gold": [], "bronze": []}
+        io_fetched = [0]
+        lock = threading.Lock()
+
+        def one(k: int) -> None:
+            tenant = "gold" if k % 2 == 0 else "bronze"
+            t1 = time.perf_counter()
+            _, rep = q6(_q6_scanner(lpath), prune=False, service=svc,
+                        tenant=tenant)
+            dt = time.perf_counter() - t1
+            with lock:
+                walls[tenant].append(dt)
+                io_fetched[0] += rep.metrics.n_io_requests
+
+        t0 = time.perf_counter()
+        threads = [threading.Thread(target=one, args=(k,))
+                   for k in range(n)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        agg = time.perf_counter() - t0
+        stats = {"io_fetched": io_fetched[0],
+                 "window_hits": svc.window_hits,
+                 "shared_rgs": svc.shared_rgs}
+        svc.shutdown()
+        if "service" not in best or agg < best["service"][0]:
+            best["service"] = (agg, walls, stats)
+
+    seq_agg, seq_counters = best["seq"]
+    emit(f"conc_mixed_{name}_n{n}_seq", seq_agg * 1e6,
+         f"launches={seq_counters['launches']};"
+         f"io_requests={seq_counters['io_requests']};"
+         f"n={n};measured")
+    agg, walls, stats = best["service"]
+    pct = {f"{cls}_p{p}_us": np.percentile(ws, p) * 1e6
+           for cls, ws in walls.items() for p in (50, 95, 99)}
+    emit(f"conc_mixed_{name}_n{n}_service", agg * 1e6,
+         ";".join(f"{k}={v:.0f}" for k, v in pct.items()) + ";"
+         f"io_fetched={stats['io_fetched']};"
+         f"window_hits={stats['window_hits']};"
+         f"shared_rgs={stats['shared_rgs']};"
+         f"speedup_vs_seq={seq_agg / max(agg, 1e-12):.2f}x;"
+         f"n={n};measured")
+
+
+def _emit_window_repeat(lpath: str, rounds: int) -> None:
+    """Deterministic delivered-window pin (the ISSUE's acceptance row):
+    an identical Q6 submitted *after* the first completes is served
+    entirely from the delivered-result window — the repeat arm's
+    ``io_requests`` is gated (exactly zero; any fetch is a regression),
+    the first run's count rides along as informational ``io_first``."""
+    best = None
+    for _ in range(rounds):
+        svc = ScanService(window_bytes=64 << 20)
+        svc.register_tenant("gold", weight=4)
+        _, r1 = q6(_q6_scanner(lpath), prune=False, service=svc,
+                   tenant="gold")
+        t0 = time.perf_counter()
+        _, r2 = q6(_q6_scanner(lpath), prune=False, service=svc,
+                   tenant="gold")
+        wall = time.perf_counter() - t0
+        hits = svc.window_hits
+        svc.shutdown()
+        if best is None or wall < best[0]:
+            best = (wall, r1.metrics.n_io_requests,
+                    r2.metrics.n_io_requests, hits)
+    wall, io_first, io_repeat, hits = best
+    emit("conc_q6_window_repeat", wall * 1e6,
+         f"io_requests={io_repeat};io_first={io_first};"
+         f"window_hits={hits};measured")
+
+
 def run() -> None:
     smoke = bool(os.environ.get("BENCH_SMOKE"))
     emit_cpu_reference()   # lets the CI gate normalize by machine speed
@@ -178,6 +296,14 @@ def run() -> None:
     for n in q12_ns:
         _emit_pair("q12", n, service, q12_job, rounds)
     service.shutdown()
+
+    # -- multi-tenant front end rows (DESIGN.md §11) -------------------
+    # Mixed-tenant fleets at serving fan-out, plus the deterministic
+    # window-repeat pin; mixed rounds are capped — each round already
+    # aggregates n scans, so best-of-2 is stable.
+    for n in (16, 64):
+        _emit_mixed("q6", n, lpath, min(rounds, 2))
+    _emit_window_repeat(lpath, rounds)
 
 
 if __name__ == "__main__":

@@ -353,7 +353,8 @@ def run_overlapped(scanner: Scanner, consume: Consume | None = None,
                    predicate_stats=None, depth: int = 2,
                    decode_workers: int | None = None, service=None,
                    priority: int = 0, retries: int = 3,
-                   deadline: float | None = None, trace=None):
+                   deadline: float | None = None, trace=None,
+                   tenant: str | None = None):
     """Overlapped scan: fetch ∥ decode ∥ in-order consume.
 
     ``depth`` bounds row groups in flight (fetched or decoded, not yet
@@ -373,6 +374,10 @@ def run_overlapped(scanner: Scanner, consume: Consume | None = None,
 
     ``trace`` enables the flight recorder for this run (DESIGN.md §10):
     True records, a path string records and exports Chrome JSON.
+
+    ``tenant`` names the ScanService tenant this scan belongs to
+    (weighted fair scheduling + admission control, DESIGN.md §11);
+    ignored on the inline path, which shares no pool to be fair about.
     """
     if decode_workers is None:
         decode_workers = default_decode_workers()
@@ -384,14 +389,16 @@ def run_overlapped(scanner: Scanner, consume: Consume | None = None,
         return _run_overlapped_service(scanner, consume, row_groups,
                                        predicate_stats, depth,
                                        decode_workers, service, priority,
-                                       retries=retries, deadline=deadline)
+                                       retries=retries, deadline=deadline,
+                                       tenant=tenant)
 
 
 def _run_overlapped_service(scanner: Scanner, consume: Consume | None,
                             row_groups, predicate_stats, depth: int,
                             decode_workers: int | None, service,
                             priority: int = 0, retries: int = 3,
-                            deadline: float | None = None):
+                            deadline: float | None = None,
+                            tenant: str | None = None):
     """Shared-pool path: submit to the ScanService, consume in order."""
     from repro.core.scheduler import scan_service
 
@@ -405,7 +412,7 @@ def _run_overlapped_service(scanner: Scanner, consume: Consume | None,
                         workers_hint=hint,
                         label=getattr(scanner, "path", "scan"),
                         priority=priority, retries=retries,
-                        deadline=deadline)
+                        deadline=deadline, tenant=tenant)
     acc = None
     consume_times: list[float] = []
     tr = trace_mod.active()
@@ -440,7 +447,8 @@ def _run_overlapped_service(scanner: Scanner, consume: Consume | None,
         tr.complete("scan", "scan", t0, t_end, scan=label,
                     mode="overlapped", workers=workers,
                     rgs=m.n_row_groups, shared_rgs=m.shared_rgs,
-                    retry_policy=m.retry_policy)
+                    retry_policy=m.retry_policy,
+                    **({"tenant": tenant} if tenant is not None else {}))
         m.trace_events = tr.event_count()
     return acc, RunReport("overlapped", t_end - t0, m,
                           consume_times, decode_workers=workers,

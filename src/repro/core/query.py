@@ -140,7 +140,8 @@ def q6(scanner: Scanner, overlapped: bool = True, use_kernel: bool = False,
        decode_workers: int | None = None, service=None,
        window: int = 4, open_opts: dict | None = None,
        fused: "bool | str | None" = None, devices=None,
-       trace=None) -> tuple[float, RunReport]:
+       trace=None, tenant: str | None = None,
+       result_cache=None) -> tuple[float, RunReport]:
     """Run Q6 over the scanner's stream — or over a whole **Dataset**
     (file-level pruning + sharded fragment scans; returns a
     ``DatasetRunReport``).  ``prepare_plan`` pre-builds the row-group
@@ -163,7 +164,11 @@ def q6(scanner: Scanner, overlapped: bool = True, use_kernel: bool = False,
     devices with the deterministic tree reduce — bit-identical across
     device counts.  ``trace`` enables the flight recorder for this run
     (core/trace.py, DESIGN.md §10): True records, a path string records
-    and exports Chrome trace JSON."""
+    and exports Chrome trace JSON.  ``tenant`` attributes the scan(s) to
+    a ScanService tenant (weighted fair scheduling + admission,
+    DESIGN.md §11); ``result_cache`` (dataset runs only) is a
+    FragmentResultCache — repeated identical Q6 runs answer unchanged
+    fragments from cached partials, invalidated on manifest swap."""
     fused = _resolve_fused(fused)
     spec = q6_fused_spec("reference" if fused == "reference"
                          else "fused") if fused else None
@@ -188,10 +193,14 @@ def q6(scanner: Scanner, overlapped: bool = True, use_kernel: bool = False,
                 decode_workers=decode_workers, open_opts=open_opts,
                 trace=trace)
             return (acc or 0.0), report
+        fp = (f"q6:{'fused' if spec is not None else 'unfused'}:"
+              f"{'ref' if fused == 'reference' else 'opt'}:"
+              f"k{int(use_kernel)}:p{int(prune)}")
         acc, report = run_dataset_scan(
             plan, consume, lambda a, b: a + b,
             window=window, depth=depth, decode_workers=decode_workers,
-            service=service, open_opts=open_opts, trace=trace)
+            service=service, open_opts=open_opts, trace=trace,
+            tenant=tenant, result_cache=result_cache, fingerprint=fp)
         return (acc or 0.0), report
     if spec is not None and scanner.planner is not None \
             and scanner.fused_spec != spec:
@@ -202,7 +211,7 @@ def q6(scanner: Scanner, overlapped: bool = True, use_kernel: bool = False,
     if overlapped:
         runner = functools.partial(run_overlapped, depth=depth,
                                    decode_workers=decode_workers,
-                                   service=service)
+                                   service=service, tenant=tenant)
     else:
         runner = run_blocking
     acc, report = runner(scanner, consume,
@@ -288,12 +297,23 @@ def _next_pow2(n: int) -> int:
     return 1 << max(0, int(n) - 1).bit_length()
 
 
+def _source_digest(src) -> "str | None":
+    """Content identity of a q12 side for result-cache fingerprints: a
+    dataset's (root, generation), a file scanner's planner cache token
+    (path + size + mtime); None → unknown, never cache against it."""
+    if _is_dataset(src):
+        return f"ds:{src.root}:g{src.generation}"
+    tok = getattr(getattr(src, "planner", None), "cache_token", None)
+    return None if tok is None else f"file:{tok}"
+
+
 def q12(lineitem_scanner: Scanner, orders_scanner: Scanner,
         overlapped: bool = True, prepare_plan: bool = False,
         depth: int = 2, decode_workers: int | None = None,
         service=None, window: int = 4, open_opts: dict | None = None,
         fused: "bool | str | None" = None, devices=None,
-        trace=None) -> tuple[dict[str, int], RunReport, RunReport]:
+        trace=None, tenant: str | None = None,
+        result_cache=None) -> tuple[dict[str, int], RunReport, RunReport]:
     """Q12 over scanners — or over Datasets (either side independently):
     the build side streams every orders fragment, the probe side shards
     lineitem fragments through the ScanService, and per-fragment counts
@@ -305,7 +325,11 @@ def q12(lineitem_scanner: Scanner, orders_scanner: Scanner,
     dataset sides through ``run_distributed_scan`` (multi-device
     sharding + deterministic tree reduce).  ``trace`` records both the
     build and probe scans in one flight-recorder session (DESIGN.md
-    §10); a path string also exports Chrome trace JSON on return."""
+    §10); a path string also exports Chrome trace JSON on return.
+    ``tenant``/``result_cache`` are the serving hooks (DESIGN.md §11):
+    tenant attribution on every scan, and fragment-partial caching on
+    dataset sides — the probe side's fingerprint carries the orders
+    side's content identity, so a build-table change invalidates it."""
     if trace:
         from repro.core import trace as trace_mod
         with trace_mod.request(trace):
@@ -313,7 +337,8 @@ def q12(lineitem_scanner: Scanner, orders_scanner: Scanner,
                        overlapped=overlapped, prepare_plan=prepare_plan,
                        depth=depth, decode_workers=decode_workers,
                        service=service, window=window,
-                       open_opts=open_opts, fused=fused, devices=devices)
+                       open_opts=open_opts, fused=fused, devices=devices,
+                       tenant=tenant, result_cache=result_cache)
     if not overlapped and (_is_dataset(lineitem_scanner)
                            or _is_dataset(orders_scanner)):
         raise ValueError("dataset runs are always sharded/overlapped; "
@@ -339,7 +364,7 @@ def q12(lineitem_scanner: Scanner, orders_scanner: Scanner,
     if overlapped:
         runner = functools.partial(run_overlapped, depth=depth,
                                    decode_workers=decode_workers,
-                                   service=service)
+                                   service=service, tenant=tenant)
     else:
         runner = run_blocking
 
@@ -362,7 +387,8 @@ def q12(lineitem_scanner: Scanner, orders_scanner: Scanner,
             (keys, prio), build_report = run_dataset_scan(
                 oplan, build_consume, build_combine,
                 window=window, depth=depth, decode_workers=decode_workers,
-                service=service, open_opts=open_opts)
+                service=service, open_opts=open_opts, tenant=tenant,
+                result_cache=result_cache, fingerprint="q12:build")
     else:
         (keys, prio), build_report = runner(orders_scanner, build_consume)
     order = jnp.argsort(keys)
@@ -413,10 +439,18 @@ def q12(lineitem_scanner: Scanner, orders_scanner: Scanner,
                 devices=devices, depth=depth,
                 decode_workers=decode_workers, open_opts=l_open_opts)
         else:
+            # the probe partial depends on the build table, so its
+            # fingerprint carries the orders side's content identity —
+            # an orders change invalidates probe entries even when the
+            # lineitem dataset is untouched
+            odig = _source_digest(orders_scanner)
+            lfp = (None if odig is None else
+                   f"q12:probe:{'fused' if lspec else 'unfused'}:{odig}")
             counts, probe_report = run_dataset_scan(
                 lplan, probe_consume, lambda a, b: a + b,
                 window=window, depth=depth, decode_workers=decode_workers,
-                service=service, open_opts=l_open_opts)
+                service=service, open_opts=l_open_opts, tenant=tenant,
+                result_cache=result_cache, fingerprint=lfp)
     else:
         counts, probe_report = runner(lineitem_scanner, probe_consume)
     counts = np.asarray(counts)

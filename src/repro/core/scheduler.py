@@ -37,6 +37,34 @@ results complete (and release their window slot) in plan order.  The
 default priority 0 for every scan reduces exactly to the flat
 round-robin.
 
+**Multi-tenant weighted fair shares (DESIGN.md §11).**  ``submit(
+tenant="gold")`` attributes the scan to a registered :class:`Tenant`.
+Within a priority class that has any tenanted scan, dispatch switches
+from flat rotation to *stride scheduling*: every fetch grant and every
+row-group "open" dispatch charges the owning tenant ``1/weight`` of
+virtual time, and the tenant with the smallest virtual time is served
+first — a weight-4 tenant receives ~4x the decode slots of a weight-1
+tenant under saturation, and every tenant's virtual time advances on
+each grant, so no tenant starves.  Untenanted scans ride along as a
+shared weight-1 virtual tenant; a class with *no* tenanted scans keeps
+the legacy rotation bit-for-bit.  Admission control is per tenant:
+``max_active`` bounds concurrently admitted scans, with
+``on_limit="reject"`` raising :class:`AdmissionRejected` and
+``"queue"`` blocking the submitter until a slot frees.  A tenant with
+an ``slo_s`` latency target feeds the adaptive sizer: while its recent
+mean scan latency misses the target, the policy asks for one extra
+decode worker (capped at ``max_workers``).
+
+**Delivered-result window.**  Cooperative in-flight sharing only helps
+scans that truly overlap; ``ScanService(window_bytes=N)`` additionally
+retains the most recently *delivered* shareable row groups in a
+byte-capped LRU keyed by the same share identity, so a late-arriving
+identical scan is served decoded columns with **no fetch and no
+decode** even after the original scan finished.  Off by default
+(``window_bytes=0``) — cold-start measurements and io_request pins stay
+exact; the serving front end (serve/engine.py) turns it on.  Cold-scan
+ladders clear it via ``clear_delivered_windows()``.
+
 **Error isolation / cancellation.**  A failing work item (or fetch) marks
 only its own scan: queued items of that scan are dropped, its handle
 re-raises the first error, and every other scan is untouched.
@@ -63,7 +91,8 @@ import os
 import sys
 import threading
 import time
-from collections import deque
+import weakref
+from collections import OrderedDict, deque
 from collections.abc import Callable, Sequence
 
 from repro.core import trace
@@ -72,6 +101,48 @@ from repro.core.faults import DeadlineExceeded, is_retryable
 
 class ScanCancelled(RuntimeError):
     """Raised by a ScanHandle whose scan was cancelled mid-stream."""
+
+
+class AdmissionRejected(RuntimeError):
+    """Raised by ``submit`` when a tenant with ``on_limit="reject"`` is
+    already at its ``max_active`` admitted-scan bound."""
+
+
+class Tenant:
+    """Service-side state of one registered tenant (DESIGN.md §11).
+
+    ``weight`` is the tenant's fair share: stride scheduling charges
+    ``1/weight`` virtual time per dispatch, so relative dispatch rates
+    under saturation converge to the weight ratio.  ``max_active``
+    bounds concurrently admitted scans (None = unbounded) with
+    ``on_limit`` picking the over-limit behavior (``"reject"`` raises
+    :class:`AdmissionRejected`, ``"queue"`` blocks the submitter).
+    ``slo_s`` is an optional per-scan latency target feeding the
+    adaptive pool sizer."""
+
+    __slots__ = ("name", "weight", "max_active", "on_limit", "slo_s",
+                 "seq", "fetch_pass", "item_pass", "active",
+                 "dispatches", "latencies")
+
+    def __init__(self, name: str, weight: int = 1,
+                 max_active: int | None = None, on_limit: str = "reject",
+                 slo_s: float | None = None, seq: int = 0):
+        if weight < 1:
+            raise ValueError(f"tenant weight must be >= 1, got {weight}")
+        if on_limit not in ("reject", "queue"):
+            raise ValueError(f"on_limit must be 'reject' or 'queue', "
+                             f"got {on_limit!r}")
+        self.name = name
+        self.weight = int(weight)
+        self.max_active = max_active
+        self.on_limit = on_limit
+        self.slo_s = slo_s
+        self.seq = seq                 # registration order (tiebreak)
+        self.fetch_pass = 0.0          # stride virtual time, fetch grants
+        self.item_pass = 0.0           # stride virtual time, RG dispatches
+        self.active = 0                # admitted scans in service
+        self.dispatches = 0            # row-group "open" dispatches won
+        self.latencies: deque = deque(maxlen=16)   # recent scan walls (s)
 
 
 # ---------------------------------------------------------------------------
@@ -228,6 +299,11 @@ def _share_key(scanner) -> tuple | None:
     if ("decode_rg" in getattr(scanner, "__dict__", {})
             or "fetch_rg" in getattr(scanner, "__dict__", {})):
         return None
+    if getattr(scanner, "fault_plan", None) is not None:
+        # fault-injection scans exist to exercise the real fetch+decode
+        # path: they must neither reuse a clean scan's work (skipping
+        # the injection) nor publish their own into the shared window
+        return None
     storage = getattr(scanner, "storage", None)
     return (planner.cache_token,
             tuple(scanner.columns),
@@ -246,8 +322,11 @@ class _ScanState:
     def __init__(self, service: "ScanService", scanner, plan: list[int],
                  depth: int, workers_hint: int | None, label: str,
                  priority: int = 0, retries: int = 3,
-                 deadline: float | None = None):
+                 deadline: float | None = None,
+                 tenant: Tenant | None = None):
         self.scanner = scanner
+        self.tenant = tenant           # owning Tenant, None = untenanted
+        self.t_submit = time.monotonic()
         self.plan = plan
         self.depth = max(1, depth)
         self.workers_hint = workers_hint
@@ -403,11 +482,24 @@ class ScanService:
 
     def __init__(self, workers: int | None = None, adaptive: bool = True,
                  max_workers: int | None = None, resize_every: int = 8,
-                 fetch_threads: int = 1, device=None):
+                 fetch_threads: int = 1, device=None,
+                 window_bytes: int = 0):
         self._lock = threading.RLock()
         self._work_cv = threading.Condition(self._lock)
         self._fetch_cv = threading.Condition(self._lock)
+        self._admit_cv = threading.Condition(self._lock)
         self._scans: list[_ScanState] = []
+        # multi-tenant front end (DESIGN.md §11): registered tenants,
+        # the virtual weight-1 tenant untenanted scans charge when they
+        # share a priority class with tenanted ones, and the delivered-
+        # result window — a byte-capped LRU of recently delivered
+        # shareable row groups (off at 0, cold paths stay exact)
+        self._tenants: dict[str, Tenant] = {}
+        self._default_tenant = Tenant("-", weight=1, seq=-1)
+        self.window_bytes = max(0, int(window_bytes))
+        self._window: OrderedDict[tuple, tuple] = OrderedDict()
+        self._window_nbytes = 0
+        self.window_hits = 0
         self._rr = 0               # decode round-robin cursor
         self._fetch_rr = 0         # fetch round-robin cursor
         self._inflight: dict[tuple, _RgJob] = {}   # cooperative-scan jobs
@@ -435,35 +527,120 @@ class ScanService:
         self._win = {"io": 0.0, "dec": 0.0, "cons": 0.0, "rgs": 0}
         self.resize_every = max(1, resize_every)
         self.resize_events: list[int] = []   # pool sizes after each resize
+        _ALL_SERVICES.add(self)
 
     # -- public API ---------------------------------------------------------
+
+    def register_tenant(self, name: str, weight: int = 1,
+                        max_active: int | None = None,
+                        on_limit: str = "reject",
+                        slo_s: float | None = None) -> Tenant:
+        """Register (or re-configure) a tenant.  ``submit(tenant=name)``
+        with an unregistered name auto-registers it at weight 1,
+        unbounded — explicit registration is how a tenant gets a weight,
+        an admission bound, or an SLO."""
+        with self._lock:
+            ten = self._tenants.get(name)
+            if ten is None:
+                ten = Tenant(name, weight=weight, max_active=max_active,
+                             on_limit=on_limit, slo_s=slo_s,
+                             seq=len(self._tenants))
+                self._tenants[name] = ten
+            else:
+                Tenant(name, weight=weight, on_limit=on_limit)  # validate
+                ten.weight = int(weight)
+                ten.max_active = max_active
+                ten.on_limit = on_limit
+                ten.slo_s = slo_s
+            return ten
+
+    def tenant(self, name: str) -> Tenant | None:
+        with self._lock:
+            return self._tenants.get(name)
+
+    def _tenant_locked(self, name: str) -> Tenant:
+        ten = self._tenants.get(name)
+        if ten is None:
+            ten = Tenant(name, seq=len(self._tenants))
+            self._tenants[name] = ten
+        return ten
+
+    def clear_delivered_window(self) -> None:
+        """Drop every retained delivered row group (cold-scan ladders:
+        a cleared window forces real refetch + redecode)."""
+        with self._lock:
+            self._window.clear()
+            self._window_nbytes = 0
+
+    @property
+    def window_entries(self) -> int:
+        with self._lock:
+            return len(self._window)
 
     def submit(self, scanner, row_groups: Sequence[int] | None = None,
                predicate_stats=None, depth: int = 2,
                workers_hint: int | None = None,
                label: str = "scan", priority: int = 0,
                retries: int = 3,
-               deadline: float | None = None) -> ScanHandle:
+               deadline: float | None = None,
+               tenant: str | None = None) -> ScanHandle:
         """Register one scan; returns its in-order consume handle.
         ``priority`` selects the scan's strict service class (lower is
         served first; round-robin within a class).  ``retries`` is the
         scan's transient-failure budget (requeued row groups across the
         whole scan); ``deadline`` is a whole-scan wall budget in seconds —
         once exceeded the scan fails with DeadlineExceeded (never
-        retried)."""
+        retried).  ``tenant`` attributes the scan to a registered tenant
+        for weighted fair scheduling and admission control (an unknown
+        name auto-registers at weight 1, unbounded); at the tenant's
+        ``max_active`` bound this either raises
+        :class:`AdmissionRejected` or blocks until a slot frees,
+        per its ``on_limit``."""
         plan = list(scanner.plan(predicate_stats, row_groups))
-        scan = _ScanState(self, scanner, plan, depth, workers_hint, label,
-                          priority=priority, retries=retries,
-                          deadline=deadline)
         with self._lock:
             if self._shutdown:
                 raise RuntimeError("ScanService is shut down")
+            ten = self._admit_locked(tenant)
+            scan = _ScanState(self, scanner, plan, depth, workers_hint,
+                              label, priority=priority, retries=retries,
+                              deadline=deadline, tenant=ten)
             self._scans.append(scan)
             self._ensure_threads_locked()
             self._retarget_locked()
             scan.workers_seen = max(1, self.pool_size)
             self._fetch_cv.notify_all()
         return ScanHandle(self, scan)
+
+    def _admit_locked(self, tenant: str | None) -> Tenant | None:
+        """Admission control: charge one active-scan slot to the tenant,
+        rejecting or queueing at its ``max_active`` bound.  An idle
+        tenant re-joins the stride clock at the minimum active virtual
+        time, so banked idleness can never become a dispatch burst."""
+        if tenant is None:
+            return None
+        ten = self._tenant_locked(tenant)
+        reg = trace.registry()
+        if ten.max_active is not None and ten.active >= ten.max_active:
+            if ten.on_limit == "reject":
+                reg.counter_inc("scheduler.admission_rejects")
+                raise AdmissionRejected(
+                    f"tenant {ten.name}: {ten.active} active scans at "
+                    f"max_active={ten.max_active}")
+            reg.counter_inc("scheduler.admission_queued")
+            while ten.active >= ten.max_active and not self._shutdown:
+                self._admit_cv.wait(timeout=0.1)
+            if self._shutdown:
+                raise RuntimeError("ScanService is shut down")
+        if ten.active == 0:
+            actives = [t for t in self._tenants.values() if t.active > 0]
+            if actives:
+                ten.fetch_pass = max(ten.fetch_pass,
+                                     min(t.fetch_pass for t in actives))
+                ten.item_pass = max(ten.item_pass,
+                                    min(t.item_pass for t in actives))
+        ten.active += 1
+        reg.gauge_set(f"scheduler.tenant_depth.{ten.name}", ten.active)
+        return ten
 
     @property
     def pool_size(self) -> int:
@@ -484,6 +661,7 @@ class ScanService:
                 scan.done_cv.notify_all()
             self._work_cv.notify_all()
             self._fetch_cv.notify_all()
+            self._admit_cv.notify_all()
         for t in self._fetch_pool + self._threads:
             t.join(timeout=5.0)
 
@@ -534,6 +712,16 @@ class ScanService:
             # fetch/consume-bound → shrink toward 1.
             bound = max(w["io"], w["cons"], 1e-9)
             self._policy = max(1, int(round(w["dec"] / bound)))
+            # SLO-aware sizing (DESIGN.md §11): an active tenant whose
+            # recent mean scan latency misses its target asks for one
+            # extra decode worker on top of the ratio policy
+            for t in self._tenants.values():
+                if (t.slo_s is not None and t.active > 0 and t.latencies
+                        and (sum(t.latencies) / len(t.latencies)
+                             > t.slo_s)):
+                    self._policy = min(self.max_workers, self._policy + 1)
+                    trace.registry().counter_inc("scheduler.slo_boosts")
+                    break
         self._win = {"io": 0.0, "dec": 0.0, "cons": 0.0, "rgs": 0}
         self._retarget_locked()
         self.resize_events.append(self._target)
@@ -543,7 +731,7 @@ class ScanService:
 
     # -- fetch stage --------------------------------------------------------
 
-    def _service_order_locked(self, cursor: int
+    def _service_order_locked(self, cursor: int, which: str = "fetch"
                               ) -> list[tuple[_ScanState, int]]:
         """Active scans in service order: ascending priority class, with
         the round-robin rotation (by ``cursor``) applied *within* each
@@ -552,16 +740,54 @@ class ScanService:
         chosen, so scans skipped in *other* classes never skew a class's
         rotation.  All-default-priority workloads reduce to the flat
         rotated list (offset == list position) the pre-priority scheduler
-        iterated."""
+        iterated.
+
+        A class containing any *tenanted* scan switches to weighted fair
+        ordering instead (``_fair_order_locked``); an all-untenanted
+        class keeps this legacy rotation bit-for-bit."""
         by_prio: dict[int, list[_ScanState]] = {}
         for s in self._scans:
             by_prio.setdefault(s.priority, []).append(s)
         out: list[tuple[_ScanState, int]] = []
         for prio in sorted(by_prio):
             cls = by_prio[prio]
+            if any(s.tenant is not None for s in cls):
+                out.extend(self._fair_order_locked(cls, cursor, which))
+                continue
             k = cursor % len(cls)
             out.extend((scan, off)
                        for off, scan in enumerate(cls[k:] + cls[:k]))
+        return out
+
+    def _fair_order_locked(self, cls: list[_ScanState], cursor: int,
+                           which: str) -> list[tuple[_ScanState, int]]:
+        """Stride order for one priority class: tenants ascend by their
+        virtual time (``fetch_pass`` or ``item_pass`` — fetch grants and
+        decode dispatches are charged separately), registration order
+        breaking ties; scans rotate round-robin *within* a tenant via
+        ``cursor`` exactly like the legacy per-class rotation.
+        Untenanted scans charge the shared weight-1 virtual tenant."""
+        groups: dict[int, list[_ScanState]] = {}
+        tenants: dict[int, Tenant] = {}
+        order: list[Tenant] = []
+        for s in cls:
+            t = s.tenant if s.tenant is not None else self._default_tenant
+            if id(t) not in groups:
+                groups[id(t)] = []
+                tenants[id(t)] = t
+                order.append(t)
+        # group scans after discovery so per-tenant lists keep submit order
+        for s in cls:
+            t = s.tenant if s.tenant is not None else self._default_tenant
+            groups[id(t)].append(s)
+        attr = "fetch_pass" if which == "fetch" else "item_pass"
+        order.sort(key=lambda t: (getattr(t, attr), t.seq))
+        out: list[tuple[_ScanState, int]] = []
+        for t in order:
+            tl = groups[id(t)]
+            k = cursor % len(tl)
+            out.extend((scan, off)
+                       for off, scan in enumerate(tl[k:] + tl[:k]))
         return out
 
     def _next_fetch_locked(self
@@ -575,27 +801,94 @@ class ScanService:
         before new fetch-ahead, already hold their credit, and never
         share — a retry exists to pull *fresh* bytes."""
         n = len(self._scans)
-        for scan, off in self._service_order_locked(self._fetch_rr):
+        for scan, off in self._service_order_locked(self._fetch_rr,
+                                                    "fetch"):
             if scan.dead:
                 continue
             if scan.refetch:
                 self._fetch_rr = (self._fetch_rr + off + 1) % max(1, n)
+                self._charge_fetch_locked(scan)
                 return scan, scan.refetch.popleft(), False, True
             if scan.credits <= 0 or scan.next_fetch >= len(scan.plan):
                 continue
             self._fetch_rr = (self._fetch_rr + off + 1) % max(1, n)
+            self._charge_fetch_locked(scan)
             scan.credits -= 1
             seq = scan.next_fetch
             scan.next_fetch += 1
             if scan.share_key is not None:
-                job = self._inflight.get((scan.share_key, scan.plan[seq]))
+                key = (scan.share_key, scan.plan[seq])
+                job = self._inflight.get(key)
                 if job is not None:
                     job.subscribers.append((scan, seq))
                     scan.shared_rgs += 1
                     self.shared_rgs += 1
                     return scan, seq, True, False
+                if self._window_deliver_locked(scan, seq, key):
+                    return scan, seq, True, False
             return scan, seq, False, False
         return None
+
+    def _charge_fetch_locked(self, scan: _ScanState) -> None:
+        """Stride accounting: one fetch grant advances the owning
+        tenant's fetch-side virtual time by ``1/weight``."""
+        ten = scan.tenant if scan.tenant is not None \
+            else self._default_tenant
+        ten.fetch_pass += 1.0 / ten.weight
+
+    def _window_deliver_locked(self, scan: _ScanState, seq: int,
+                               key: tuple) -> bool:
+        """Serve one row group from the delivered-result window: the
+        retained decoded columns go straight to the scan's in-order done
+        queue — no fetch, no decode, the held credit releases on ack
+        like any delivery."""
+        if self.window_bytes <= 0:
+            return False
+        hit = self._window.get(key)
+        if hit is None:
+            return False
+        self._window.move_to_end(key)
+        cols, io_dt, dec_dt, chunk_times, p2_start, _nb = hit
+        scan.done[seq] = (scan.plan[seq], cols, io_dt, dec_dt,
+                          list(chunk_times), p2_start)
+        scan.shared_rgs += 1
+        self.shared_rgs += 1
+        self.window_hits += 1
+        trace.registry().counter_inc("scheduler.window_hits")
+        tr = trace.active()
+        if tr is not None:
+            tr.instant("window_hit", "io", scan=scan.label,
+                       rg=scan.plan[seq],
+                       **({"tenant": scan.tenant.name}
+                          if scan.tenant is not None else {}))
+        scan.done_cv.notify_all()
+        return True
+
+    def _window_store_locked(self, key: tuple, cols, io_dt: float,
+                             dec_dt: float, chunk_times: list[float],
+                             p2_start: int) -> None:
+        """Retain one delivered shareable row group, evicting LRU
+        entries past the byte cap (decoded payload bytes)."""
+        nb = 0
+        try:
+            for c in cols.values():
+                arr = getattr(c, "array", None)
+                nb += int(getattr(arr, "nbytes", 0) or 0)
+        except AttributeError:
+            pass
+        nb = max(1, nb)
+        if nb > self.window_bytes:
+            return                      # larger than the whole window
+        old = self._window.pop(key, None)
+        if old is not None:
+            self._window_nbytes -= old[5]
+        self._window[key] = (cols, io_dt, dec_dt, list(chunk_times),
+                             p2_start, nb)
+        self._window_nbytes += nb
+        while self._window_nbytes > self.window_bytes and self._window:
+            _, evicted = self._window.popitem(last=False)
+            self._window_nbytes -= evicted[5]
+            trace.registry().counter_inc("scheduler.window_evictions")
 
     def _fetch_loop(self) -> None:
         while True:
@@ -622,7 +915,9 @@ class ScanService:
             tr = trace.active()
             if tr is not None:
                 tr.complete("fetch", "io", t0, t1, scan=scan.label,
-                            rg=scan.plan[seq], io_dt=io_dt, retry=is_retry)
+                            rg=scan.plan[seq], io_dt=io_dt, retry=is_retry,
+                            **({"tenant": scan.tenant.name}
+                               if scan.tenant is not None else {}))
                 trace.registry().observe("scheduler.fetch_wall_s", t1 - t0)
             with self._lock:
                 scan.fetch_span[0] = min(scan.fetch_span[0], t0)
@@ -661,16 +956,34 @@ class ScanService:
         advances only at job boundaries."""
         if (prefer is not None and not prefer.dead and prefer.ready
                 and prefer in self._scans):
-            return prefer, prefer.ready.popleft()
+            item = prefer.ready.popleft()
+            self._charge_dispatch_locked(prefer, item)
+            return prefer, item
         n = len(self._scans)
-        for scan, off in self._service_order_locked(self._rr):
+        for scan, off in self._service_order_locked(self._rr, "item"):
             while scan.ready:
                 item = scan.ready.popleft()
                 if item[1].live_scan() is None or item[1].failed:
                     continue   # no subscriber left / job failed — drop it
                 self._rr = (self._rr + off + 1) % max(1, n)
+                self._charge_dispatch_locked(scan, item)
                 return scan, item
         return None
+
+    def _charge_dispatch_locked(self, scan: _ScanState,
+                                item: tuple) -> None:
+        """Stride accounting at row-group granularity: winning a decode
+        slot for an "open" item (a fresh row group entering the pool)
+        advances the owning tenant's item-side virtual time by
+        ``1/weight`` and counts one dispatch — the share the fairness
+        tests measure.  Continuation items of an already-open row group
+        are never re-charged."""
+        if item[0] != "open":
+            return
+        ten = scan.tenant if scan.tenant is not None \
+            else self._default_tenant
+        ten.item_pass += 1.0 / ten.weight
+        ten.dispatches += 1
 
     def _worker_loop(self, worker_idx: int = 0) -> None:
         _apply_affinity(worker_idx)
@@ -805,6 +1118,14 @@ class ScanService:
             if (rgjob.key is not None
                     and self._inflight.get(rgjob.key) is rgjob):
                 self._inflight.pop(rgjob.key)
+                if self.window_bytes > 0:
+                    # delivered-result window: retain the decoded columns
+                    # under the same share identity, so an identical scan
+                    # arriving after this one finishes still reuses them
+                    self._window_store_locked(rgjob.key, cols, rgjob.io_dt,
+                                              dec_dt,
+                                              list(rgjob.chunk_times),
+                                              rgjob.p2_start)
             for sub, seq in rgjob.subscribers:
                 if sub.dead:
                     continue
@@ -820,7 +1141,9 @@ class ScanService:
         tr = trace.active()
         if tr is not None:
             tr.complete(kind, "decode", t0, t1, scan=scan.label,
-                        rg=rgjob.rg_index)
+                        rg=rgjob.rg_index,
+                        **({"tenant": scan.tenant.name}
+                           if scan.tenant is not None else {}))
         with self._lock:
             rgjob.chunk_times.append(t1 - t0)
             for sub, _ in rgjob.subscribers:
@@ -970,6 +1293,15 @@ class ScanService:
         if scan.finished:
             return
         scan.finished = True
+        ten = scan.tenant
+        if ten is not None:
+            # release the admission slot and record the scan's wall for
+            # the SLO-aware sizer; queued submitters wake here
+            ten.active = max(0, ten.active - 1)
+            ten.latencies.append(time.monotonic() - scan.t_submit)
+            trace.registry().gauge_set(
+                f"scheduler.tenant_depth.{ten.name}", ten.active)
+            self._admit_cv.notify_all()
         self._migrate_items_locked(scan)
         scan.ready.clear()
         scan.done.clear()
@@ -988,8 +1320,23 @@ class ScanService:
 # process-wide singleton
 # ---------------------------------------------------------------------------
 
+#: every live ScanService, for process-wide cache clears (cold ladders)
+_ALL_SERVICES: "weakref.WeakSet[ScanService]" = weakref.WeakSet()
+
 _SERVICE: ScanService | None = None
 _SERVICE_LOCK = threading.Lock()
+
+
+def clear_delivered_windows() -> None:
+    """Clear the delivered-result window of every live ScanService —
+    the cold-scan ladders' guarantee that each round refetches and
+    redecodes for real (tests/test_system.py, bench_encoding,
+    bench_compression, tools/chaos_check.py)."""
+    for svc in list(_ALL_SERVICES):
+        try:
+            svc.clear_delivered_window()
+        except Exception:
+            pass
 
 
 def scan_service() -> ScanService:

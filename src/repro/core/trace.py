@@ -55,6 +55,21 @@ Event vocabulary (``tools/trace_report.py`` buckets on these):
                   quarantine
   cat "fault"     fault_injected, requeue, checksum_failure, deadline
   cat "kernel"    kernel_launch (instant, counted n)
+
+Multi-tenant attribution (DESIGN.md §11): fetch and decode-item spans
+emitted by the scheduler carry an ``args.tenant`` tag when the scan was
+submitted under a registered tenant; ``window_hit`` instants (cat
+"io") mark row groups served from the delivered-result window instead
+of storage, and ``result_cache_hit`` instants mark whole fragments
+served from the fragment result cache.  ``tools/trace_report.py`` aggregates these into a
+per-tenant wall-attribution breakdown; untagged spans are charged to
+the shared ``-`` tenant, mirroring the scheduler's weight-1 virtual
+tenant.  The registry's tenancy surface: counters
+``scheduler.window_hits``, ``scheduler.admission_rejects``,
+``scheduler.admission_queued``, ``scheduler.slo_boosts``,
+``result_cache.{hits,misses,evictions,invalidated}``, and one
+``scheduler.tenant_depth.<name>`` gauge per tenant (current active
+scans — the per-tenant queue depth).
 """
 
 from __future__ import annotations

@@ -219,6 +219,13 @@ class Dataset:
             f.flush()
             os.fsync(f.fileno())
         os.replace(tmp, self.manifest_path)
+        # the manifest swap is the result-cache invalidation point
+        # (DESIGN.md §11): cached fragment partials keyed by any other
+        # generation of this root are now stale.  A crashed mutation
+        # never reaches this line, so prior-generation entries stay
+        # valid exactly as long as the prior manifest stays live.
+        from repro.dataset.result_cache import invalidate_dataset
+        invalidate_dataset(self.root, self.generation)
 
     @staticmethod
     def _parse_manifest(path: str, root: str) -> "Dataset":

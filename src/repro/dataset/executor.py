@@ -115,6 +115,9 @@ class DatasetRunReport:
     # metrics-registry snapshot at run end (empty when tracing is off)
     trace_events: int = 0
     registry_snapshot: dict = dataclasses.field(default_factory=dict)
+    # serving front end (DESIGN.md §11): fragments answered from the
+    # fragment result cache — no open, no fetch, no decode
+    result_cache_hits: int = 0
 
     @property
     def fragments_quarantined(self) -> int:
@@ -148,6 +151,7 @@ class DatasetRunReport:
                 f"checksum_failures={self.checksum_failures};"
                 f"timeouts={self.timeouts};"
                 f"fragments_quarantined={self.fragments_quarantined};"
+                f"result_cache_hits={self.result_cache_hits};"
                 f"frag_p50_us={self.wall_percentile(50) * 1e6:.0f};"
                 f"frag_p95_us={self.wall_percentile(95) * 1e6:.0f}")
         if self.devices > 1 or self.prefetch_hits or self.prefetch_misses:
@@ -171,7 +175,8 @@ def run_dataset_scan(plan: DatasetScanPlan, consume: Consume | None = None,
                      fragment_retries: int = 2,
                      on_error: str = "strict",
                      retries: int = 3, deadline: float | None = None,
-                     trace=None):
+                     trace=None, tenant: str | None = None,
+                     result_cache=None, fingerprint: str | None = None):
     """Execute a planned dataset scan; returns ``(acc, DatasetRunReport)``.
 
     ``consume`` is the per-row-group reducer every fragment scan runs
@@ -194,6 +199,15 @@ def run_dataset_scan(plan: DatasetScanPlan, consume: Consume | None = None,
     never retried.  ``trace`` enables the flight recorder for this run
     (``core/trace.py``): True records, a path string records and exports
     Chrome-trace JSON there on exit, None defers to ``REPRO_TRACE``.
+
+    ``tenant`` attributes every fragment scan to a ScanService tenant
+    (weighted fair scheduling + admission, DESIGN.md §11).
+    ``result_cache``/``fingerprint`` enable the fragment result cache:
+    a fragment whose partial is cached under (root, manifest
+    generation, fragment path, fingerprint) is answered without a scan;
+    fresh partials are stored on success.  ``fingerprint`` must digest
+    the predicate + consume identity — both must be given to
+    participate.
     """
     if on_error not in ("strict", "best_effort"):
         raise ValueError(f"on_error must be 'strict' or 'best_effort', "
@@ -204,13 +218,15 @@ def run_dataset_scan(plan: DatasetScanPlan, consume: Consume | None = None,
             decode_workers=decode_workers, service=service,
             prioritize=prioritize, open_opts=open_opts,
             fragment_retries=fragment_retries, on_error=on_error,
-            retries=retries, deadline=deadline)
+            retries=retries, deadline=deadline, tenant=tenant,
+            result_cache=result_cache, fingerprint=fingerprint)
 
 
 def _run_dataset_scan(plan: DatasetScanPlan, consume, combine, *,
                       window, depth, decode_workers, service, prioritize,
                       open_opts, fragment_retries, on_error, retries,
-                      deadline):
+                      deadline, tenant=None, result_cache=None,
+                      fingerprint=None):
     opts = dict(DEFAULT_OPEN_OPTS, **(open_opts or {}))
     opts["columns"] = plan.columns
     n = len(plan.fragments)
@@ -229,12 +245,34 @@ def _run_dataset_scan(plan: DatasetScanPlan, consume, combine, *,
     errors: list[BaseException] = []
     quarantined: list[dict] = []
     frag_retries = [0]            # whole-fragment re-scan attempts spent
+    cache_hits = [0]              # fragments answered from result_cache
     next_pos = [0]
     lock = threading.Lock()
     launches0 = kernel_launch_count()
+    use_cache = result_cache is not None and fingerprint is not None
+    if use_cache:
+        from repro.dataset.result_cache import MISS
 
     def scan_fragment(pos: int) -> None:
         """One fragment through retry-then-quarantine."""
+        frag = plan.fragments[pos]
+        if use_cache:
+            cached = result_cache.get(plan.dataset.root,
+                                      plan.dataset.generation,
+                                      frag.path, fingerprint)
+            if cached is not MISS:
+                accs[pos] = cached
+                with lock:
+                    cache_hits[0] += 1
+                tr = trace_mod.active()
+                if tr is not None:
+                    tr.instant("result_cache_hit", "fragment",
+                               fragment=frag.path, index=pos,
+                               **({"tenant": tenant}
+                                  if tenant is not None else {}))
+                trace_mod.registry().counter_inc(
+                    "executor.result_cache_hits")
+                return
         budget = 1 + max(0, fragment_retries)
         failure: BaseException | None = None
         for attempt in range(budget):
@@ -243,26 +281,30 @@ def _run_dataset_scan(plan: DatasetScanPlan, consume, combine, *,
                     return
             try:
                 scanner: Scanner = plan.dataset.open_fragment(
-                    plan.fragments[pos], **opts)
+                    frag, **opts)
                 t0 = time.perf_counter()
                 acc, report = run_overlapped(
                     scanner, consume,
                     predicate_stats=plan.predicate_stats, depth=depth,
                     decode_workers=decode_workers, service=svc,
                     priority=pos if prioritize == "order" else 0,
-                    retries=retries, deadline=deadline)
+                    retries=retries, deadline=deadline, tenant=tenant)
                 t1 = time.perf_counter()
                 walls[pos] = t1 - t0
                 tr = trace_mod.active()
                 if tr is not None:
                     tr.complete("fragment", "fragment", t0, t1,
-                                fragment=plan.fragments[pos].path,
+                                fragment=frag.path,
                                 index=pos, attempt=attempt)
                 accs[pos] = acc
                 reports[pos] = report
                 if attempt:
                     with lock:
                         frag_retries[0] += attempt
+                if use_cache:
+                    result_cache.put(plan.dataset.root,
+                                     plan.dataset.generation,
+                                     frag.path, fingerprint, acc)
                 return
             except BaseException as e:  # noqa: BLE001 — classified below
                 failure = e
@@ -318,6 +360,7 @@ def _run_dataset_scan(plan: DatasetScanPlan, consume, combine, *,
                         walls=walls, done=done, launches0=launches0,
                         frag_retries=frag_retries[0],
                         quarantined=quarantined)
+    rep.result_cache_hits = cache_hits[0]
     if combine is None:
         return list(accs), rep
     acc = functools.reduce(

@@ -1,0 +1,131 @@
+"""Fragment-level result cache for dataset scans (DESIGN.md §11).
+
+The ScanService's delivered-result window reuses decoded *row groups*;
+this cache sits one level up and reuses whole per-fragment **partial
+accumulators** — the value ``run_overlapped(scanner, consume)`` reduced
+for one fragment.  A repeated identical dataset query (same fragments,
+same predicate fingerprint) then skips the fragment scan entirely: no
+open, no fetch, no decode.
+
+Keys are ``(dataset root, manifest generation, fragment path,
+predicate fingerprint)``:
+
+  * **generation** is the manifest generation the value was computed
+    under.  Every manifest swap (append, compaction) bumps the
+    generation and ``Dataset.save()`` calls
+    :func:`invalidate_dataset`, evicting every entry of that root whose
+    generation is stale — conservative (an append keeps old fragment
+    files byte-identical) but unconditionally safe, and it makes the
+    invalidation contract one sentence: *a cached result never outlives
+    the manifest it was computed under*.  A crashed compaction never
+    reaches ``save()``, so current-generation entries stay valid
+    (pinned in tests/test_tenancy.py mirroring tests/test_faults.py).
+  * **fingerprint** is the caller's digest of everything else that
+    shapes the partial: the query's predicate + consume function
+    identity (q6/q12 pass a constant per query form).  Callers that
+    cannot fingerprint their consume must not pass a cache.
+
+The cache is opt-in per call (``run_dataset_scan(result_cache=...,
+fingerprint=...)``); the serving front end (serve/engine.py) owns one
+per process.  Thread-safe; entry-capped LRU.
+"""
+
+from __future__ import annotations
+
+import threading
+import weakref
+from collections import OrderedDict
+
+from ..core import trace
+
+#: sentinel distinguishing "no entry" from a cached ``None`` partial
+MISS = object()
+
+#: every live cache, for process-wide invalidation and cold-ladder clears
+_ALL_CACHES: "weakref.WeakSet[FragmentResultCache]" = weakref.WeakSet()
+
+
+class FragmentResultCache:
+    """Entry-capped LRU of per-fragment partial accumulators."""
+
+    def __init__(self, max_entries: int = 1024):
+        self.max_entries = max(1, int(max_entries))
+        self._lock = threading.Lock()
+        self._entries: OrderedDict[tuple, object] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.invalidated = 0
+        _ALL_CACHES.add(self)
+
+    @staticmethod
+    def _key(root: str, generation: int, fragment_path: str,
+             fingerprint: str) -> tuple:
+        return (root, int(generation), fragment_path, fingerprint)
+
+    def get(self, root: str, generation: int, fragment_path: str,
+            fingerprint: str):
+        """The cached partial, or :data:`MISS`."""
+        key = self._key(root, generation, fragment_path, fingerprint)
+        with self._lock:
+            if key in self._entries:
+                self._entries.move_to_end(key)
+                self.hits += 1
+                trace.registry().counter_inc("result_cache.hits")
+                tr = trace.active()
+                if tr is not None:
+                    tr.instant("result_cache_hit", "io",
+                               fragment=fragment_path)
+                return self._entries[key]
+            self.misses += 1
+            trace.registry().counter_inc("result_cache.misses")
+            return MISS
+
+    def put(self, root: str, generation: int, fragment_path: str,
+            fingerprint: str, value) -> None:
+        key = self._key(root, generation, fragment_path, fingerprint)
+        with self._lock:
+            self._entries[key] = value
+            self._entries.move_to_end(key)
+            while len(self._entries) > self.max_entries:
+                self._entries.popitem(last=False)
+                self.evictions += 1
+                trace.registry().counter_inc("result_cache.evictions")
+
+    def invalidate(self, root: str, current_generation: int) -> int:
+        """Evict every entry of ``root`` whose generation is not
+        ``current_generation`` (the manifest-swap contract); returns the
+        eviction count."""
+        with self._lock:
+            stale = [k for k in self._entries
+                     if k[0] == root and k[1] != int(current_generation)]
+            for k in stale:
+                del self._entries[k]
+            self.invalidated += len(stale)
+            if stale:
+                trace.registry().counter_inc("result_cache.invalidated",
+                                             len(stale))
+            return len(stale)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+
+def invalidate_dataset(root: str, current_generation: int) -> int:
+    """Manifest-swap hook (``Dataset.save()``): evict stale-generation
+    entries of ``root`` from every live cache."""
+    n = 0
+    for cache in list(_ALL_CACHES):
+        n += cache.invalidate(root, current_generation)
+    return n
+
+
+def clear_all_result_caches() -> None:
+    """Cold-scan-ladder hook: empty every live cache."""
+    for cache in list(_ALL_CACHES):
+        cache.clear()

@@ -50,16 +50,23 @@ def test_paper_pipeline_end_to_end(tmp_path):
     # exists to show.  Cache/pipeline behavior is covered by
     # tests/test_pipeline.py.
     from repro.core.compression import chunk_decompress_memo
+    from repro.core.scheduler import clear_delivered_windows
+    from repro.dataset.result_cache import clear_all_result_caches
     from repro.kernels.dict_decode import dict_cache_clear
     results = {name: 0.0 for name in paths}
     for _ in range(4):
         for name, path in paths.items():
             chunk_decompress_memo().clear()
             dict_cache_clear()
+            clear_delivered_windows()       # delivered-result window and
+            clear_all_result_caches()       # fragment result cache: a hit
+            # in either would skip the very fetch+decode being laddered
             sc = open_scanner(path, columns=Q6_COLUMNS, backend="sim",
                               n_lanes=4, decode_backend="host")
             rev, report = q6(sc, prune=False, decode_workers=0)
             assert abs(rev - ref) / max(1.0, abs(ref)) < 1e-5, name
+            # cold arm really refetched (no cache served this round)
+            assert sc.storage.stats.requests > 0, name
             results[name] = max(results[name],
                                 report.effective_bandwidth())
     # Wall time on this CPU-only container is decode-dominated, and with

@@ -426,6 +426,94 @@ def test_trace_report_on_real_export(tab_file, tmp_path):
         assert json.load(f)["displayTimeUnit"] == "ms"
 
 
+# -- multi-tenant attribution (DESIGN.md §11) --------------------------------
+
+def _tenant_doc():
+    """gold fetches 0-20ms and decodes 20-60ms (one window hit); the
+    shared ``-`` tenant consumes 60-90ms."""
+    tr = trace.Tracer()
+    e = tr.epoch
+    tr.complete("scan", "scan", e, e + 0.100, scan="s", tenant="gold")
+    tr.complete("fetch", "io", e, e + 0.020, scan="s", rg=0,
+                io_dt=0.02, tenant="gold")
+    tr.complete("decode", "decode", e + 0.020, e + 0.060, scan="s",
+                rg=0, tenant="gold")
+    tr.instant("window_hit", "io", scan="s", rg=1, tenant="gold")
+    tr.complete("consume", "consume", e + 0.060, e + 0.090, scan="s",
+                rg=0, logical_bytes=1)
+    return tr.to_chrome()
+
+
+def test_trace_report_per_tenant_breakdown():
+    rep = trace_report.build_report(_tenant_doc())
+    per = rep["per_tenant"]
+    assert set(per) == {"gold", "-"}
+    gold = per["gold"]
+    assert gold["fetch"] == pytest.approx(20_000.0, rel=1e-6)
+    assert gold["decode"] == pytest.approx(40_000.0, rel=1e-6)
+    assert gold["busy_us"] == pytest.approx(60_000.0, rel=1e-6)
+    assert gold["spans"] == 2          # the structural scan span is not
+    assert gold["window_hits"] == 1    # a bucketed work span
+    shared = per["-"]
+    assert shared["consume"] == pytest.approx(30_000.0, rel=1e-6)
+    assert shared["busy_us"] == pytest.approx(30_000.0, rel=1e-6)
+    assert shared["window_hits"] == 0
+    text = trace_report.format_report(rep)
+    assert "tenant gold" in text
+    assert "1 window hits" in text
+
+
+def test_trace_report_per_tenant_absent_without_tenants():
+    rep = trace_report.build_report(_synthetic_doc())
+    # untagged runs collapse onto the shared tenant and the human
+    # report omits the breakdown entirely
+    assert set(rep["per_tenant"]) <= {"-"}
+    assert "tenant" not in trace_report.format_report(rep)
+
+
+def test_tenant_tagged_spans_and_depth_gauge_live(tab_file):
+    from repro.core.scheduler import ScanService
+    tr = trace.enable()
+    svc = ScanService(workers=2)
+    svc.register_tenant("gold", weight=4, max_active=2)
+    try:
+        sc = open_scanner(tab_file, columns=["v"], decode_backend="host")
+        _, rep = run_overlapped(sc, _sum_consume, decode_workers=2,
+                                service=svc, tenant="gold")
+    finally:
+        svc.shutdown()
+    fetches = _spans(tr, "fetch")
+    assert fetches and all(e.args.get("tenant") == "gold"
+                           for e in fetches)
+    (scan_span,) = _spans(tr, "scan")
+    assert scan_span.args["tenant"] == "gold"
+    # the queue-depth gauge exists and reads 0 once the scan released
+    # its admission slot
+    gauges = trace.registry().snapshot()["gauges"]
+    assert gauges.get("scheduler.tenant_depth.gold") == 0
+    per = trace_report.build_report(tr.to_chrome())["per_tenant"]
+    assert per["gold"]["spans"] > 0
+    assert per["gold"]["busy_us"] > 0
+    assert rep.metrics.trace_events > 0
+
+
+def test_result_cache_hit_instant_and_counter(tmp_path):
+    from repro.dataset.result_cache import MISS, FragmentResultCache
+    tr = trace.enable()
+    before = trace.registry().snapshot()["counters"]
+    cache = FragmentResultCache()
+    cache.put("root", 0, "f0", "fp", 1.5)
+    assert cache.get("root", 0, "f0", "fp") == 1.5
+    assert cache.get("root", 0, "f1", "fp") is MISS
+    after = trace.registry().snapshot()["counters"]
+    assert after.get("result_cache.hits", 0) \
+        - before.get("result_cache.hits", 0) == 1
+    assert after.get("result_cache.misses", 0) \
+        - before.get("result_cache.misses", 0) == 1
+    hits = [e for e in tr.events() if e.name == "result_cache_hit"]
+    assert len(hits) == 1 and hits[0].args["fragment"] == "f0"
+
+
 # -- dataset layer -----------------------------------------------------------
 
 def test_dataset_scan_trace_kwarg(tmp_path):

@@ -34,9 +34,13 @@ import time
 
 def _clear_decoded_caches():
     from repro.core.compression import chunk_decompress_memo
+    from repro.core.scheduler import clear_delivered_windows
+    from repro.dataset.result_cache import clear_all_result_caches
     from repro.kernels.dict_decode import dict_cache_clear
     chunk_decompress_memo().clear()
     dict_cache_clear()
+    clear_delivered_windows()
+    clear_all_result_caches()
 
 
 def _fault_plan(seed: int):
@@ -185,6 +189,72 @@ def main() -> int:
         print(f"[chaos] fused q6/q12/dataset bit-identical under seeded "
               f"faults (retries={fused_retries}, crc_failures={crc_hits}, "
               f"quarantined={repdf.fragments_quarantined})")
+
+        # -- multi-tenant leg (§11): faults neither starve nor poison --
+        # A bronze tenant's transiently faulted scan shares a windowed
+        # ScanService with a gold tenant's repeats.  Gold's repeat must
+        # be served bit-identically (the delivered-result window keeps
+        # working — no starvation by the faulted sibling), bronze must
+        # heal bit-identically, and the faulted scan must never publish
+        # into the window (fault-injection scans are excluded from the
+        # share identity; retried row groups never re-register either).
+        import threading as _threading
+
+        from repro.core.scheduler import ScanService
+
+        _clear_decoded_caches()
+        tsvc = ScanService(workers=2, window_bytes=64 << 20)
+        try:
+            tsvc.register_tenant("gold", weight=4)
+            tsvc.register_tenant("bronze", weight=1)
+            g1, _ = q6(open_l(), overlapped=True, decode_workers=2,
+                       service=tsvc, tenant="gold")
+            entries_before = tsvc.window_entries
+            tenant_out: dict[str, tuple] = {}
+
+            def _bronze_leg():
+                tenant_out["bronze"] = q6(
+                    open_l(_fault_plan(args.seed + 9)), overlapped=True,
+                    decode_workers=2, service=tsvc, tenant="bronze")
+
+            bt = _threading.Thread(target=_bronze_leg, daemon=True)
+            bt.start()
+            g2, grep2 = q6(open_l(), overlapped=True, decode_workers=2,
+                           service=tsvc, tenant="gold")
+            bt.join(timeout=120)
+            if "bronze" not in tenant_out:
+                failures.append("tenant leg: bronze's faulted scan never "
+                                "finished (starved or wedged)")
+                b_acc, b_rep = None, None
+            else:
+                b_acc, b_rep = tenant_out["bronze"]
+            if g2 != g1:
+                failures.append(f"tenant leg: gold repeat diverged beside "
+                                f"a faulted sibling: {g2!r} != {g1!r}")
+            if g1 != q6_clean:
+                failures.append(f"tenant leg: gold diverged from clean: "
+                                f"{g1!r} != {q6_clean!r}")
+            if b_acc is not None and b_acc != q6_clean:
+                failures.append(f"tenant leg: bronze under chaos "
+                                f"diverged: {b_acc!r} != {q6_clean!r}")
+            if b_rep is not None and b_rep.metrics.retries <= 0:
+                failures.append("tenant leg: bronze recovered nothing "
+                                "(retries == 0)")
+            if tsvc.window_hits <= 0:
+                failures.append("tenant leg: gold repeat never hit the "
+                                "delivered-result window")
+            if tsvc.window_entries > entries_before:
+                failures.append(f"tenant leg: the faulted scan grew the "
+                                f"window ({entries_before} -> "
+                                f"{tsvc.window_entries} entries) — "
+                                f"poisoning channel open")
+            print(f"[chaos] tenant leg: gold window-served "
+                  f"(hits={tsvc.window_hits}) beside bronze chaos "
+                  f"(retries="
+                  f"{b_rep.metrics.retries if b_rep else 'n/a'}), "
+                  f"no window poisoning")
+        finally:
+            tsvc.shutdown()
 
         # -- distributed leg (§8): one device's shard faults, heals ----
         # Shard 0's fragments (the same fragments whatever the device

@@ -56,7 +56,17 @@ INFO_KEYS = ("retries", "checksum_failures", "timeouts",
              # work-stealing counts — informational, never gated
              "prefetch_hits", "prefetch_misses", "io_p50_us", "io_p95_us",
              "stolen_fragments", "bytes_object", "bytes_sim", "bytes_real",
-             "hidden_pct")
+             "hidden_pct",
+             # multi-tenant front end (DESIGN.md §11): per-class latency
+             # percentiles, delivered-window / result-cache hit counters,
+             # the concurrent arm's timing-dependent fetch count, and the
+             # window-repeat row's first-run fetch count — informational,
+             # never gated (the deterministic ``io_requests=`` on the
+             # companion sequential rows carries the gate)
+             "io_fetched", "shared_rgs", "window_hits", "io_first",
+             "result_cache_hits",
+             "gold_p50_us", "gold_p95_us", "gold_p99_us",
+             "bronze_p50_us", "bronze_p95_us", "bronze_p99_us")
 
 
 def parse_csv(path: str) -> "dict[str, tuple]":

@@ -17,7 +17,10 @@ timeline can't: *which stage bounds this scan?*  Three views:
              breakdown, per-row-group critical-path chains
              (fetch → decode items → consume), an effective-bandwidth
              breakdown (stored bytes fetched, logical bytes consumed),
-             and the named bottleneck stage — the largest bucket.
+             a per-tenant wall attribution (DESIGN.md §11 — spans the
+             scheduler tagged with ``args.tenant``; untagged work is
+             charged to the shared ``-`` tenant), and the named
+             bottleneck stage — the largest bucket.
 
 Usage:
     python tools/trace_report.py TRACE.json [--json]
@@ -215,6 +218,45 @@ def bandwidth(doc: dict) -> dict:
             "effective_bw_mbps": logical / wall_s / 1e6}
 
 
+def tenant_attribution(doc: dict) -> dict:
+    """Per-tenant wall attribution (DESIGN.md §11).
+
+    Every bucketed complete event is charged to the tenant named in its
+    ``args`` — the scheduler tags fetch and decode-item spans with the
+    owning tenant — and untagged work rides the shared ``-`` tenant,
+    mirroring the weight-1 virtual tenant in the scheduler itself.
+    Values are summed span-time µs, *not* exclusive wall: concurrent
+    tenants overlap, so per-tenant ``busy_us`` can add up to more than
+    the run wall.  ``window_hit`` instants are counted per tenant too —
+    row groups a tenant received from the delivered-result window
+    instead of fetching.
+    """
+    out: dict[str, dict] = {}
+
+    def entry(ten: str) -> dict:
+        t = out.get(ten)
+        if t is None:
+            t = {b: 0.0 for b in PRIORITY}
+            t.update(busy_us=0.0, spans=0, window_hits=0)
+            out[ten] = t
+        return t
+
+    for e in _x_events(doc):
+        b = BUCKET_OF.get(e["name"])
+        if b is None:
+            continue
+        t = entry(str((e.get("args") or {}).get("tenant", "-")))
+        t[b] += float(e["dur"])
+        t["busy_us"] += float(e["dur"])
+        t["spans"] += 1
+    for e in doc.get("traceEvents", []):
+        if isinstance(e, dict) and e.get("ph") == "i" \
+                and e.get("name") == "window_hit":
+            entry(str((e.get("args") or {})
+                      .get("tenant", "-")))["window_hits"] += 1
+    return dict(sorted(out.items()))
+
+
 def build_report(doc: dict) -> dict:
     """The full machine-readable report for one trace document."""
     buckets = attribute_buckets(doc)
@@ -233,6 +275,7 @@ def build_report(doc: dict) -> dict:
         "bottleneck": bottleneck,
         "bandwidth": bandwidth(doc),
         "critical_path": critical_path(doc),
+        "per_tenant": tenant_attribution(doc),
         "event_counts": dict(sorted(counts.items())),
         "n_events": len(events),
         "dropped": other.get("dropped", 0),
@@ -254,6 +297,17 @@ def format_report(rep: dict) -> str:
                  f"({bw['stored_bytes']} B), effective "
                  f"{bw['effective_bw_mbps']:.1f} MB/s "
                  f"({bw['logical_bytes']} B)")
+    tenants = rep.get("per_tenant", {})
+    if any(name != "-" for name in tenants):
+        total_busy = max(1e-12, sum(t["busy_us"] for t in tenants.values()))
+        for name, t in tenants.items():
+            lines.append(
+                f"  tenant {name:<8} {t['busy_us'] / 1e3:9.3f} ms busy "
+                f"{100.0 * t['busy_us'] / total_busy:5.1f}%  "
+                f"(fetch {t['fetch'] / 1e3:.3f} / decode "
+                f"{(t['decompress'] + t['decode']) / 1e3:.3f} / consume "
+                f"{t['consume'] / 1e3:.3f}, {t['spans']} spans, "
+                f"{t['window_hits']} window hits)")
     longest = rep["critical_path"]["longest"]
     if longest:
         lines.append(f"critical path: scan={longest['scan']} "
